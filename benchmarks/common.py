@@ -1,0 +1,19 @@
+"""Shared helpers for the per-table benchmarks."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeat: int = 3, **kw):
+    """Returns (result, us_per_call)."""
+    fn(*args, **kw)                    # warmup / trace
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

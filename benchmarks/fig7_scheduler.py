@@ -1,0 +1,27 @@
+"""Fig 7: cluster scheduler simulation — four metrics as a function of
+alpha, for NoRule / ML predictions / oracle / criticality-only."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.sim.scheduler_sim import fig7_sweep
+
+
+def run(days: float = 30.0, seed: int = 0,
+        alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0)):
+    out, us = timed(lambda: fig7_sweep(alphas=alphas, days=days,
+                                       seed=seed), repeat=1)
+    for key, m in out.items():
+        emit(f"fig7/{key}", us / len(out),
+             f"fail={m.failure_rate:.4f} empty={m.empty_server_ratio:.3f}"
+             f" chassis_std={m.chassis_score_std:.4f}"
+             f" server_std={m.server_score_std:.4f}")
+    best = min((k for k in out if k.startswith("ml")),
+               key=lambda k: out[k].chassis_score_std
+               + out[k].server_score_std)
+    emit("fig7/best_alpha", 0.0,
+         f"{best} (paper: alpha=0.8 best compromise)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

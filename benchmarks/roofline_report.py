@@ -1,0 +1,55 @@
+"""Roofline report (deliverable g): per (arch x shape x mesh) terms from
+the dry-run artifacts. Single-pod (256 chips) is the roofline table per
+the assignment; multi-pod artifacts prove the pod axis shards."""
+from __future__ import annotations
+
+import os
+
+from benchmarks.common import emit
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.launch.dryrun import ARTIFACT_DIR
+from repro.launch.roofline import load_artifacts, roofline_row
+
+
+def run(artifact_dir: str = None, multi_pod: bool = False):
+    art = artifact_dir or ARTIFACT_DIR
+    if not os.path.isdir(art):
+        emit("roofline/missing", 0.0,
+             "run `python -m repro.launch.dryrun` first")
+        return []
+    rows = []
+    chips = 512 if multi_pod else 256
+    want_pod = multi_pod
+    for rec in load_artifacts(art):
+        if rec.get("multi_pod") != want_pod:
+            continue
+        if rec["status"] != "ok":
+            if rec["status"] == "skipped":
+                emit(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                     f"SKIP {rec['reason'][:60]}")
+            continue
+        cfg = ARCHS[rec["arch"]]
+        shape = SHAPES[rec["shape"]]
+        # prefer trip-corrected collective bytes recorded by the dry-run
+        coll = rec.get("collectives_trip_corrected",
+                       {}).get("total") or \
+            rec["collectives"]["total_bytes"]
+        rec2 = dict(rec)
+        rec2["collectives"] = {"total_bytes": coll}
+        row = roofline_row(rec2, cfg, shape, chips=chips)
+        rows.append(row)
+        emit(f"roofline/{rec['arch']}/{rec['shape']}",
+             row["t_compute_s"] * 1e6,
+             f"t_comp={row['t_compute_s']:.4f}s "
+             f"t_mem={row['t_memory_s']:.4f}s "
+             f"t_coll={row['t_collective_s']:.4f}s "
+             f"dom={row['dominant']} "
+             f"roofline={row['roofline_overlapped']:.2f} "
+             f"useful={row['useful_ratio']:.2f} "
+             f"mem/dev={(rec['memory']['argument_bytes'] or 0 + (rec['memory']['temp_bytes'] or 0)) / 2**30:.1f}GiB")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

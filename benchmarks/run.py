@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run             # all
+  PYTHONPATH=src python -m benchmarks.run table4 fig7 # subset
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    want = set(sys.argv[1:])
+
+    def on(name):
+        return not want or any(w in name for w in want)
+
+    print("name,us_per_call,derived")
+    if on("table2"):
+        from benchmarks.table2_criticality import run
+        run()
+    if on("fig3"):
+        from benchmarks.fig3_scatter import run
+        run()
+    if on("table3"):
+        from benchmarks.table3_models import run
+        run()
+    if on("fig4") or on("fig5"):
+        from benchmarks.fig4_5_server_capping import run
+        run()
+    if on("fig6"):
+        from benchmarks.fig6_chassis import run
+        run()
+    if on("fig7"):
+        from benchmarks.fig7_scheduler import run
+        run()
+    if on("table4"):
+        from benchmarks.table4_oversubscription import run
+        run()
+    if on("roofline"):
+        from benchmarks.roofline_report import run
+        run()
+
+
+if __name__ == '__main__':
+    main()

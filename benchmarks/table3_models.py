@@ -1,0 +1,55 @@
+"""Table III: RF vs GB criticality + two-stage P95 models — percent
+high-confidence, per-bucket recall/precision, accuracy."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import features as F
+from repro.core.criticality import classify
+from repro.core.predictor import table3_metrics, train_service
+from repro.kernels.forest.ops import forest_predict
+from repro.sim.telemetry import generate_population
+
+PAPER = {"rf": {"crit_acc": 0.98, "p95_acc": 0.84, "p95_hi": 0.73},
+         "gb": {"crit_acc": 0.98, "p95_acc": 0.82, "p95_hi": 0.68}}
+
+
+def run(n_vms: int = 4000, seed: int = 2):
+    pop = generate_population(n_vms, seed=seed)
+    hist, arr = F.split_history_arrivals(pop)
+    hist_labels = np.asarray(classify(jnp.asarray(hist.series)))
+    aggs = F.subscription_aggregates(hist, hist_labels)
+    x = F.build_features(arr, aggs)
+    y_uf = np.asarray(classify(jnp.asarray(arr.series))).astype(np.int64)
+    y_p95 = F.p95_bucket(np.array([v.p95_util for v in arr.vms]))
+    n = len(y_uf)
+    tr, te = slice(0, int(0.7 * n)), slice(int(0.7 * n), n)
+
+    out = {}
+    for model in ("rf", "gb"):
+        svc, us_train = timed(
+            lambda m=model: train_service(x[tr], y_uf[tr], y_p95[tr],
+                                          model=m, n_trees=48), repeat=1)
+        m = table3_metrics(svc, x[te], y_uf[te], y_p95[te])
+        out[model] = m
+        c, p = m["criticality"], m["p95"]
+        emit(f"table3/{model}/criticality", us_train,
+             f"hi%={c['pct_high_conf']:.2f} acc={c['accuracy_high_conf']:.3f} "
+             f"uf_recall={c['buckets'].get(1, {}).get('recall', 0):.2f} "
+             f"paper_acc={PAPER[model]['crit_acc']}")
+        emit(f"table3/{model}/p95", us_train,
+             f"hi%={p['pct_high_conf']:.2f} acc={p['accuracy_high_conf']:.3f} "
+             f"paper_acc={PAPER[model]['p95_acc']} "
+             f"paper_hi%={PAPER[model]['p95_hi']}")
+        # serve a prediction batch through the Pallas forest kernel
+        _, us_pred = timed(lambda s=svc: np.asarray(
+            forest_predict(s.criticality, x[te])))
+        emit(f"table3/{model}/kernel_inference", us_pred,
+             f"batch={te.stop - te.start}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

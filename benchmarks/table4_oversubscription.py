@@ -1,0 +1,51 @@
+"""Table IV: oversubscription % and $-savings for the eight provisioning
+approaches (1440 chassis x 3 months of telemetry, 128 MW campus,
+$10/W)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core.oversubscription import FleetProfile, scenario_table
+from repro.core.power_model import ServerPowerModel
+from repro.sim.telemetry import generate_chassis_telemetry
+
+PAPER = {"traditional": (0.0, 0.0),
+         "state_of_the_art": (6.2, 79.4),
+         "predictions_all_no_uf_impact": (11.0, 140.8),
+         "predictions_all_minimal_uf_impact": (12.1, 154.9),
+         "predictions_internal_no_uf_impact": (8.4, 107.5),
+         "predictions_internal_minimal_uf_impact": (10.3, 131.8),
+         "predictions_internal_non_premium_no_uf_impact": (10.6, 135.7),
+         "predictions_internal_non_premium_minimal_uf_impact":
+             (12.1, 154.9)}
+
+PROVISIONED_W = 12 * 310.0          # 12 blades at SPECpower-style peak
+
+
+def run(n_chassis: int = 1440, n_days: int = 90, seed: int = 0):
+    draws, us_gen = timed(lambda: generate_chassis_telemetry(
+        n_chassis, n_days, PROVISIONED_W, seed), repeat=1)
+    fleet = FleetProfile(beta=0.40, util_uf=0.65, util_nuf=0.44,
+                         allocated_frac=0.85, servers_per_chassis=12,
+                         model=ServerPowerModel())
+    rows, us = timed(lambda: scenario_table(
+        draws, PROVISIONED_W, fleet, beta_internal_only=0.54,
+        beta_non_premium=0.4225), repeat=1)
+    for k, r in rows.items():
+        paper_delta, paper_m = PAPER.get(k, (None, None))
+        emit(f"table4/{k}", us / len(rows),
+             f"delta={100 * r.oversubscription:.2f}% "
+             f"savings=${r.savings_usd() / 1e6:.1f}M "
+             f"paper={paper_delta}%/${paper_m}M "
+             f"ufr={r.uf_event_rate:.5f} nufr={r.nuf_event_rate:.5f}")
+    sota = rows["state_of_the_art"].oversubscription
+    ours = rows["predictions_all_minimal_uf_impact"].oversubscription
+    emit("table4/headline", 0.0,
+         f"oversubscription_increase=x{ours / max(sota, 1e-9):.2f} "
+         f"(paper: ~2x, 6.2% -> 12.1%)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,10 @@
+"""phi4-mini-3.8b [arXiv:2412.08905; hf] — dense, RoPE SwiGLU GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab_size=200064, head_dim=128,
+    mlp="swiglu", rope_theta=1e4,
+    source="arXiv:2412.08905; hf",
+)

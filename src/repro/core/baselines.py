@@ -1,0 +1,86 @@
+"""Periodicity-detection baselines the paper compares against (Table II).
+
+FFT: [Cortez et al., SOSP'17] assume a workload is user-facing if the FFT
+indicates a 24-hour period. ACF: autocorrelation at the 24-hour lag.
+
+Per the paper's methodology, both baselines get the *same* preprocessing
+(de-trend + normalize) and the same machine-generated disambiguation
+(compare the 24h signal against the 8h/12h harmonics). Each returns a
+continuous "user-facing-ness" score so the Table II benchmark can sweep a
+threshold to a recall target and report the achieved precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timeseries as ts
+from repro.core.criticality import PERIOD_12H, PERIOD_24H, PERIOD_8H
+
+_EPS = 1e-9
+
+
+@jax.jit
+def fft_score(series: jnp.ndarray) -> jnp.ndarray:
+    """Higher = more user-facing. (B, T) -> (B,).
+
+    Power at the 24h frequency relative to (24h + its 8h/12h competitors
+    + broadband residual). T must be a multiple of 48.
+    """
+    x = ts.preprocess(series)
+    x = x - jnp.mean(x, axis=-1, keepdims=True)
+    t = x.shape[-1]
+    spec = jnp.abs(jnp.fft.rfft(x, axis=-1)) ** 2            # (B, T//2+1)
+    k24 = t // PERIOD_24H        # cycles of the 24h period in the window
+    k12 = t // PERIOD_12H
+    k8 = t // PERIOD_8H
+    p24 = spec[..., k24]
+    p12 = spec[..., k12]
+    p8 = spec[..., k8]
+    total = jnp.sum(spec[..., 1:], axis=-1)
+    # 24h share of total energy, discounted by short-period harmonics
+    # (machine-generated disambiguation).
+    return (p24 - jnp.maximum(p12, p8)) / jnp.maximum(total, _EPS)
+
+
+def _acf_at(x: jnp.ndarray, lag: int) -> jnp.ndarray:
+    a = x[..., :-lag]
+    b = x[..., lag:]
+    a = a - jnp.mean(a, axis=-1, keepdims=True)
+    b = b - jnp.mean(b, axis=-1, keepdims=True)
+    num = jnp.sum(a * b, axis=-1)
+    den = jnp.sqrt(jnp.sum(a * a, axis=-1) * jnp.sum(b * b, axis=-1))
+    return num / jnp.maximum(den, _EPS)
+
+
+@jax.jit
+def acf_score(series: jnp.ndarray) -> jnp.ndarray:
+    """Higher = more user-facing. Autocorrelation at the 24h lag minus the
+    stronger of the 8h/12h lags (same disambiguation as fft_score)."""
+    x = ts.preprocess(series)
+    r24 = _acf_at(x, PERIOD_24H)
+    r12 = _acf_at(x, PERIOD_12H)
+    r8 = _acf_at(x, PERIOD_8H)
+    return r24 - jnp.maximum(r12, r8)
+
+
+def precision_at_recall(scores, labels, recall_target: float):
+    """Sweep a threshold on `scores` (higher = predicted UF) to reach
+    `recall_target` on the true-UF class; return (precision, recall,
+    threshold). numpy-side helper used by Table II."""
+    import numpy as np
+
+    scores = np.asarray(scores, dtype=np.float64)
+    labels = np.asarray(labels, dtype=bool)
+    order = np.argsort(-scores)               # descending score
+    sorted_labels = labels[order]
+    tp = np.cumsum(sorted_labels)
+    fp = np.cumsum(~sorted_labels)
+    n_pos = max(int(labels.sum()), 1)
+    recall = tp / n_pos
+    precision = tp / np.maximum(tp + fp, 1)
+    ok = np.nonzero(recall >= recall_target)[0]
+    if len(ok) == 0:
+        return 0.0, float(recall[-1]), float(scores[order][-1])
+    i = ok[0]
+    return float(precision[i]), float(recall[i]), float(scores[order][i])

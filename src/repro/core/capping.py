@@ -1,0 +1,176 @@
+"""Per-VM power capping controller + full-server RAPL model (paper §III-D).
+
+The hybrid design, faithful to the paper:
+
+  * the chassis manager polls PSUs every 200 ms and alerts the in-band
+    per-VM controller when chassis draw crosses a threshold *just below*
+    the chassis budget (we use budget - ALERT_MARGIN_W, matching the
+    paper's 225 W target for a 230 W cap);
+  * on alert, the controller immediately drops every low-priority
+    (non-user-facing) core to the minimum p-state (f_max/2);
+  * it then runs a feedback loop: each iteration reads the server power
+    meter and raises N = 4 low-priority cores to the next higher p-state
+    while power stays below the target, or lowers them if above;
+  * the cap is lifted LIFT_AFTER_S = 30 s after the alert clears;
+  * out-of-band backup: if power still exceeds the *server* budget (PSU
+    alert -> BMC), RAPL throttles ALL cores equally (user-facing
+    included) until under — "protection from overdraw must take
+    precedence over performance loss". RAPL converges within ~2 s.
+
+The controller is a pure state-transition function over fixed-shape
+arrays, so the chassis simulator can scan it over time; a jnp twin
+(`repro.runtime.power_control`) drives the training-loop integration.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.power_model import (F_MAX, F_MIN, N_PSTATES,
+                                    ServerPowerModel, pstate_frequencies)
+
+POLL_INTERVAL_S = 0.2       # 200 ms PSU polling
+ALERT_MARGIN_W = 5.0        # controller target sits 5 W under the cap
+LIFT_AFTER_S = 30.0         # cap lifted 30 s after alert clears
+N_RAISE = 4                 # cores stepped up per feedback iteration
+RAPL_STEP_FRAC = 0.05       # RAPL lowers all-core frequency 5 %/poll
+                            # (reaches f_min from f_max within 2 s)
+RAISE_HEADROOM_W = 2.0      # feedback-raise safety margin below target
+PSU_TRIP_MARGIN_W = 2.0     # PSU averaging window: sub-poll transients
+                            # this small do not trip the out-of-band path
+
+
+@dataclass
+class ServerCapState:
+    """Mutable controller state for one server."""
+    n_cores: int
+    uf_mask: np.ndarray                       # (n_cores,) True = high-prio
+    freq: np.ndarray = field(default=None)    # (n_cores,) current frequency
+    pstate: np.ndarray = field(default=None)  # (n_cores,) index into table
+    capping: bool = False
+    rapl_active: bool = False
+    clear_since_s: float = np.inf             # time since alert cleared
+
+    def __post_init__(self):
+        if self.freq is None:
+            self.freq = np.full(self.n_cores, F_MAX)
+        if self.pstate is None:
+            self.pstate = np.zeros(self.n_cores, dtype=np.int64)
+
+
+class PerVMController:
+    """In-band controller for one server (paper Fig. 2 steps 4-5)."""
+
+    def __init__(self, model: ServerPowerModel, server_budget_w: float):
+        self.model = model
+        self.budget = server_budget_w
+        self.target = server_budget_w - ALERT_MARGIN_W
+        self.freq_table = pstate_frequencies(N_PSTATES)  # descending
+        self.min_pstate = N_PSTATES - 1
+
+    def step(self, st: ServerCapState, util: np.ndarray, alert: bool,
+             dt: float = POLL_INTERVAL_S) -> float:
+        """One 200 ms control step. `util` = per-core utilization (0-1),
+        `alert` = chassis-manager alert. Returns the server power draw
+        AFTER the control action (what the next poll would read)."""
+        power = self.model.power(util, st.freq)
+        low = ~st.uf_mask
+        if alert and power > self.target and not st.capping:
+            # Immediate drop of all low-priority cores to min p-state.
+            st.capping = True
+            st.clear_since_s = 0.0
+            st.pstate[low] = self.min_pstate
+        elif st.capping:
+            if alert or power > self.target:
+                st.clear_since_s = 0.0
+            else:
+                st.clear_since_s += dt
+            if st.clear_since_s >= LIFT_AFTER_S:
+                # lift the cap: all cores back to maximum performance
+                st.capping = False
+                st.rapl_active = False
+                st.pstate[:] = 0
+            elif power > self.target:
+                self._lower(st, low)
+            else:
+                self._raise_if_headroom(st, low, util)
+        if st.rapl_active:
+            # respect RAPL's out-of-band reductions while they persist
+            st.freq = np.minimum(self.freq_table[st.pstate], st.freq)
+        else:
+            st.freq = self.freq_table[st.pstate]
+        return float(self.model.power(util, st.freq))
+
+    def _lower(self, st, low):
+        """Lower the N lowest-frequency... highest-frequency low-priority
+        cores one p-state (fastest power shed without touching UF)."""
+        idx = np.nonzero(low & (st.pstate < self.min_pstate))[0]
+        if len(idx) == 0:
+            return
+        order = np.argsort(st.pstate[idx])       # highest-freq cores first
+        sel = idx[order[:N_RAISE]]
+        st.pstate[sel] += 1
+
+    def _raise_if_headroom(self, st, low, util):
+        """Feedback recovery: raise N low-priority cores to the next
+        higher p-state, but only if the predicted power stays below the
+        target ('selects the highest frequency that keeps the power below
+        this threshold')."""
+        idx = np.nonzero(low & (st.pstate > 0))[0]
+        if len(idx) == 0:
+            return
+        order = np.argsort(-st.pstate[idx])      # lowest-freq cores first
+        sel = idx[order[:N_RAISE]]
+        trial = st.pstate.copy()
+        trial[sel] -= 1
+        trial_power = self.model.power(util, self.freq_table[trial])
+        # small safety margin so inter-poll load spikes rarely push the
+        # draw over the hard budget (which would trip the PSU->BMC path)
+        if trial_power < self.target - RAISE_HEADROOM_W:
+            st.pstate = trial
+
+
+class RaplController:
+    """Out-of-band full-server capping (existing mechanism, and the
+    backup when per-VM capping is insufficient). Throttles the whole
+    socket — all cores equally (paper §II-B)."""
+
+    def __init__(self, model: ServerPowerModel, server_budget_w: float):
+        self.model = model
+        self.budget = server_budget_w
+
+    def step(self, st: ServerCapState, util: np.ndarray,
+             dt: float = POLL_INTERVAL_S) -> float:
+        power = self.model.power(util, st.freq)
+        table = pstate_frequencies(N_PSTATES)
+        intended = table[st.pstate]         # in-band controller's setting
+        if power > self.budget:
+            st.rapl_active = True
+            uniform = max(st.freq.max() - RAPL_STEP_FRAC * F_MAX, F_MIN)
+            st.freq = np.minimum(st.freq, uniform)
+        elif st.rapl_active:
+            if power < self.budget - 2 * ALERT_MARGIN_W:
+                # RAPL's feedback loop restores frequency gradually,
+                # handing control back to the in-band setting
+                st.freq = np.minimum(st.freq + RAPL_STEP_FRAC * F_MAX,
+                                     intended)
+            if np.all(st.freq >= intended - 1e-9):
+                st.rapl_active = False
+        return float(self.model.power(util, st.freq))
+
+
+@dataclass(frozen=True)
+class ChassisManager:
+    """Polls PSUs and raises alerts (paper Fig. 2 step 4). The alert
+    threshold sits just below the chassis budget so the in-band
+    controller can act before the PSU->BMC hardware path must."""
+    chassis_budget_w: float
+    alert_fraction: float = 0.97    # alert at 97 % of the chassis budget
+
+    @property
+    def alert_threshold_w(self) -> float:
+        return self.chassis_budget_w * self.alert_fraction
+
+    def poll(self, chassis_power_w: float) -> bool:
+        return chassis_power_w >= self.alert_threshold_w

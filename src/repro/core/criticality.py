@@ -1,0 +1,82 @@
+"""Criticality (user-facing vs non-user-facing) pattern-matching algorithm.
+
+Paper §III-B, "Criticality algorithm": extract 24h/12h/8h median templates
+from a VM's 5-weekday, 30-minute CPU-utilization series; a workload is
+user-facing iff the 24h template fits *distinctly better* than the 8h
+template: Compare8 = dev24/dev8 < threshold (0.72 in the paper, chosen in
+Fig. 3 to put all manually-labeled important workloads left of the bar).
+
+The pure-jnp implementation here is the oracle; `repro.kernels.template`
+provides the fleet-scale Pallas kernel validated against it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import timeseries as ts
+
+#: Fig. 3: vertical bar at Compare8 = 0.72 separates (clearly/possibly
+#: user-facing) from (machine-generated / clearly non-user-facing).
+COMPARE8_THRESHOLD = 0.72
+
+#: Periods, in 30-minute slots: 24h, 12h, 8h. 12h/8h subsume the shorter
+#: machine-generated periods (1h, 4h, 6h divide at least one of them).
+PERIOD_24H = 48
+PERIOD_12H = 24
+PERIOD_8H = 16
+
+#: "Shorter workloads cannot be classified and should be conservatively
+#: assumed user-facing" — minimum series length (5 weekdays).
+MIN_SAMPLES = 5 * ts.SLOTS_PER_DAY
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("compare8", "compare12", "dev24", "dev12", "dev8"),
+         meta_fields=())
+@dataclass(frozen=True)
+class CriticalityScores:
+    compare8: jnp.ndarray    # (B,) dev24/dev8  — the classifier signal
+    compare12: jnp.ndarray   # (B,) dev24/dev12 — reported for Fig. 3
+    dev24: jnp.ndarray
+    dev12: jnp.ndarray
+    dev8: jnp.ndarray
+
+    def classify(self, threshold: float = COMPARE8_THRESHOLD) -> jnp.ndarray:
+        """True = user-facing (conservative direction)."""
+        return self.compare8 < threshold
+
+
+@partial(jax.jit, static_argnames=("keep_frac",))
+def score(series: jnp.ndarray, keep_frac: float = 0.8) -> CriticalityScores:
+    """Run the full pattern-matching algorithm on a batch of series.
+
+    series: (B, T) average CPU utilization per 30-minute slot, T % 48 == 0.
+    """
+    x = ts.preprocess(series)
+    dev24 = ts.template_deviation(x, PERIOD_24H, keep_frac)
+    dev12 = ts.template_deviation(x, PERIOD_12H, keep_frac)
+    dev8 = ts.template_deviation(x, PERIOD_8H, keep_frac)
+    eps = 1e-6
+    # If dev8 is ~0 the series fits an 8-hour template essentially exactly
+    # (machine-generated or flat): the ratio must not classify it as UF.
+    compare8 = dev24 / jnp.maximum(dev8, eps)
+    compare12 = dev24 / jnp.maximum(dev12, eps)
+    return CriticalityScores(compare8, compare12, dev24, dev12, dev8)
+
+
+def classify(series: jnp.ndarray,
+             threshold: float = COMPARE8_THRESHOLD) -> jnp.ndarray:
+    """Convenience wrapper: (B, T) -> (B,) bool user-facing labels."""
+    return score(series).classify(threshold)
+
+
+def classify_with_length(series: jnp.ndarray, n_valid: jnp.ndarray,
+                         threshold: float = COMPARE8_THRESHOLD) -> jnp.ndarray:
+    """Length-aware classification: series shorter than MIN_SAMPLES are
+    conservatively labeled user-facing (paper §III-B)."""
+    uf = classify(series, threshold)
+    return jnp.where(n_valid < MIN_SAMPLES, True, uf)

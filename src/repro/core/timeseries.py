@@ -1,0 +1,78 @@
+"""Time-series preprocessing for the criticality algorithm (paper §III-B).
+
+All functions are pure jnp, vectorized over a leading batch of VM series.
+Series layout: (..., T) where T = days * slots_per_day (default 5 * 48 =
+240 half-hour average CPU utilizations over 5 weekdays).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SLOTS_PER_DAY = 48          # 30-minute intervals
+DEFAULT_DAYS = 5
+EPS = 1e-6
+
+
+def rolling_day_mean(x: jnp.ndarray, window: int = SLOTS_PER_DAY) -> jnp.ndarray:
+    """Mean of the *previous* `window` samples at each position.
+
+    For t < window we use the running prefix mean (the paper does not
+    specify the warm-up; a prefix mean keeps the first day usable instead
+    of discarding it). Shape-preserving.
+    """
+    t = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    zeros = jnp.zeros(x.shape[:-1] + (1,), x.dtype)
+    csum0 = jnp.concatenate([zeros, csum], axis=-1)          # (..., T+1)
+    idx = jnp.arange(t)
+    lo = jnp.maximum(idx - window + 1, 0)                    # inclusive window start
+    width = (idx - lo + 1).astype(x.dtype)
+    win_sum = jnp.take(csum0, idx + 1, axis=-1) - jnp.take(csum0, lo, axis=-1)
+    return win_sum / jnp.maximum(width, 1.0)
+
+
+def detrend(x: jnp.ndarray, window: int = SLOTS_PER_DAY) -> jnp.ndarray:
+    """Paper step 1a: scale each utilization by the mean of the previous
+    24 hours, removing multi-day growth/decay trends."""
+    base = rolling_day_mean(x, window)
+    return x / jnp.maximum(base, EPS)
+
+
+def normalize(x: jnp.ndarray) -> jnp.ndarray:
+    """Paper step 1b: divide by the standard deviation of the whole series."""
+    sd = jnp.std(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(sd, EPS)
+
+
+def preprocess(x: jnp.ndarray, window: int = SLOTS_PER_DAY) -> jnp.ndarray:
+    """De-trend then normalize (paper §III-B step 1)."""
+    return normalize(detrend(x, window))
+
+
+def extract_template(x: jnp.ndarray, period: int) -> jnp.ndarray:
+    """Paper step 2: per-slot 'typical' utilization = median across all
+    repetitions of that slot. x: (..., T) with T % period == 0.
+    Returns (..., period)."""
+    t = x.shape[-1]
+    assert t % period == 0, (t, period)
+    reps = t // period
+    xr = x.reshape(x.shape[:-1] + (reps, period))
+    return jnp.median(xr, axis=-2)
+
+
+def template_deviation(x: jnp.ndarray, period: int,
+                       keep_frac: float = 0.8) -> jnp.ndarray:
+    """Paper step 3: overlay the template, compute |deviation| for every
+    sample, exclude the (1-keep_frac) largest deviations, average the rest.
+    Returns (...,) scalar per series."""
+    t = x.shape[-1]
+    reps = t // period
+    template = extract_template(x, period)
+    tiled = jnp.tile(template, (1,) * (x.ndim - 1) + (reps,))
+    dev = jnp.abs(x - tiled)
+    k = int(round(keep_frac * t))
+    # keep the k smallest deviations exactly (sort-based; the Pallas kernel
+    # uses bisection selection and is tested against this oracle).
+    dev_sorted = jnp.sort(dev, axis=-1)
+    return jnp.mean(dev_sorted[..., :k], axis=-1)

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: flash attention (prefill), causal + sliding window.
+
+Classic three-dimensional grid (batch*heads, q blocks, kv blocks) with the
+kv dimension innermost/sequential; online-softmax running max/sum and the
+output accumulator live in VMEM scratch across kv steps. Block shapes are
+MXU-aligned (BQ = BK = 128 defaults, head_dim padded to 128 by ops.py).
+
+The CPU dry-run path uses the XLA-chunked equivalent in
+`repro.models.attention`; this kernel is the TPU fast path, validated in
+interpret mode against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+BQ = 128
+BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_scr, l_scr, *,
+                  scale: float, causal: bool, window: int | None,
+                  nk: int, q_offset: int, valid_lk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    i = pl.program_id(1)
+    bq, bk = s.shape
+    qi = (i * bq + q_offset
+          + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+    kj = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kj < valid_lk                 # padded keys are never attended
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_scr[...]                               # (BQ, 1)
+    l_prev = l_scr[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                            # masked -> ~0
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc[...] = acc[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        o_ref[0] = (acc[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, window: int | None = None,
+                           bq: int = BQ, bk: int = BK,
+                           q_offset: int | None = None,
+                           valid_lk: int | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Lq, D); k, v: (BH, Lk, D). Lq % bq == Lk % bk == 0.
+    Query positions are aligned to the END of the VALID kv sequence
+    (q_offset defaults to Lk - Lq); keys at positions >= valid_lk are
+    masked (padding)."""
+    bh, lq, d = q.shape
+    _, lk, _ = k.shape
+    nq, nk = lq // bq, lk // bk
+    scale = d ** -0.5
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, nk=nk,
+        q_offset=lk - lq if q_offset is None else q_offset,
+        valid_lk=lk if valid_lk is None else valid_lk)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Jitted wrapper: GQA head repetition, block padding, dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_pallas)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Hq, Lq, D); k, v: (B, Hkv, Lk, D), Hq % Hkv == 0.
+    Returns (B, Hq, Lq, D)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    rep = hq // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    bq_ = min(bq, lq)
+    pad_q = (-lq) % bq_
+    pad_k = (-lk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    # padded keys are masked via valid_lk; padded q rows produce zeros
+    # that are sliced away.
+    out = flash_attention_pallas(
+        qp.reshape(b * hq, lq + pad_q, d),
+        kp.reshape(b * hq, lk + pad_k, d),
+        vp.reshape(b * hq, lk + pad_k, d),
+        causal=causal, window=window, bq=bq_, bk=min(bk, lk + pad_k),
+        q_offset=lk - lq, valid_lk=lk, interpret=interpret)
+    return out.reshape(b, hq, lq + pad_q, d)[:, :, :lq]

@@ -1,0 +1,29 @@
+"""Naive-softmax oracle for flash attention (f32 throughout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q: (B, H, Lq, D); k, v: (B, H, Lk, D) (kv heads already repeated).
+    Full-materialization reference."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    lq, lk = q.shape[2], k.shape[2]
+    qi = jnp.arange(lq)[:, None] + (lk - lq)    # align ends (decode)
+    kj = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.forest.ops import forest_predict  # noqa: F401

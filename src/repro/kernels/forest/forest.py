@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: oblivious-forest ensemble inference.
+
+TPU adaptation (DESIGN.md §3): classic tree traversal is pointer-chasing;
+oblivious trees make the whole ensemble dense algebra that maps onto the
+MXU as two matmuls:
+
+  1. feature gather  -> one-hot matmul:  (B, F) @ (F, T*D)  = levels
+  2. compare         -> bits = levels > thresholds          (VPU)
+  3. leaf index      -> bit-packed:  sum_l bits * 2^(D-1-l) (VPU)
+  4. leaf lookup     -> one-hot leaf (B, T*L) built by iota-compare,
+                        then (B, T*L) @ (T*L, K) = summed leaf values
+
+The ops.py wrapper precomputes the (F, T*D) one-hot gather matrix and the
+(T*L, K) flattened leaf table from a trained `ObliviousForest`, so the
+kernel itself is shape-static. Block layout: (BLOCK_B, ·) tiles in VMEM;
+with T = 48 trees, D = 6, K <= 4: gather matrix ~36 KiB, leaf table
+~49 KiB, one-hot scratch (BLOCK_B x 3072) ~1.5 MiB at BLOCK_B = 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+
+
+def _forest_kernel(x_ref, gather_ref, thr_ref, leaf_ref, out_ref, *,
+                   n_trees: int, depth: int):
+    x = x_ref[...]                                # (B, F)
+    gather = gather_ref[...]                      # (F, T*D)
+    thr = thr_ref[...]                            # (1, T*D)
+    leaf_tab = leaf_ref[...]                      # (T*L, K)
+    b = x.shape[0]
+    n_leaves = 1 << depth
+
+    levels = jnp.dot(x, gather,
+                     preferred_element_type=jnp.float32)      # (B, T*D)
+    bits = (levels > thr).astype(jnp.float32)
+    bits = bits.reshape(b, n_trees, depth)
+    # 2^(D-1-l) weights, built with iota to avoid captured constants
+    lvl = jax.lax.broadcasted_iota(jnp.float32, (1, 1, depth), 2)
+    weights = jnp.exp2((depth - 1) - lvl)
+    leaf_idx = jnp.sum(bits * weights, axis=-1)                 # (B, T)
+
+    iota = jax.lax.broadcasted_iota(jnp.float32, (1, 1, n_leaves), 2)
+    onehot = (jnp.abs(leaf_idx[:, :, None] - iota) < 0.5) \
+        .astype(jnp.float32)                       # (B, T, L)
+    onehot = onehot.reshape(b, n_trees * n_leaves)
+    out_ref[...] = jnp.dot(onehot, leaf_tab,
+                           preferred_element_type=jnp.float32)  # (B, K)
+
+
+def forest_predict_pallas(x: jnp.ndarray, gather: jnp.ndarray,
+                          thresholds_flat: jnp.ndarray,
+                          leaf_table: jnp.ndarray, n_trees: int,
+                          depth: int, block_b: int = BLOCK_B,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Summed leaf values over trees: (B, K). Caller scales (RF mean) or
+    softmaxes (GB)."""
+    b, f = x.shape
+    td = gather.shape[1]
+    tl, k = leaf_table.shape
+    assert b % block_b == 0
+    kernel = functools.partial(_forest_kernel, n_trees=n_trees,
+                               depth=depth)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, td), lambda i: (0, 0)),
+            pl.BlockSpec((1, td), lambda i: (0, 0)),
+            pl.BlockSpec((tl, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(x, gather, thresholds_flat, leaf_table)

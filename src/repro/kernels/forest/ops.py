@@ -1,0 +1,54 @@
+"""Jitted public wrapper: serve a trained ObliviousForest on TPU.
+
+Precomputes the dense gather matrix / flat leaf table once per model
+(cheap; models retrain daily in the paper) and pads the query batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.forest import ObliviousForest
+from repro.kernels.forest.forest import BLOCK_B, forest_predict_pallas
+
+
+def pack_forest(forest: ObliviousForest):
+    """Build the kernel's static operands from a trained forest."""
+    t, d = forest.feat_idx.shape
+    f = forest.n_features
+    gather = np.zeros((f, t * d), np.float32)
+    gather[forest.feat_idx.reshape(-1), np.arange(t * d)] = 1.0
+    thr = forest.thresholds.reshape(1, t * d).astype(np.float32)
+    leaf_tab = forest.leaf_values.reshape(t * (1 << d),
+                                          forest.n_out).astype(np.float32)
+    return (jnp.asarray(gather), jnp.asarray(thr), jnp.asarray(leaf_tab),
+            t, d, forest.kind)
+
+
+@partial(jax.jit,
+         static_argnames=("n_trees", "depth", "kind", "interpret"))
+def _predict(x, gather, thr, leaf_tab, n_trees, depth, kind, interpret):
+    b = x.shape[0]
+    pad = (-b) % BLOCK_B
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], 0)
+    summed = forest_predict_pallas(x.astype(jnp.float32), gather, thr,
+                                   leaf_tab, n_trees, depth,
+                                   interpret=interpret)[:b]
+    if kind == "rf":
+        return summed / n_trees
+    m = summed - summed.max(-1, keepdims=True)
+    e = jnp.exp(m)
+    return e / e.sum(-1, keepdims=True)
+
+
+def forest_predict(forest: ObliviousForest, x, interpret: bool | None = None):
+    """(B, F) features -> (B, K) probabilities via the Pallas kernel."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    gather, thr, leaf_tab, t, d, kind = pack_forest(forest)
+    return _predict(jnp.asarray(x), gather, thr, leaf_tab, t, d, kind,
+                    interpret)

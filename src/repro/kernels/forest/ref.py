@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for oblivious-forest inference.
+
+Mirrors `repro.core.forest.ObliviousForest.predict_proba_np` (the numpy
+oracle used for training-time evaluation) in jnp.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def forest_predict_ref(x: jnp.ndarray, feat_idx: jnp.ndarray,
+                       thresholds: jnp.ndarray, leaf_values: jnp.ndarray,
+                       kind: str) -> jnp.ndarray:
+    """x: (B, F); feat_idx/thresholds: (T, D); leaf_values: (T, 2**D, K).
+    Returns (B, K) class probabilities."""
+    n_trees, depth = feat_idx.shape
+    gathered = x[:, feat_idx.reshape(-1)].reshape(-1, n_trees, depth)
+    bits = (gathered > thresholds[None]).astype(jnp.int32)
+    weights = (2 ** jnp.arange(depth))[::-1]
+    leaves = (bits * weights[None, None, :]).sum(-1)          # (B, T)
+    vals = leaf_values[jnp.arange(n_trees)[None, :], leaves]  # (B, T, K)
+    if kind == "rf":
+        return vals.mean(axis=1)
+    return _softmax(vals.sum(axis=1))
+
+
+def _softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    m = logits - logits.max(-1, keepdims=True)
+    e = jnp.exp(m)
+    return e / e.sum(-1, keepdims=True)

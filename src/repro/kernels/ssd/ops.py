@@ -1,0 +1,31 @@
+"""Jitted wrapper for the SSD kernel: length padding + dispatch."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import CHUNK, ssd_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, a, b, c, d=None, chunk: int = CHUNK,
+        interpret: bool | None = None):
+    """Mamba2 SSD: x (B, L, H, P), dt (B, L, H), a (H,), b/c (B, L, N),
+    d (H,) skip. Returns y (B, L, H, P). Pads L to the chunk size with
+    dt = 0 steps (exact no-ops)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if d is None:
+        d = jnp.zeros(x.shape[2], jnp.float32)
+    l = x.shape[1]
+    ch = min(chunk, max(l, 8))
+    pad = (-l) % ch
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    out = ssd_pallas(x, dt, a, b, c, d, chunk=ch, interpret=interpret)
+    return out[:, :l]

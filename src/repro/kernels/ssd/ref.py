@@ -1,0 +1,41 @@
+"""Oracles for the Mamba2 SSD kernel.
+
+`ssd_ref` is the exact per-step linear recurrence (lax.scan, f32):
+
+    S_t = S_{t-1} * exp(A_h dt_t) + dt_t * x_t (x) B_t
+    y_t = C_t . S_t + D_h x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c, d=None):
+    """x: (B, L, H, P); dt: (B, L, H); a: (H,) (negative);
+    b, c: (B, L, N) shared across heads (ngroups=1); d: (H,) skip.
+    Returns y: (B, L, H, P), final state (B, H, P, N)."""
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    c32 = c.astype(jnp.float32)
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                    # (B,H,P), (B,H), (B,N)...
+        decay = jnp.exp(a[None, :] * dtt)        # (B, H)
+        inject = (dtt[..., None, None] * xt[..., None]
+                  * bt[:, None, None, :])        # (B, H, P, N)
+        state = state * decay[..., None, None] + inject
+        yt = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, yt
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt32, 1, 0),
+          jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                   # (B, L, H, P)
+    if d is not None:
+        y = y + d[None, None, :, None] * x32
+    return y.astype(x.dtype), final

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD dual form splits the sequence into chunks of Q steps. Within a
+chunk the output is an attention-like (Q x Q) masked matmul (MXU); across
+chunks a (P x N) recurrent state carries in VMEM scratch, with the chunk
+axis innermost in the grid so state persists across sequential grid steps
+(the canonical TPU pattern for scans).
+
+    cum_t   = cumsum(A_h dt_t)                      within chunk
+    y_intra = ((C B^T) o M) (dt*x),  M_ij = exp(cum_i - cum_j) [i >= j]
+    y_inter = exp(cum) * (C S_prev^T)
+    S_new   = exp(cum_Q) S_prev + (dt*x*exp(cum_Q - cum))^T B
+
+All exponents are <= 0 (A < 0, dt >= 0) so everything is stable in f32.
+Zero-padding the tail chunk is exact: dt = 0 steps neither decay nor
+inject state and produce y = 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref, y_ref,
+                s_scr, *, nchunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0, 0]                                    # scalar A_h
+    bm = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (Q, N)
+    dskip = dskip_ref[0, 0]
+
+    q = x.shape[0]
+    adt = a * dt                                       # (Q,) <= 0
+    cum = jnp.cumsum(adt)                              # (Q,)
+    total = cum[-1]
+
+    # intra-chunk: masked decay matrix M (Q, Q); mask before exp so the
+    # i < j half (positive exponents) cannot overflow
+    diff = cum[:, None] - cum[None, :]                 # cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    xdt = x * dt[:, None]                              # (Q, P)
+    y = jax.lax.dot(scores * m, xdt,
+                    preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of carried state
+    s_prev = s_scr[...]                                # (P, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, s_prev, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (Q, P)
+
+    # state update
+    w = jnp.exp(total - cum)[:, None] * xdt            # (Q, P)
+    s_scr[...] = jnp.exp(total) * s_prev + jax.lax.dot_general(
+        w, bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (P, N)
+
+    y_ref[0, :, 0, :] = (y + dskip * x).astype(y_ref.dtype)
+
+
+def ssd_pallas(x, dt, a, b, c, d, chunk: int = CHUNK,
+               interpret: bool = False):
+    """x: (B, L, H, P); dt: (B, L, H); a, d: (H,); b, c: (B, L, N).
+    L % chunk == 0. Returns y: (B, L, H, P)."""
+    bsz, l, h, p = x.shape
+    n = b.shape[-1]
+    nchunks = l // chunk
+    a2 = a.reshape(h, 1).astype(jnp.float32)
+    d2 = d.reshape(h, 1).astype(jnp.float32)
+    kernel = functools.partial(_ssd_kernel, nchunks=nchunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nchunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bb, hh, cc: (bb, cc, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bb, hh, cc: (bb, cc, hh)),
+            pl.BlockSpec((1, 1), lambda bb, hh, cc: (hh, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, hh, cc: (bb, cc, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, cc: (hh, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p),
+                               lambda bb, hh, cc: (bb, cc, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, b, c, d2)

@@ -1,0 +1,1 @@
+from repro.kernels.template.ops import criticality_scores  # noqa: F401

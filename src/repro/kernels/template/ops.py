@@ -1,0 +1,36 @@
+"""Jitted public wrapper for the criticality template kernel.
+
+Pads the VM batch to the block size, dispatches to the Pallas kernel
+(interpret=True on CPU — this container's validation mode; compiled
+kernel on TPU), and unpads.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.template.template import (BLOCK_B,
+                                             criticality_scores_pallas)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("keep_frac", "interpret", "block_b"))
+def criticality_scores(series: jnp.ndarray, keep_frac: float = 0.8,
+                       interpret: bool | None = None,
+                       block_b: int = BLOCK_B) -> jnp.ndarray:
+    """(B, T) -> (B, 2) [Compare8, Compare12] for a batch of VM series."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b = series.shape[0]
+    pad = (-b) % block_b
+    if pad:
+        series = jnp.concatenate(
+            [series, jnp.ones((pad, series.shape[1]), series.dtype)], 0)
+    out = criticality_scores_pallas(series, keep_frac=keep_frac,
+                                    block_b=block_b, interpret=interpret)
+    return out[:b]

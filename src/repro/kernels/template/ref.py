@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the criticality template kernel.
+
+Delegates to `repro.core.criticality` / `repro.core.timeseries` — the
+paper-faithful implementation (exact medians via jnp.median, exact
+smallest-k selection via jnp.sort).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.criticality import score as _score
+
+
+def criticality_scores_ref(series: jnp.ndarray) -> jnp.ndarray:
+    """(B, T) -> (B, 2) [Compare8, Compare12]."""
+    s = _score(series)
+    return jnp.stack([s.compare8, s.compare12], axis=-1)

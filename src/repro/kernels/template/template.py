@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fleet-scale criticality template scoring.
+
+One fused pass over a block of VM utilization series computes the full
+paper §III-B algorithm: de-trend (rolling 24 h mean via cumsum),
+normalize, extract 24 h/12 h/8 h median templates, deviation scoring
+with top-20 % exclusion, and the Compare8/Compare12 ratios.
+
+TPU adaptation (DESIGN.md §3): no data-dependent control flow —
+  * per-slot medians use odd-even transposition sort networks
+    (branch-free jnp.minimum/maximum ladders on the repetition axis);
+  * the "exclude the 20 % largest deviations" selection uses fixed-count
+    bisection on the deviation value (24 iterations) with a tie
+    correction, instead of a sort of the full series.
+
+Block layout: each grid step processes a (BLOCK_B, T) tile resident in
+VMEM (T = 240 -> ~120 KiB per tile at BLOCK_B = 128, well under the
+~16 MiB VMEM budget; BLOCK_B stays a multiple of 8 for VPU sublanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_B = 128
+BISECT_ITERS = 24
+EPS = 1e-6
+
+
+def _oddeven_sort(x: jnp.ndarray) -> jnp.ndarray:
+    """Sort along axis -2 (the repetition axis) with an odd-even
+    transposition network: n branch-free passes of pairwise min/max."""
+    n = x.shape[-2]
+    for p in range(n):
+        start = p % 2
+        for i in range(start, n - 1, 2):
+            a = x[..., i, :]
+            b = x[..., i + 1, :]
+            lo = jnp.minimum(a, b)
+            hi = jnp.maximum(a, b)
+            x = x.at[..., i, :].set(lo).at[..., i + 1, :].set(hi)
+    return x
+
+
+def _median_template(x: jnp.ndarray, period: int) -> jnp.ndarray:
+    """(B, T) -> (B, period): per-slot median across T//period reps."""
+    b, t = x.shape
+    reps = t // period
+    xr = x.reshape(b, reps, period)
+    xs = _oddeven_sort(xr)
+    if reps % 2 == 1:
+        return xs[:, reps // 2, :]
+    return 0.5 * (xs[:, reps // 2 - 1, :] + xs[:, reps // 2, :])
+
+
+def _trimmed_mean_deviation(x: jnp.ndarray, period: int,
+                            keep_frac: float) -> jnp.ndarray:
+    """Mean of the k smallest |x - tiled template| (k = keep_frac * T),
+    via bisection selection of the k-th smallest value."""
+    b, t = x.shape
+    reps = t // period
+    tmpl = _median_template(x, period)
+    dev = jnp.abs(x - jnp.tile(tmpl, (1, reps)))
+    k = round(keep_frac * t)
+
+    lo = jnp.zeros((b, 1), x.dtype)
+    hi = jnp.max(dev, axis=-1, keepdims=True)
+    for _ in range(BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum((dev <= mid).astype(x.dtype), axis=-1, keepdims=True)
+        go_lo = cnt >= k
+        hi = jnp.where(go_lo, mid, hi)
+        lo = jnp.where(go_lo, lo, mid)
+    thr = hi                                          # ~ k-th smallest
+    le = dev <= thr
+    cnt_le = jnp.sum(le.astype(x.dtype), axis=-1, keepdims=True)
+    sum_le = jnp.sum(jnp.where(le, dev, 0.0), axis=-1, keepdims=True)
+    # remove the (cnt_le - k) tied values at the threshold
+    sum_k = sum_le - (cnt_le - k) * thr
+    return (sum_k / k)[:, 0]
+
+
+def _criticality_kernel(series_ref, out_ref, *, keep_frac: float):
+    x = series_ref[...]                               # (BLOCK_B, T)
+    b, t = x.shape
+    day = 48
+
+    # --- de-trend: divide by mean of the previous 24 h (prefix mean
+    # warm-up), exactly as repro.core.timeseries.rolling_day_mean ---
+    csum = jnp.cumsum(x, axis=-1)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    lo_i = jnp.maximum(idx - day + 1, 0)
+    width = (idx - lo_i + 1).astype(x.dtype)
+    zeros = jnp.zeros((b, 1), x.dtype)
+    csum0 = jnp.concatenate([zeros, csum], axis=-1)
+    take = functools.partial(jnp.take_along_axis, axis=-1)
+    win_sum = take(csum0, jnp.broadcast_to(idx + 1, (b, t))) \
+        - take(csum0, jnp.broadcast_to(lo_i, (b, t)))
+    base = win_sum / jnp.maximum(width, 1.0)
+    x = x / jnp.maximum(base, EPS)
+
+    # --- normalize by whole-series std ---
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    sd = jnp.sqrt(jnp.maximum(jnp.mean((x - mu) ** 2, axis=-1,
+                                       keepdims=True), EPS * EPS))
+    x = x / jnp.maximum(sd, EPS)
+
+    dev24 = _trimmed_mean_deviation(x, 48, keep_frac)
+    dev12 = _trimmed_mean_deviation(x, 24, keep_frac)
+    dev8 = _trimmed_mean_deviation(x, 16, keep_frac)
+    compare8 = dev24 / jnp.maximum(dev8, EPS)
+    compare12 = dev24 / jnp.maximum(dev12, EPS)
+    out_ref[...] = jnp.stack([compare8, compare12], axis=-1)
+
+
+def criticality_scores_pallas(series: jnp.ndarray, keep_frac: float = 0.8,
+                              block_b: int = BLOCK_B,
+                              interpret: bool = False) -> jnp.ndarray:
+    """(B, T) -> (B, 2) [Compare8, Compare12]. B % block_b == 0."""
+    b, t = series.shape
+    assert t % 48 == 0, "series length must be whole days of 48 slots"
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    kernel = functools.partial(_criticality_kernel, keep_frac=keep_frac)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, t), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 2), series.dtype),
+        interpret=interpret,
+    )(series)

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input shape) cell, lower + compile the step on
+the production mesh — 16x16 single-pod AND 2x16x16 multi-pod — and record
+memory_analysis(), cost_analysis() and the per-device collective traffic
+parsed from the post-SPMD HLO. No device allocation happens: parameters,
+optimizer state, caches and batches are ShapeDtypeStructs.
+
+The two os.environ lines above MUST precede any other import (jax locks
+the device count at first initialization).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --multi-pod --strategy fsdp2d
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Each cell's artifact is cached in artifacts/dryrun/<cell>.json; re-runs
+skip completed cells (--force to recompute).
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs.base import SHAPES                       # noqa: E402
+from repro.configs.registry import ARCHS, cell_is_runnable  # noqa: E402
+from repro.launch import sharding as shd                    # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.steps import step_for_shape               # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "artifacts", "dryrun")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "c64": 8, "u64": 8}
+
+_SHAPE_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)]*?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result bytes of every collective op in the per-device HLO.
+    Returns {op_name: bytes, 'total': bytes}."""
+    out = {k: 0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[op] += n * nbytes
+        count[op] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+def cell_id(arch: str, shape: str, multi_pod: bool, strategy: str) -> str:
+    pod = "pod2" if multi_pod else "pod1"
+    return f"{arch}__{shape}__{pod}__{strategy}".replace("/", "_")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             strategy: str = "fsdp2d", impl: str = "xla_chunked",
+             save: bool = True, verbose: bool = True) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_runnable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "strategy": strategy, "impl": impl,
+           "kind": shape.kind, "seq_len": shape.seq_len,
+           "global_batch": shape.global_batch,
+           "param_count": cfg.param_count(),
+           "active_param_count": cfg.active_param_count()}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return _finish(rec, save, verbose)
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        strat = shd.make_strategy(strategy, mesh)
+        n_data = (mesh.shape.get("pod", 1)) * mesh.shape["data"]
+        step, args, names = step_for_shape(cfg, shape, impl=impl,
+                                           n_data=n_data)
+        in_shardings = []
+        for name, arg in zip(names, args):
+            if name == "params":
+                in_shardings.append(shd.param_shardings(strat, mesh, arg))
+            elif name == "opt_state":
+                in_shardings.append(shd.opt_shardings(strat, mesh, arg))
+            elif name == "cache":
+                in_shardings.append(shd.cache_shardings(strat, mesh, arg))
+            else:
+                in_shardings.append(shd.batch_shardings(strat, mesh, arg))
+        donate = tuple(
+            i for i, n in enumerate(names)
+            if n in ("opt_state", "cache")
+            or (n == "params" and "opt_state" in names))
+        with shd.use_strategy(strat, mesh), mesh:
+            jitted = jax.jit(step, in_shardings=tuple(in_shardings),
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            coll = parse_collectives(hlo_text)
+            from repro.launch.roofline import collective_bytes_with_trips
+            coll_trips = collective_bytes_with_trips(hlo_text)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes",
+                                          None),
+                "output_bytes": getattr(mem, "output_size_in_bytes",
+                                        None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                      None),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            },
+            cost={k: cost.get(k) for k in
+                  ("flops", "bytes accessed", "transcendentals")
+                  if isinstance(cost, dict) and k in cost},
+            collectives=coll,
+            collectives_trip_corrected=coll_trips,
+        )
+        if not isinstance(cost, dict):   # older API: list of dicts
+            rec["cost"] = {k: cost[0].get(k) for k in
+                           ("flops", "bytes accessed")}
+    except Exception as e:       # noqa: BLE001 — record the failure
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    return _finish(rec, save, verbose)
+
+
+def _finish(rec: dict, save: bool, verbose: bool) -> dict:
+    if save:
+        os.makedirs(ARTIFACT_DIR, exist_ok=True)
+        path = os.path.join(ARTIFACT_DIR, cell_id(
+            rec["arch"], rec["shape"], rec["multi_pod"],
+            rec["strategy"]) + ".json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f, indent=1)
+        os.replace(tmp, path)
+    if verbose:
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            arg_gb = (rec["memory"]["argument_bytes"] or 0) / 2**30
+            tmp_gb = (rec["memory"]["temp_bytes"] or 0) / 2**30
+            fl = rec["cost"].get("flops") or 0
+            extra = (f" args/dev={arg_gb:.2f}GiB temp/dev={tmp_gb:.2f}GiB"
+                     f" flops/dev={fl:.3g}"
+                     f" coll/dev={rec['collectives']['total_bytes']/2**30:.2f}GiB"
+                     f" compile={rec.get('compile_s')}s")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        elif status == "skipped":
+            extra = " " + rec["reason"]
+        print(f"[dryrun] {cell_id(rec['arch'], rec['shape'], rec['multi_pod'], rec['strategy'])}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--strategy", default="fsdp2d")
+    ap.add_argument("--impl", default="xla_chunked")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    pods = [False, True]
+    if args.multi_pod and not args.single_pod:
+        pods = [True]
+    if args.single_pod and not args.multi_pod:
+        pods = [False]
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, reason = cell_is_runnable(ARCHS[a], SHAPES[s])
+                print(a, s, "runnable" if ok else f"SKIP ({reason})")
+        return
+
+    t0 = time.time()
+    done = 0
+    for mp in pods:
+        for a in archs:
+            for s in shapes:
+                path = os.path.join(ARTIFACT_DIR, cell_id(
+                    a, s, mp, args.strategy) + ".json")
+                if os.path.exists(path) and not args.force:
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] cached: {os.path.basename(path)}"
+                              f" ({prev['status']})", flush=True)
+                        continue
+                run_cell(a, s, mp, args.strategy, impl=args.impl)
+                done += 1
+    print(f"[dryrun] finished {done} cells in {time.time()-t0:.0f}s",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,318 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth  50 GB/s
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = FLOPs_per_device / 197e12
+    memory     = HBM_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9
+
+Methodology notes (documented in EXPERIMENTS.md §Roofline):
+  * XLA's cost_analysis() counts while-loop bodies ONCE, not x trip
+    count, so a scan-over-layers model under-reports ~L x. We therefore
+    use an ANALYTIC FLOPs/bytes model (exact matmul accounting per
+    architecture, including remat recompute and attention/SSD chunk
+    math), cross-validated against cost_analysis() on scan-free probes.
+  * collective bytes come from the compiled per-device HLO with
+    trip-count-aware accounting: while-op bodies are scaled by their
+    trip counts (parsed from the loop-condition constants).
+  * memory-per-device comes from compiled.memory_analysis() (exact).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1,
+                "u8": 1, "pred": 1, "u64": 8}
+
+
+# --------------------------------------------------------------------------
+# analytic FLOPs / HBM-bytes model
+# --------------------------------------------------------------------------
+
+@dataclass
+class CostEstimate:
+    flops_global: float
+    hbm_bytes_global: float
+
+    def per_device(self, chips: int):
+        return self.flops_global / chips, self.hbm_bytes_global / chips
+
+
+def _attn_flops(cfg, s_q: int, s_kv: int) -> float:
+    """Per-token-batch=1 attention score+value FLOPs for one layer
+    (2*s_q*s_kv*hd per head pair, x2 for scores and values)."""
+    window = cfg.sliding_window
+    if window is not None and s_kv > window:
+        eff = window
+    else:
+        eff = s_kv
+    # causal halves the average effective kv length for self-attention
+    if s_q == s_kv:
+        eff = eff / 2 if window is None else min(eff, s_kv / 2)
+    return 2 * 2 * cfg.n_heads * s_q * eff * cfg.head_dim
+
+
+def _layer_matmul_flops(cfg, tokens: float) -> float:
+    """Weight-matmul FLOPs for one layer over `tokens` tokens (fwd)."""
+    d = cfg.d_model
+    hd = cfg.head_dim
+    if cfg.family in ("ssm", "hybrid"):
+        d_inner = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        nheads = d_inner // cfg.ssm_head_dim
+        proj = 2 * tokens * d * (2 * d_inner + 2 * n + nheads) \
+            + 2 * tokens * d_inner * d
+        # SSD chunked: intra-chunk (Q^2 terms) + state updates
+        q = 128.0
+        intra = 2 * tokens * q * (n + cfg.ssm_head_dim) * nheads
+        inter = 2 * tokens * cfg.ssm_head_dim * n * nheads
+        return proj + intra + inter
+    attn_proj = 2 * tokens * d * hd * (cfg.n_heads * 2
+                                       + cfg.n_kv_heads * 2)
+    if cfg.n_experts > 0:
+        eff = cfg.moe_d_ff or cfg.d_ff
+        ffn = 2 * tokens * cfg.experts_per_token * 3 * d * eff
+        if cfg.moe_dense_residual:
+            ffn += 2 * tokens * 3 * d * cfg.d_ff
+        ffn += 2 * tokens * d * cfg.n_experts          # router
+    else:
+        mult = 3 if cfg.mlp == "swiglu" else 2
+        ffn = 2 * tokens * mult * d * cfg.d_ff
+    return attn_proj + ffn
+
+
+def analytic_cost(cfg, shape) -> CostEstimate:
+    """Global FLOPs and HBM bytes for one step of the given shape."""
+    b, s = shape.global_batch, shape.seq_len
+    d, v = cfg.d_model, cfg.vocab_size
+    p_active = cfg.active_param_count()
+
+    if shape.kind == "decode":
+        tokens = float(b)                       # one token per sequence
+        layer = _layer_matmul_flops(cfg, tokens)
+        attn = 0.0
+        if cfg.family not in ("ssm",):
+            s_kv = s if cfg.sliding_window is None else \
+                min(s, cfg.sliding_window)
+            n_attn = cfg.n_layers if cfg.family != "hybrid" else \
+                cfg.n_layers // cfg.attn_every
+            attn = n_attn * b * 2 * 2 * cfg.n_heads * s_kv * cfg.head_dim
+        head = 2 * tokens * d * v
+        flops = cfg.n_layers * layer + attn + head
+        # decode HBM traffic: every active parameter + the KV/state cache
+        # is read once per token
+        cache_bytes = _cache_bytes(cfg, b, s)
+        hbm = p_active * 2 + cache_bytes + tokens * d * 200
+        return CostEstimate(flops, hbm)
+
+    tokens = float(b) * s
+    fwd = cfg.n_layers * _layer_matmul_flops(cfg, tokens)
+    if cfg.family not in ("ssm",):
+        n_attn = cfg.n_layers if cfg.family != "hybrid" else \
+            cfg.n_layers // cfg.attn_every
+        fwd += n_attn * b * _attn_flops(cfg, s, s)
+    if cfg.family == "audio":
+        ftok = float(b) * cfg.encoder_frames
+        fwd += cfg.encoder_layers * _layer_matmul_flops(cfg, ftok)
+        fwd += cfg.encoder_layers * b * _attn_flops(
+            cfg, cfg.encoder_frames, cfg.encoder_frames)
+        # cross attention in every decoder layer
+        fwd += cfg.n_layers * (2 * tokens * d * cfg.head_dim
+                               * cfg.n_kv_heads * 2
+                               + b * 2 * 2 * cfg.n_heads * s
+                               * cfg.encoder_frames * cfg.head_dim)
+    fwd += 2 * tokens * d * v                   # lm head
+    if shape.kind == "prefill":
+        hbm = cfg.param_count() * 2 + tokens * d * 2 * 14 * 2
+        return CostEstimate(fwd, hbm)
+    # train: bwd = 2x fwd, remat = +1x fwd => 4x fwd total
+    flops = 4 * fwd
+    p_total = cfg.param_count()
+    opt_mult = 12 if cfg.optimizer == "adamw" else 6
+    hbm = (p_total * 2 * 3                      # weights fwd+bwd+remat
+           + p_total * opt_mult                 # grads + moments r/w
+           + cfg.n_layers * tokens * d * 2 * 14)  # activation traffic
+    return CostEstimate(flops, hbm)
+
+
+def _cache_bytes(cfg, b: int, s: int) -> float:
+    if cfg.family == "ssm":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        return (cfg.n_layers * b * nheads * cfg.ssm_head_dim
+                * cfg.ssm_state * 4)
+    length = s if cfg.sliding_window is None else min(
+        s, cfg.sliding_window)
+    kv = cfg.n_layers * b * cfg.n_kv_heads * length * cfg.head_dim \
+        * 2 * 2
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nheads = d_inner // cfg.ssm_head_dim
+        kv = groups * b * cfg.n_kv_heads * s * cfg.head_dim * 2 * 2 \
+            + cfg.n_layers * b * nheads * cfg.ssm_head_dim \
+            * cfg.ssm_state * 4
+    return kv
+
+
+# --------------------------------------------------------------------------
+# trip-count-aware collective accounting from compiled HLO
+# --------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\)(?:.*?)condition=%?([\w.\-]+).*?body=%?([\w.\-]+)",
+    re.S)
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^)]*?\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _split_computations(hlo: str) -> dict:
+    comps = {}
+    cur = None
+    buf = []
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line.strip()) if "{" in line else None
+        if m and ("->" in line):
+            if cur:
+                comps[cur] = "\n".join(buf)
+            cur = m.group(1)
+            buf = [line]
+        elif cur:
+            buf.append(line)
+            if line.strip() == "}":
+                comps[cur] = "\n".join(buf)
+                cur = None
+                buf = []
+    if cur:
+        comps[cur] = "\n".join(buf)
+    return comps
+
+
+def collective_bytes_with_trips(hlo: str) -> dict:
+    """Per-device collective bytes, scaling while-loop bodies by their
+    trip counts (max s32 constant in the loop condition, a documented
+    heuristic that matches lax.scan/fori lowering)."""
+    comps = _split_computations(hlo)
+    entry = None
+    for name, body in comps.items():
+        if "ENTRY" in body.splitlines()[0]:
+            entry = name
+    if entry is None:
+        entry = max(comps, key=lambda n: len(comps[n]))
+
+    def own_bytes(body: str) -> dict:
+        out = {}
+        for m in _COLL_RE.finditer(body):
+            dtype, dims, op = m.groups()
+            n = 1
+            if dims:
+                for dd in dims.split(","):
+                    n *= int(dd)
+            out[op] = out.get(op, 0) + n * _DTYPE_BYTES.get(dtype, 4)
+        return out
+
+    def trip_of(cond_name: str) -> int:
+        body = comps.get(cond_name, "")
+        consts = [int(c) for c in _CONST_RE.findall(body)]
+        return max(consts) if consts else 1
+
+    seen = {}
+
+    def total(name: str, depth=0) -> dict:
+        if name in seen or depth > 12 or name not in comps:
+            return {}
+        body = comps[name]
+        agg = own_bytes(body)
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.groups()
+            trips = trip_of(cond)
+            sub = total(wbody, depth + 1)
+            for k, v in sub.items():
+                agg[k] = agg.get(k, 0) + v * trips
+        # calls / fusions that may contain collectives
+        for cm in re.finditer(r"(?:call|fusion)\(.*?to_apply=%?"
+                              r"([\w.\-]+)", body):
+            sub = total(cm.group(1), depth + 1)
+            for k, v in sub.items():
+                agg[k] = agg.get(k, 0) + v
+        return agg
+
+    agg = total(entry)
+    # monotone-safety: computations the regex walk fails to associate
+    # would be silently dropped; never report less than the flat
+    # (once-per-op) parse over the whole module.
+    flat = own_bytes(hlo)
+    for k, v in flat.items():
+        agg[k] = max(agg.get(k, 0), v)
+    agg["total"] = sum(v for k, v in agg.items())
+    return agg
+
+
+# --------------------------------------------------------------------------
+# report
+# --------------------------------------------------------------------------
+
+def roofline_row(rec: dict, cfg, shape, chips: int = 256,
+                 hlo_text: str | None = None) -> dict:
+    est = analytic_cost(cfg, shape)
+    flops_dev, hbm_dev = est.per_device(chips)
+    mem = rec.get("memory", {})
+    # prefer exact live-bytes from memory_analysis for the memory term
+    # denominator when available (argument+temp approximates working set)
+    coll_dev = rec.get("collectives", {}).get("total_bytes", 0)
+    if hlo_text is not None:
+        coll_dev = collective_bytes_with_trips(hlo_text)["total"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((t_compute, "compute"), (t_memory, "memory"),
+                   (t_coll, "collective"))[1]
+    # MODEL_FLOPS: 6*N_active*D for training (fwd+bwd), 2*N_active*D for
+    # inference, D = tokens processed this step.
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill")
+              else shape.global_batch)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * cfg.active_param_count() * tokens
+    bound = max(t_compute, t_memory, t_coll)
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "flops_dev": flops_dev, "hbm_dev": hbm_dev,
+        "coll_dev": coll_dev,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_global": model_flops,
+        # how much of compiled compute is "useful" (catches remat /
+        # routing / recompute waste)
+        "useful_ratio": model_flops / max(est.flops_global, 1),
+        # fraction of roofline under perfect overlap (1.0 = compute-
+        # bound at peak) and under no overlap (serial lower bound)
+        "roofline_overlapped": t_compute / max(bound, 1e-12),
+        "roofline_serial": t_compute / max(
+            t_compute + t_memory + t_coll, 1e-12),
+    }
+
+
+def load_artifacts(artifact_dir: str) -> list:
+    out = []
+    for name in sorted(os.listdir(artifact_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(artifact_dir, name)) as f:
+                out.append(json.load(f))
+    return out

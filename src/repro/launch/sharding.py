@@ -1,0 +1,367 @@
+"""Sharding strategies and the activation-constraint hook.
+
+Two strategies (DESIGN.md §6):
+
+  * fsdp2d — parameters 2D-sharded (row dim over 'data', column dim over
+    'model'; ZeRO-3 x tensor-storage), activations batch-sharded over
+    ('pod','data'). Head-count agnostic: compiles for every architecture
+    and shape. XLA inserts the weight all-gathers (FSDP semantics).
+  * tp — Megatron tensor parallelism over 'model' (attention heads, FFN
+    hidden, vocab) with FSDP over 'data'; used by §Perf hillclimbs on
+    archs whose head counts divide the model axis.
+
+Model code calls `constrain(x, tag)`; the active strategy maps tags to
+PartitionSpecs. Outside a strategy context the hook is the identity, so
+single-device smoke tests run the exact same model code.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_strategy():
+    return getattr(_state, "strategy", None)
+
+
+@contextmanager
+def use_strategy(strategy, mesh):
+    prev = (getattr(_state, "strategy", None),
+            getattr(_state, "mesh", None))
+    _state.strategy, _state.mesh = strategy, mesh
+    try:
+        yield
+    finally:
+        _state.strategy, _state.mesh = prev
+
+
+def constrain(x, tag: str):
+    strat = getattr(_state, "strategy", None)
+    mesh = getattr(_state, "mesh", None)
+    if strat is None or mesh is None:
+        return x
+    rule = strat.activation_rules.get(tag)
+    if rule is None:
+        return x
+    candidates = rule if isinstance(rule, (list, tuple)) \
+        and not isinstance(rule, P) else [rule]
+    fitted = [_fit_spec_to_rank(s, x.ndim) for s in candidates]
+    spec = None
+    for s in fitted:
+        if _divisible(x.shape, s, mesh):
+            spec = s
+            break
+    if spec is None:
+        # keep the divisible axes (e.g. batch) and release the rest
+        spec = _drop_nondivisible(x.shape, fitted[0], mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def _fit_spec_to_rank(spec: P, rank: int) -> P:
+    parts = list(spec)
+    if len(parts) < rank:
+        parts = parts + [None] * (rank - len(parts))
+    return P(*parts[:rank])
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        size = 1
+        for a in axis:
+            size *= _axis_size(mesh, a)
+        return size
+    return mesh.shape[axis] if axis in mesh.axis_names else 0
+
+
+def _divisible(shape, spec, mesh) -> bool:
+    for dim, axis in zip(shape, spec):
+        size = _axis_size(mesh, axis)
+        if size == 0:
+            return False            # axis not present in this mesh
+        if size > 1 and dim % size != 0:
+            return False
+    return True
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    #: regex on '/'.joined param path -> spec builder over dims
+    param_rules: tuple = ()
+    activation_rules: dict = field(default_factory=dict)
+
+    def param_spec(self, path: str, shape: tuple, mesh) -> P:
+        for pattern, spec in self.param_rules:
+            if re.search(pattern, path):
+                # a rule may carry fallback candidates (tuple of specs):
+                # the first fully-divisible one wins — e.g. MoE expert
+                # stacks shard the expert dim when E divides the axis,
+                # else the within-expert dims (mixtral E=8 < data=16)
+                candidates = spec if isinstance(spec, (list, tuple)) \
+                    and not isinstance(spec, P) else [spec]
+                fitted = [_fit_spec_to_rank_nd(s, len(shape))
+                          for s in candidates]
+                for s in fitted:
+                    if _divisible(shape, s, mesh):
+                        return s
+                return _drop_nondivisible(shape, fitted[0], mesh)
+        return P(*([None] * len(shape)))
+
+
+def _fit_spec_to_rank_nd(spec: P, rank: int) -> P:
+    """Right-align the spec onto the trailing dims (stacked-layer params
+    carry leading layer/group dims that stay unsharded)."""
+    parts = list(spec)
+    if len(parts) < rank:
+        parts = [None] * (rank - len(parts)) + parts
+    return P(*parts[-rank:])
+
+
+def _drop_nondivisible(shape, spec, mesh) -> P:
+    parts = []
+    for dim, axis in zip(shape, spec):
+        size = _axis_size(mesh, axis)
+        parts.append(axis if size and dim % max(size, 1) == 0 and size > 1
+                     else None)
+    return P(*parts)
+
+
+def _dp(mesh_axes) -> tuple:
+    return ("pod", "data") if "pod" in mesh_axes else ("data",)
+
+
+def make_strategy(name: str, mesh, cfg=None) -> Strategy:
+    dp = _dp(mesh.axis_names)
+    if name == "fsdp2d":
+        return Strategy(
+            name="fsdp2d",
+            param_rules=(
+                # embeddings: vocab over model (gather-friendly)
+                (r"embed/w$", P("model", "data")),
+                (r"lm_head/w$", P("data", "model")),
+                # MoE expert stacks (E, d_in, d_out): shard experts over
+                # data (expert-parallel storage) and d_out over model;
+                # when E < data (mixtral: 8 < 16) fall back to 2D
+                # within-expert sharding so optimizer state still
+                # shards 256-way
+                (r"moe/(gate|up|down)/?w?$",
+                 (P("data", None, "model"), P(None, "data", "model"))),
+                (r"router/w$", P(None, None)),
+                # conv / small ssm vectors: replicate
+                (r"conv_w$|conv_b$|a_log$|dt_bias$|d_skip$", P(None)),
+                # biases and norms: replicate
+                (r"/b$|scale$|bias$", P(None)),
+                # every remaining 2D matmul weight: row over data,
+                # col over model
+                (r"/w$", P("data", "model")),
+            ),
+            activation_rules={
+                # NOTE: we tried sequence-sharding the residual stream
+                # here (Megatron-SP style, P(dp,'model',None)) to cut the
+                # per-layer saved activations; the SPMD partitioner hit
+                # "involuntary full rematerialization" on the chunked-
+                # attention reshapes and memory got WORSE (llama3 train:
+                # 21.6 -> 38.8 GiB). Gradient accumulation in
+                # make_train_step is the production fix. See
+                # EXPERIMENTS.md §Perf iteration log.
+                "residual": P(dp, None, None),
+                "logits": P(dp, None, "model"),
+                "kv_cache": P(dp, None, "model", None),
+                "logits_blocks": P(dp, "model", None),
+                # (E, C, d) buffers: expert-sharded when E divides, else
+                # capacity-sharded (mixtral E=8 < data=16)
+                "moe_buffer": (P("data", None, None),
+                               P(None, "data", "model")),
+                "moe_hidden": (P("data", None, "model"),
+                               P(None, "data", "model")),
+                "moe_tokens": P(dp, None),
+                "moe_routing": P(dp, None),
+                "ssm_heads": P(dp, None, "model", None),
+            },
+        )
+    if name == "tp":
+        return Strategy(
+            name="tp",
+            param_rules=(
+                (r"embed/w$", P("model", "data")),
+                (r"lm_head/w$", P("data", "model")),
+                (r"moe/(gate|up|down)/?w?$",
+                 (P("data", None, "model"), P(None, "data", "model"))),
+                (r"router/w$", P(None, None)),
+                (r"conv_w$|conv_b$|a_log$|dt_bias$|d_skip$", P(None)),
+                (r"attn/w[qkv]/w$", P("data", "model")),
+                (r"attn/wo/w$", P("model", "data")),
+                (r"(gate|up)/w$", P("data", "model")),
+                (r"down/w$", P("model", "data")),
+                (r"in_proj/w$", P("data", "model")),
+                (r"out_proj/w$", P("model", "data")),
+                (r"/b$|scale$|bias$", P(None)),
+                (r"/w$", P("data", "model")),
+            ),
+            activation_rules={
+                "residual": P(dp, None, None),
+                "logits": P(dp, None, "model"),
+                "attn_heads": P(dp, "model", None, None),
+                "attn_kv_heads": P(dp, "model", None, None),
+                "attn_out": P(dp, None, "model"),
+                "ffn_hidden": P(dp, None, "model"),
+                "kv_cache": P(dp, "model", None, None),
+                "logits_blocks": P(dp, "model", None),
+                "moe_buffer": (P("data", None, None),
+                               P(None, "data", "model")),
+                "moe_hidden": (P("data", None, "model"),
+                               P(None, "data", "model")),
+                "moe_tokens": P(dp, None),
+                "moe_routing": P(dp, None),
+                "ssm_heads": P(dp, None, "model", None),
+            },
+        )
+    if name == "tp_serve":
+        # pure tensor-parallel weights for SERVING: no row ('data')
+        # sharding, so decode has no per-layer FSDP weight gathers —
+        # only the two small activation all-reduces per layer (classic
+        # Megatron inference). Memory: params/16 per device, no
+        # optimizer state at serve time.
+        return Strategy(
+            name="tp_serve",
+            param_rules=(
+                (r"embed/w$", P("model", None)),
+                (r"lm_head/w$", P(None, "model")),
+                (r"moe/(gate|up|down)/?w?$",
+                 (P("data", None, "model"), P(None, None, "model"))),
+                (r"router/w$", P(None, None)),
+                (r"conv_w$|conv_b$|a_log$|dt_bias$|d_skip$", P(None)),
+                (r"attn/w[qkv]/w$", P(None, "model")),
+                (r"attn/wo/w$", P("model", None)),
+                (r"(gate|up)/w$", P(None, "model")),
+                (r"down/w$", P("model", None)),
+                (r"in_proj/w$", P(None, "model")),
+                (r"out_proj/w$", P("model", None)),
+                (r"/b$|scale$|bias$", P(None)),
+                (r"/w$", P(None, "model")),
+            ),
+            activation_rules={
+                "residual": P(dp, None, None),
+                "logits": P(dp, None, "model"),
+                "logits_blocks": P(dp, "model", None),
+                "attn_heads": P(dp, "model", None, None),
+                "attn_kv_heads": (P(dp, "model", None, None),
+                                  P(dp, None, None, None)),
+                "attn_out": P(dp, None, "model"),
+                "ffn_hidden": P(dp, None, "model"),
+                "kv_cache": (P(dp, "model", None, None),
+                             P(dp, None, "model", None)),
+                "moe_buffer": (P("data", None, None),
+                               P(None, "data", "model")),
+                "moe_hidden": (P("data", None, "model"),
+                               P(None, "data", "model")),
+                "moe_tokens": P(dp, None),
+                "moe_routing": P(dp, None),
+                "ssm_heads": P(dp, None, "model", None),
+            },
+        )
+    raise KeyError(name)
+
+
+def param_shardings(strategy: Strategy, mesh, params_shape) -> dict:
+    """Pytree of NamedShardings matching a params (shape) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        path_str = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+        spec = strategy.param_spec(path_str, leaf.shape, mesh)
+        specs.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_shardings(strategy: Strategy, mesh, opt_shape) -> dict:
+    """Optimizer-state shardings derived from the parameter rules.
+
+    AdamW moments ('m/...', 'v/...') shard exactly like their parameter.
+    Adafactor row stats ('stats/<param>/vr') drop the parameter's last
+    spec entry; column stats ('vc') drop the second-to-last. Scalars
+    ('count') replicate.
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = []
+    for path, leaf in flat:
+        parts = [str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path]
+        if parts and parts[0] in ("m", "v"):
+            param_path = "/".join(parts[1:])
+            spec = strategy.param_spec(param_path, leaf.shape, mesh)
+        elif parts and parts[0] == "stats":
+            stat = parts[-1]
+            param_path = "/".join(parts[1:-1])
+            # derive from a pseudo parameter spec of matching rank + 1
+            pseudo = strategy.param_spec(param_path,
+                                         leaf.shape + (1,), mesh)
+            pparts = list(pseudo)
+            if stat == "vr":                    # param shape minus last
+                spec = P(*pparts[:-1])
+            elif stat == "vc":                  # minus second-to-last
+                spec = P(*(pparts[:-2] + pparts[-1:]))
+            else:                               # 'v' 1D stat
+                spec = P(*pparts[:-1])
+            spec = _drop_nondivisible(leaf.shape, _fit_spec_to_rank(
+                spec, leaf.ndim), mesh)
+        else:
+            spec = P(*([None] * leaf.ndim))
+        if not _divisible(leaf.shape, spec, mesh):
+            spec = _drop_nondivisible(leaf.shape, spec, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(strategy: Strategy, mesh, batch_shape) -> dict:
+    """Batch inputs: leading dim over (pod, data) when divisible."""
+    dp = _dp(mesh.axis_names)
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = P(dp, *([None] * (leaf.ndim - 1)))
+        if not _divisible(leaf.shape, spec, mesh):
+            # batch=1 long-context cells: replicate batch
+            spec = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(spec_for, batch_shape)
+
+
+def cache_shardings(strategy: Strategy, mesh, cache_shape) -> dict:
+    """KV caches: batch over dp, sequence dim over 'model' (stacked
+    layout (L, B, H, S, hd)); SSM states: batch over dp, heads over
+    'model' when divisible."""
+    dp = _dp(mesh.axis_names)
+
+    def spec_for(path, leaf):
+        names = [str(getattr(p, "key", "")) for p in path]
+        if "ssm" in names and leaf.ndim == 5:   # (L, B, H, P, N) states
+            spec = P(None, dp, "model", None, None)
+        elif leaf.ndim == 5:        # (L, B, H, S, hd) kv stack
+            spec = P(None, dp, None, "model", None)
+        elif leaf.ndim == 4 and "conv" in names:
+            spec = P(None, dp, None, "model")
+        elif leaf.ndim == 2:        # pos buffers (L, S)
+            spec = P(None, "model")
+        else:
+            spec = P(*([None] * leaf.ndim))
+        if not _divisible(leaf.shape, spec, mesh):
+            spec = _drop_nondivisible(leaf.shape, spec, mesh)
+        return NamedSharding(mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])

@@ -1,0 +1,227 @@
+"""train_step / serve_step builders + ShapeDtypeStruct input specs.
+
+These are the functions every launcher (train.py, serve.py, dryrun.py)
+jits. Everything is built from (ModelConfig, ShapeConfig, Strategy); the
+dry-run lowers them against input_specs() stand-ins with no allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as shd
+from repro.models import transformer as T
+from repro.models.loss import chunked_ce
+from repro.optim import get_optimizer
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# --------------------------------------------------------------------------
+
+N_PATCHES = 256          # vision stub: prefix patch embeddings
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Model inputs for one step of the given kind."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                 "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, N_PATCHES, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend == "vision":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, N_PATCHES, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a KV/state cache of length s
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_index": jax.ShapeDtypeStruct((), i32)}
+
+
+def params_spec(cfg: ModelConfig):
+    """Parameter shapes via eval_shape (no allocation)."""
+    rng = jax.random.PRNGKey(0)
+    return jax.eval_shape(functools.partial(T.init_params, cfg), rng)
+
+
+def cache_spec(cfg: ModelConfig, shape: ShapeConfig):
+    spec = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+    if cfg.family == "audio":
+        # cross K/V primed from a (B, frames, d) encode
+        def prime(params):
+            batch = {"frames": jnp.zeros(
+                (shape.global_batch, cfg.encoder_frames, cfg.d_model),
+                jnp.bfloat16)}
+            return T.prime_cross_cache(cfg, params, batch)
+        spec["cross"] = jax.eval_shape(prime, params_spec(cfg))
+    return spec
+
+
+def opt_state_spec(cfg: ModelConfig):
+    opt = get_optimizer(cfg.optimizer)
+    return jax.eval_shape(opt.init, params_spec(cfg))
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def default_microbatches(cfg: ModelConfig, shape: ShapeConfig,
+                         n_data: int, budget_bytes: float = 6e9) -> int:
+    """Gradient-accumulation factor sized so the remat-saved per-layer
+    residuals (n_layers x B_dev x S x d x 2B) fit the activation budget
+    (~6 GiB of the 16 GiB HBM; the rest is params/optimizer/workspace)."""
+    b_dev = max(shape.global_batch // n_data, 1)
+    resid = cfg.n_layers * b_dev * shape.seq_len * cfg.d_model * 2
+    if cfg.n_experts > 0:
+        budget_bytes *= 0.6         # MoE dispatch transients add overhead
+    micro = 1
+    while resid / micro > budget_bytes and micro < b_dev:
+        micro *= 2
+    return micro
+
+
+def make_train_step(cfg: ModelConfig, impl: str = "xla_chunked",
+                    lr: float = 3e-4, grad_compression: bool = False,
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 runs gradient accumulation: the global batch is
+    split on the (already data-sharded) batch dim and scanned, with f32
+    gradient accumulators sharded like the parameters.
+    """
+    opt = get_optimizer(cfg.optimizer)
+
+    def loss_fn(p, mb):
+        hidden = T.forward(cfg, p, mb, impl=impl)
+        return chunked_ce(hidden, p["lm_head"]["w"], mb["labels"])
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(a):
+                return a.reshape((microbatches,
+                                  a.shape[0] // microbatches)
+                                 + a.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            acc_dtype = jnp.dtype(cfg.grad_accum_dtype)
+
+            def acc(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                acc, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        if grad_compression:
+            from repro.optim.grad_compress import compress_decompress
+            grads = compress_decompress(grads)
+        params, opt_state, gnorm = opt.update(grads, opt_state, params,
+                                              lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, impl: str = "xla_chunked"):
+    def eval_step(params, batch):
+        hidden = T.forward(cfg, params, batch, impl=impl)
+        return chunked_ce(hidden, params["lm_head"]["w"],
+                          batch["labels"])
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: str = "xla_chunked"):
+    """Serving prefill: forward over the full prompt, return last-token
+    logits (cache construction omitted in the dry-run cell; decode cells
+    carry their own cache)."""
+    def prefill_step(params, batch):
+        hidden = T.forward(cfg, params, batch, impl=impl)
+        return T.logits_from_hidden(cfg, params, hidden[:, -1:])[:, 0]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, impl: str = "naive",
+                    return_logits: bool = True):
+    """One-token decode: (params, cache, batch) -> (out, cache).
+
+    return_logits=False emits greedy token ids instead: returning the
+    full (B, vocab) logits from a vocab-sharded head costs a ~100 MiB
+    all-gather per step on the 256k-vocab archs — the dominant decode
+    collective (EXPERIMENTS.md §Perf iteration 2). Production serving
+    returns sampled tokens; the argmax reduces across vocab shards in
+    O(B) bytes.
+    """
+    def serve_step(params, cache, batch):
+        logits, new_cache = T.decode_step(
+            cfg, params, cache, batch["tokens"], batch["cache_index"],
+            impl=impl)
+        if return_logits:
+            return logits, new_cache
+        return _sharded_greedy(cfg, logits), new_cache
+    return serve_step
+
+
+def _sharded_greedy(cfg, logits, n_blocks: int = 16):
+    """argmax over a vocab-sharded axis without gathering the logits:
+    a plain argmax makes the partitioner all-gather the full (B, V) f32
+    tensor (131 MiB/step on 256k vocabularies). Blocking the vocab dim
+    and constraining the block axis to 'model' keeps the inner argmax
+    shard-local; only the (B, n_blocks) maxima cross shards."""
+    from repro.launch import sharding as shd
+    b, v = logits.shape
+    if v % n_blocks:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    lb = logits.reshape(b, n_blocks, v // n_blocks)
+    lb = shd.constrain(lb, "logits_blocks")
+    loc_max = jnp.max(lb, -1)                       # (B, n_blocks)
+    loc_arg = jnp.argmax(lb, -1).astype(jnp.int32)
+    blk = jnp.argmax(loc_max, -1)                   # (B,)
+    inner = jnp.take_along_axis(loc_arg, blk[:, None], 1)[:, 0]
+    return (blk.astype(jnp.int32) * (v // n_blocks) + inner)
+
+
+def step_for_shape(cfg: ModelConfig, shape: ShapeConfig,
+                   impl: str = "xla_chunked", n_data: int = 16,
+                   microbatches: int | None = None):
+    """The jit target + its abstract arguments for a dry-run cell."""
+    if shape.kind == "train":
+        if microbatches is None:
+            microbatches = default_microbatches(cfg, shape, n_data)
+        step = make_train_step(cfg, impl=impl, microbatches=microbatches)
+        args = (params_spec(cfg), opt_state_spec(cfg),
+                input_specs(cfg, shape))
+        return step, args, ("params", "opt_state", "batch")
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, impl=impl)
+        args = (params_spec(cfg), input_specs(cfg, shape))
+        return step, args, ("params", "batch")
+    step = make_serve_step(cfg, return_logits=False)
+    args = (params_spec(cfg), cache_spec(cfg, shape),
+            input_specs(cfg, shape))
+    return step, args, ("params", "cache", "batch")

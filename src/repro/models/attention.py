@@ -1,0 +1,241 @@
+"""GQA attention with RoPE / M-RoPE, optional QKV bias, sliding window,
+KV-cache decode, and three implementations:
+
+  * 'naive'       — full (Lq, Lk) score matrix; smoke tests & tiny shapes.
+  * 'xla_chunked' — flash-style online-softmax double scan over Q and KV
+                    blocks in pure jnp; this is what the 32k/500k dry-run
+                    cells lower (bounded per-step score tiles, so
+                    memory_analysis stays honest).
+  * 'pallas'      — repro.kernels.flash_attention (TPU fast path).
+
+Decode attends a single new token against the cache; the cache sequence
+dim is sharded over the 'model' mesh axis (launch/sharding.py) — XLA
+turns the dynamic-update-slice + masked softmax into per-shard partial
+attention with a small cross-shard reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shd
+from repro.models.layers import (apply_mrope, apply_rope, dense,
+                                 dense_init)
+
+NEG = -1e30
+
+
+def attention_init(rng, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hd = cfg.head_dim
+    r = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(r[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wk": dense_init(r[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wv": dense_init(r[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias,
+                         dtype=dtype),
+        "wo": dense_init(r[3], cfg.n_heads * hd, d, dtype=dtype),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, l, _ = x.shape
+    return x.reshape(b, l, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, l, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, l, h * hd)
+
+
+def _apply_positions(q, k, cfg, positions):
+    if cfg.mrope:
+        if positions.ndim == 2:                  # text-only: t = h = w
+            positions = jnp.broadcast_to(
+                positions[:, None, :], (positions.shape[0], 3,
+                                        positions.shape[1]))
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _naive_attention(q, k, v, causal, window, q_offset=0):
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    lq, lk = q.shape[2], k.shape[2]
+    qi = jnp.arange(lq)[:, None] + q_offset
+    kj = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    s = jnp.where(mask[None, None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def _chunked_attention(q, k, v, causal, window, bq=512, bk=1024):
+    """Flash-style double scan in jnp (f32 accumulators)."""
+    b, h, lq, d = q.shape
+    lk = k.shape[2]
+    bq = min(bq, lq)
+    bk = min(bk, lk)
+    pad_q = (-lq) % bq
+    pad_k = (-lk) % bk
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (lq + pad_q) // bq
+    nk = (lk + pad_k) // bk
+    scale = d ** -0.5
+    q_offset = lk - lq
+    qs = q.reshape(b, h, nq, bq, d).transpose(2, 0, 1, 3, 4)
+    ks = k.reshape(b, h, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(b, h, nk, bk, d).transpose(2, 0, 1, 3, 4)
+
+    def q_block(_, qi_blk):
+        qi_idx, qb = qi_blk
+
+        # checkpoint: without it, AD saves every kv step's (bq, bk) score
+        # tile as a linearization residual — the full S^2 matrix, erasing
+        # the flash-attention memory win (whisper train: 16.8 GiB temp).
+        @functools.partial(jax.checkpoint, prevent_cse=False)
+        def kv_block(carry, kv):
+            m_prev, l_prev, acc = carry
+            kj_idx, kb, vb = kv
+            s = jnp.einsum("bhqd,bhkd->bhqk", qb, kb
+                           ).astype(jnp.float32) * scale
+            qpos = (qi_idx * bq + jnp.arange(bq)[:, None] + q_offset)
+            kpos = kj_idx * bk + jnp.arange(bk)[None, :]
+            mask = kpos < lk
+            if causal:
+                mask &= qpos >= kpos
+            if window is not None:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask[None, None], s, NEG)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, -1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, h, bq, 1), NEG, jnp.float32),
+                jnp.zeros((b, h, bq, 1), jnp.float32),
+                jnp.zeros((b, h, bq, d), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, init, (jnp.arange(nk), ks, vs))
+        out = (acc / jnp.maximum(l, 1e-30)).astype(qb.dtype)
+        return None, out
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, nq * bq, d)
+    return out[:, :, :lq]
+
+
+def attention_apply(params, x, cfg, positions, causal=True,
+                    impl="xla_chunked", kv_cache=None, cache_index=None,
+                    x_kv=None):
+    """x: (B, L, d). If kv_cache is given (decode), x is the single new
+    token (L=1) and cache_index its position. x_kv enables cross-attention
+    (whisper decoder): keys/values come from x_kv with no causal mask."""
+    hd = cfg.head_dim
+    q = _split_heads(dense(params["wq"], x), cfg.n_heads, hd)
+    src = x if x_kv is None else x_kv
+    k = _split_heads(dense(params["wk"], src), cfg.n_kv_heads, hd)
+    v = _split_heads(dense(params["wv"], src), cfg.n_kv_heads, hd)
+    q = shd.constrain(q, "attn_heads")
+    k = shd.constrain(k, "attn_kv_heads")
+    v = shd.constrain(v, "attn_kv_heads")
+
+    if x_kv is None:                 # self-attention: rotary on q and k
+        if kv_cache is not None:
+            # decode: one new token at position `cache_index` (scalar)
+            pos_q = jnp.full((x.shape[0], 1), cache_index, jnp.int32)
+            q, k = _apply_positions(q, k, cfg, pos_q)
+        else:
+            q, k = _apply_positions(q, k, cfg, positions)
+
+    if kv_cache is not None:
+        # cache: dict(k=(B, Hkv, S, hd), v=(B, Hkv, S, hd)[, pos=(S,)]).
+        # Keys are stored post-RoPE. A 'pos' buffer marks a rolling
+        # sliding-window cache: slot = index % S, validity from stored
+        # positions instead of slot order.
+        lk = kv_cache["k"].shape[2]
+        rolling = "pos" in kv_cache
+        slot = cache_index % lk if rolling else cache_index
+        ck = jax.lax.dynamic_update_slice(
+            kv_cache["k"], k.astype(kv_cache["k"].dtype), (0, 0, slot, 0))
+        cv = jax.lax.dynamic_update_slice(
+            kv_cache["v"], v.astype(kv_cache["v"].dtype), (0, 0, slot, 0))
+        ck = shd.constrain(ck, "kv_cache")
+        cv = shd.constrain(cv, "kv_cache")
+        new_cache = {"k": ck, "v": cv}
+        if rolling:
+            pos_buf = jax.lax.dynamic_update_slice(
+                kv_cache["pos"],
+                jnp.asarray(cache_index, jnp.int32)[None], (slot,))
+            new_cache["pos"] = pos_buf
+            valid = ((pos_buf >= 0) & (pos_buf <= cache_index))
+            if cfg.sliding_window is not None:
+                valid &= (cache_index - pos_buf) < cfg.sliding_window
+            valid = valid[None, None, None, :]
+        else:
+            kpos = jnp.arange(lk)[None, None, None, :]
+            valid = kpos <= slot
+            if cfg.sliding_window is not None:
+                valid &= (slot - kpos) < cfg.sliding_window
+        # GQA without materializing repeated K/V: jnp.repeat on the
+        # seq-sharded cache forced the SPMD partitioner into full
+        # rematerialization (replicated 68 GiB caches for qwen2-vl);
+        # grouping the query heads keeps the cache layout intact
+        # (EXPERIMENTS.md §Perf iteration 3).
+        rep = cfg.n_heads // cfg.n_kv_heads
+        b_, _, lq_, _ = q.shape
+        qg = q.reshape(b_, cfg.n_kv_heads, rep * lq_, hd)
+        s = jnp.einsum("bgqd,bgkd->bgqk", qg, ck
+                       ).astype(jnp.float32) * hd ** -0.5
+        s = jnp.where(valid, s, NEG)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bgqk,bgkd->bgqd", p, cv)
+        out = out.reshape(b_, cfg.n_heads, lq_, hd)
+        out = _merge_heads(out)
+        return dense(params["wo"], out), new_cache
+
+    rep = cfg.n_heads // cfg.n_kv_heads
+    if rep > 1:
+        k = jnp.repeat(k, rep, 1)
+        v = jnp.repeat(v, rep, 1)
+    window = cfg.sliding_window
+    if impl == "naive":
+        out = _naive_attention(q, k, v, causal, window)
+    elif impl == "pallas":
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = _chunked_attention(q, k, v, causal, window)
+    out = _merge_heads(out)
+    out = shd.constrain(out, "attn_out")
+    return dense(params["wo"], out), None
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int,
+                  dtype=jnp.bfloat16):
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((n_layers, batch, cfg.n_kv_heads, max_len, hd),
+                       dtype),
+        "v": jnp.zeros((n_layers, batch, cfg.n_kv_heads, max_len, hd),
+                       dtype),
+    }

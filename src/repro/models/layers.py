@@ -1,0 +1,149 @@
+"""Shared neural building blocks: norms, RoPE / M-RoPE, MLP variants,
+embeddings. All functions are pure; parameters are plain dict pytrees.
+
+Conventions: parameters stored in bf16 (configurable), math that needs
+range (normalization statistics, softmax, rotary) runs in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.bfloat16):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    return layernorm_init, layernorm
+
+
+def dense_init(rng, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.bfloat16, scale: float | None = None):
+    if scale is None:
+        scale = d_in ** -0.5
+    w = (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale
+         ).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# --- rotary embeddings -----------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (B, H, L, D); positions: (B, L) int32."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                       # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) \
+        * freqs[None, None, None, :]                         # (B,1,L,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray,
+                sections=(16, 24, 24), theta: float = 1e4) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head_dim/2 frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own
+    position stream. x: (B, H, L, D); positions: (B, 3, L)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(d, theta)                       # (half,)
+    # build per-slot positions by section
+    sec_id = np.concatenate([np.full(s, i) for i, s in
+                             enumerate(sections)])           # (half,)
+    sec_id = jnp.asarray(sec_id)
+    pos = positions.astype(jnp.float32)[:, sec_id, :]        # (B, half, L)
+    angles = jnp.einsum("bfl,f->bfl", pos, freqs)            # (B, half, L)
+    angles = jnp.moveaxis(angles, 1, -1)[:, None]            # (B,1,L,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- MLP variants ----------------------------------------------------------
+
+def mlp_init(rng, d: int, d_ff: int, kind: str, dtype=jnp.bfloat16):
+    r1, r2, r3 = jax.random.split(rng, 3)
+    if kind == "swiglu":
+        return {"gate": dense_init(r1, d, d_ff, dtype=dtype),
+                "up": dense_init(r2, d, d_ff, dtype=dtype),
+                "down": dense_init(r3, d_ff, d, dtype=dtype)}
+    return {"up": dense_init(r1, d, d_ff, dtype=dtype),
+            "down": dense_init(r2, d_ff, d, dtype=dtype)}
+
+
+def mlp_apply(params, x, kind: str, act_tag=None):
+    from repro.launch import sharding as shd
+    if kind == "swiglu":
+        h = jax.nn.silu(dense(params["gate"], x)) * dense(params["up"], x)
+    elif kind == "relu2":          # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(dense(params["up"], x)))
+    else:                          # gelu (whisper)
+        h = jax.nn.gelu(dense(params["up"], x))
+    h = shd.constrain(h, "ffn_hidden")
+    return dense(params["down"], h)
+
+
+def embedding_init(rng, vocab: int, d: int, dtype=jnp.bfloat16):
+    w = (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02
+         ).astype(dtype)
+    return {"w": w}
+
+
+def embed(params, tokens):
+    return jnp.take(params["w"], tokens, axis=0)
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    angle = pos / np.power(10000.0, dim / d)
+    out = np.zeros((length, d), np.float32)
+    out[:, 0::2] = np.sin(angle)
+    out[:, 1::2] = np.cos(angle)
+    return jnp.asarray(out)

@@ -1,0 +1,53 @@
+"""Sequence-chunked cross-entropy.
+
+Computing (B, S, V) logits at once costs hundreds of GiB for the 128k+
+vocabularies; instead we scan the sequence in chunks, computing each
+chunk's logits -> CE under jax.checkpoint, so only the (B, S, d) hidden
+states are resident and the backward pass recomputes per-chunk logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shd
+
+
+def chunked_ce(hidden: jnp.ndarray, head_w: jnp.ndarray,
+               labels: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """hidden: (B, S, d); head_w: (d, V); labels: (B, S) int32.
+    Returns mean token CE in f32."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)),
+                         constant_values=-1)
+    n = (s + pad) // chunk
+    hs = hidden.reshape(b, n, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h, y):
+        logits = h @ head_w                       # (B, C, V)
+        logits = shd.constrain(logits, "logits")
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        mask = y >= 0
+        y_safe = jnp.maximum(y, 0)
+        gold = jnp.take_along_axis(logits, y_safe[..., None],
+                                   axis=-1)[..., 0]
+        ce = jnp.where(mask, lse - gold, 0.0)
+        return ce.sum(), mask.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, y = xs
+        c_tot, c_cnt = chunk_loss(h, y)
+        return (tot + c_tot, cnt + c_cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hs, ls))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity,
+scatter/gather dispatch (TPU-friendly dense layout), optional dense
+SwiGLU residual branch (Arctic).
+
+Dispatch layout: tokens are scattered into an (E, C, d) buffer (C =
+capacity per expert), expert FFNs run as one batched einsum over E, and
+outputs are gathered back weighted by the router gate. Tokens beyond an
+expert's capacity are dropped for that expert (standard capacity-factor
+semantics); top-k gates are renormalized over the kept assignments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shd
+from repro.models.layers import dense_init
+
+
+def moe_init(rng, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    dff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    r = jax.random.split(rng, 5)
+    scale = d ** -0.5
+    p = {
+        "router": dense_init(r[0], d, e, dtype=jnp.float32),
+        "gate": (jax.random.normal(r[1], (e, d, dff), jnp.float32)
+                 * scale).astype(dtype),
+        "up": (jax.random.normal(r[2], (e, d, dff), jnp.float32)
+               * scale).astype(dtype),
+        "down": (jax.random.normal(r[3], (e, dff, d), jnp.float32)
+                 * dff ** -0.5).astype(dtype),
+    }
+    if cfg.moe_dense_residual:
+        from repro.models.layers import mlp_init
+        p["dense_residual"] = mlp_init(r[4], d, cfg.d_ff, "swiglu", dtype)
+    return p
+
+
+DISPATCH_CHUNK = 65536
+
+
+def moe_apply(params, x, cfg, capacity_factor: float | None = 1.25,
+              dispatch_chunk: int = DISPATCH_CHUNK):
+    """x: (B, L, d) -> (B, L, d).
+
+    capacity_factor=None runs DROPLESS (capacity = T*k): the decode path
+    uses it so serving logits are exact; training keeps the capacity
+    discipline that bounds the all-to-all buffers at scale.
+
+    Token counts beyond `dispatch_chunk` are dispatched in chunks under
+    a lax.scan: XLA SPMD replicates scatter/gather operands it cannot
+    shard (EXPERIMENTS.md §Perf iteration 2), so the chunk bounds that
+    replication at ~chunk x d bytes while loop-invariant expert weights
+    are hoisted out of the loop.
+    """
+    b, l, d = x.shape
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    t = b * l
+    chunk_l = max(dispatch_chunk // max(b, 1), 1)
+    if t > dispatch_chunk and l % chunk_l == 0 and l // chunk_l > 1:
+        # chunk along LENGTH, keeping the (dp-sharded) batch dim intact:
+        # flattening tokens first merged the sharded batch axis away and
+        # the scan inputs came back replicated (mixtral prefill temp
+        # regressed 26 -> 31 GiB; §Perf iteration 2, refuted variant).
+        n_chunks = l // chunk_l
+        xc = x.reshape(b, n_chunks, chunk_l, d).swapaxes(0, 1)
+
+        def body(_, xk):                        # xk: (b, chunk_l, d)
+            return None, _moe_dispatch(params, xk, cfg, capacity_factor)
+
+        _, yc = jax.lax.scan(body, None, xc)    # (n, b, chunk_l, d)
+        y = yc.swapaxes(0, 1).reshape(b, l, d)
+    else:
+        y = _moe_dispatch(params, x, cfg, capacity_factor)
+    if "dense_residual" in params:              # Arctic
+        from repro.models.layers import mlp_apply
+        y = y + mlp_apply(params["dense_residual"], x, "swiglu")
+    return y
+
+
+def _moe_dispatch(params, x, cfg, capacity_factor):
+    """Core dispatch over an (b, lc, d) slab; returns (b, lc, d)."""
+    b, lc, d = x.shape
+    t = b * lc
+    e = cfg.n_experts
+    k = cfg.experts_per_token
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"]["w"])   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                 # renorm
+
+    if capacity_factor is None or t * k <= 4096:
+        # dropless: exact routing. Capacity discipline only matters at
+        # scale (it bounds the dispatch buffers / all-to-all payload);
+        # for small token counts the bound is the buffer itself.
+        capacity = t * k
+    else:
+        capacity = max(-(-int(capacity_factor * k * t) // e), 1)
+    # position of each (token, slot) within its expert's buffer.
+    # every (T*k, ·) dispatch intermediate is sharding-constrained on the
+    # token dim: without this the SPMD partitioner replicated the
+    # gather/scatter operands and the mixtral train cell needed 218 GiB
+    # of temp per device (EXPERIMENTS.md §Perf iteration 1).
+    flat_e = expert_ids.reshape(-1)                             # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (T*k, E)
+    onehot = shd.constrain(onehot, "moe_routing")
+    pos_in_e = jnp.cumsum(onehot, axis=0) - 1                   # (T*k, E)
+    pos_in_e = shd.constrain(pos_in_e, "moe_routing")
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None],
+                              axis=1)[:, 0]                     # (T*k,)
+    keep = pos < capacity
+    tok_ids = jnp.repeat(jnp.arange(t), k)
+
+    # scatter tokens into (E, C, d)
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+    contrib = jnp.where(keep[:, None], xf[tok_ids], 0)
+    contrib = shd.constrain(contrib, "moe_tokens")
+    buf = buf.at[flat_e, safe_pos].add(contrib)
+    buf = shd.constrain(buf, "moe_buffer")
+
+    # expert FFN (SwiGLU), batched over experts
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    h = shd.constrain(h, "moe_hidden")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["down"])
+    out_buf = shd.constrain(out_buf, "moe_buffer")
+
+    # gather back, weighted by gates
+    gathered = out_buf[flat_e, safe_pos]                        # (T*k, d)
+    gathered = shd.constrain(gathered, "moe_tokens")
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = (gate_vals.reshape(-1)[:, None]).astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_ids].add(gathered * w)
+    y = shd.constrain(y, "moe_tokens")
+    return y.reshape(b, lc, d)
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, expert_ids: jnp.ndarray,
+                          e: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss (exposed for training drivers)."""
+    probs = jax.nn.softmax(logits, -1)
+    me = probs.mean(0)
+    ce = jax.nn.one_hot(expert_ids[:, 0], e).mean(0)
+    return e * jnp.sum(me * ce)

@@ -1,0 +1,176 @@
+"""Mamba2 (SSD) block: in-projection -> short causal conv -> SiLU ->
+selective state-space scan (chunked dual form) -> gated out-projection.
+
+The sequence scan has three interchangeable implementations:
+  * 'xla_chunked' — the SSD dual form as a lax.scan over chunks (same
+    math as the Pallas kernel; used by the dry-run),
+  * 'pallas'      — repro.kernels.ssd,
+  * plus the exact per-step recurrence for decode (stateful, O(1)/token).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shd
+from repro.models.layers import dense, dense_init
+
+CONV_WIDTH = 4
+
+
+def ssm_init(rng, cfg, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    nheads = d_inner // cfg.ssm_head_dim
+    r = jax.random.split(rng, 4)
+    conv_ch = d_inner + 2 * n          # conv over x, B, C streams
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (n), C (n), dt (nheads)]
+        "in_proj": dense_init(r[0], d, 2 * d_inner + 2 * n + nheads,
+                              dtype=dtype),
+        "conv_w": (jax.random.normal(r[1], (CONV_WIDTH, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)
+                         ).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "out_proj": dense_init(r[2], d_inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, L, C), w (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return out + b[None, None, :]
+
+
+def _ssd_chunked_xla(x, dt, a, bm, cm, dskip, chunk=128):
+    """SSD dual form in jnp (same math as kernels/ssd). x: (B,L,H,P)."""
+    bsz, l, h, p = x.shape
+    n = bm.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0)))
+    nc = (l + pad) // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p).transpose(1, 0, 3, 2, 4)
+    dtc = dt.reshape(bsz, nc, chunk, h).transpose(1, 0, 3, 2)
+    bc = bm.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+    cc = cm.reshape(bsz, nc, chunk, n).transpose(1, 0, 2, 3)
+
+    ii = jnp.arange(chunk)[:, None]
+    jj = jnp.arange(chunk)[None, :]
+
+    # checkpoint: keeps AD from saving each chunk's (Q, Q) decay matrix
+    # and score tile as linearization residuals (see attention.py note)
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def step(state, inp):
+        xq, dtq, bq, cq = inp      # (B,H,Q,P), (B,H,Q), (B,Q,N), (B,Q,N)
+        adt = a[None, :, None] * dtq                     # (B,H,Q) <= 0
+        cum = jnp.cumsum(adt, axis=-1)
+        total = cum[..., -1]
+        # mask BEFORE exp: for i < j the exponent is positive and can
+        # overflow; exp(inf)*0 poisons the where() gradient with NaNs
+        diff = cum[..., :, None] - cum[..., None, :]
+        diff = jnp.where(ii >= jj, diff, -jnp.inf)
+        m = jnp.exp(diff)
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq)      # (B,Q,Q)
+        xdt = xq * dtq[..., None]                        # (B,H,Q,P)
+        y = jnp.einsum("bhqk,bhkp->bhqp",
+                       scores[:, None] * m, xdt)
+        y += jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhpn->bhqp", cq, state)
+        w = jnp.exp(total[..., None] - cum)[..., None] * xdt
+        state = jnp.exp(total)[..., None, None] * state \
+            + jnp.einsum("bhqp,bqn->bhpn", w, bq)
+        return state, y
+
+    s0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (xc.astype(jnp.float32),
+                                    dtc.astype(jnp.float32),
+                                    bc.astype(jnp.float32),
+                                    cc.astype(jnp.float32)))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(bsz, l + pad, h, p)
+    y = y + dskip[None, None, :, None] * x.astype(jnp.float32)
+    return y[:, :l].astype(x.dtype)
+
+
+def ssm_apply(params, x, cfg, impl="xla_chunked", state=None):
+    """x: (B, L, d). If `state` is given (decode), L == 1 and the exact
+    recurrence updates {conv, ssm} state in O(1).
+    Returns (y, new_state)."""
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nheads = d_inner // hd
+
+    zxbcdt = dense(params["in_proj"], x)
+    z, xin, bm, cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n,
+                 2 * d_inner + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bm, cm], axis=-1)
+
+    a = -jnp.exp(params["a_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None])   # (B,L,H)
+
+    if state is not None:
+        # --- decode: exact recurrence, one step ---
+        conv_state = state["conv"]                 # (B, W-1, C)
+        window = jnp.concatenate([conv_state, conv_in], axis=1)
+        conv_out = jnp.einsum("bwc,wc->bc", window, params["conv_w"]) \
+            + params["conv_b"]
+        conv_out = jax.nn.silu(conv_out)[:, None]  # (B,1,C)
+        new_conv = window[:, 1:]
+        xs, bs, cs = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(-1, 1, nheads, hd)[:, 0]             # (B,H,P)
+        dt1 = dt[:, 0]                                       # (B,H)
+        decay = jnp.exp(a[None] * dt1)                       # (B,H)
+        inject = (dt1[..., None, None] * xh[..., None]
+                  * bs[:, 0][:, None, None, :])
+        s_new = state["ssm"] * decay[..., None, None] + inject
+        y = jnp.einsum("bhpn,bn->bhp", s_new, cs[:, 0])
+        y = y + params["d_skip"][None, :, None] * xh
+        y = y.reshape(-1, 1, d_inner)
+        y = y * jax.nn.silu(z)
+        out = dense(params["out_proj"], y.astype(x.dtype))
+        return out, {"conv": new_conv, "ssm": s_new}
+
+    conv_out = jax.nn.silu(_causal_conv(conv_in, params["conv_w"],
+                                        params["conv_b"]))
+    xs, bs, cs = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    bsz, l, _ = xs.shape
+    xh = xs.reshape(bsz, l, nheads, hd)
+    xh = shd.constrain(xh, "ssm_heads")
+    if impl == "pallas":
+        from repro.kernels.ssd.ops import ssd
+        y = ssd(xh, dt, a, bs, cs, params["d_skip"])
+    else:
+        y = _ssd_chunked_xla(xh, dt, a, bs, cs, params["d_skip"])
+    y = y.reshape(bsz, l, d_inner)
+    y = y * jax.nn.silu(z)
+    return dense(params["out_proj"], y.astype(x.dtype)), None
+
+
+def init_ssm_state(cfg, batch: int, n_layers: int, dtype=jnp.float32):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((n_layers, batch, CONV_WIDTH - 1, conv_ch),
+                          dtype),
+        "ssm": jnp.zeros((n_layers, batch, nheads, cfg.ssm_head_dim, n),
+                         dtype),
+    }

@@ -1,0 +1,394 @@
+"""Model assembly for all 10 assigned architectures.
+
+One parameter pytree + three pure entry points per model:
+
+  * init_params(cfg, rng)            — real weights (smoke tests) or via
+                                       jax.eval_shape (dry-run).
+  * forward(cfg, params, batch)      — teacher-forced hidden states
+                                       (B, S, d); combine with
+                                       loss.chunked_ce for training.
+  * decode_step(cfg, params, cache, tokens, index)
+                                     — one-token serve step with caches.
+
+Homogeneous layer stacks are lax.scan'd with per-layer jax.checkpoint
+(remat), so HLO size and activation memory are O(1) in depth. The hybrid
+(zamba2) model scans groups of `attn_every` SSM layers with a weight-
+shared attention block between groups; whisper is enc-dec.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import sharding as shd
+from repro.models import layers as L
+from repro.models.attention import (attention_apply, attention_init)
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import init_ssm_state, ssm_apply, ssm_init
+
+
+# --------------------------------------------------------------------------
+# per-layer blocks
+# --------------------------------------------------------------------------
+
+def _block_init(rng, cfg, dtype=jnp.bfloat16):
+    ninit, _ = L.make_norm(cfg.norm)
+    r = jax.random.split(rng, 4)
+    if cfg.family in ("ssm", "hybrid"):     # hybrid: SSM backbone layers
+        return {"norm": ninit(cfg.d_model, dtype),
+                "ssm": ssm_init(r[0], cfg, dtype)}
+    p = {"norm1": ninit(cfg.d_model, dtype),
+         "attn": attention_init(r[0], cfg, dtype),
+         "norm2": ninit(cfg.d_model, dtype)}
+    if cfg.n_experts > 0:
+        p["moe"] = moe_init(r[1], cfg, dtype)
+    else:
+        p["mlp"] = L.mlp_init(r[1], cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    return p
+
+
+def _block_apply(params, x, cfg, positions, impl, causal=True):
+    _, norm = L.make_norm(cfg.norm)
+    if cfg.family in ("ssm", "hybrid"):
+        h, _ = ssm_apply(params["ssm"], norm(params["norm"], x), cfg,
+                         impl="xla_chunked" if impl == "naive" else impl)
+        return x + h
+    a, _ = attention_apply(params["attn"], norm(params["norm1"], x), cfg,
+                           positions, causal=causal, impl=impl)
+    x = x + a
+    if cfg.n_experts > 0:
+        x = x + moe_apply(params["moe"], norm(params["norm2"], x), cfg)
+    else:
+        x = x + L.mlp_apply(params["mlp"], norm(params["norm2"], x),
+                            cfg.mlp)
+    return shd.constrain(x, "residual")
+
+
+def _block_decode(params, x, cfg, cache, index, impl):
+    _, norm = L.make_norm(cfg.norm)
+    if cfg.family in ("ssm", "hybrid"):
+        h, new_state = ssm_apply(params["ssm"], norm(params["norm"], x),
+                                 cfg, state=cache)
+        return x + h, new_state
+    a, new_cache = attention_apply(
+        params["attn"], norm(params["norm1"], x), cfg, None,
+        kv_cache=cache, cache_index=index)
+    x = x + a
+    if cfg.n_experts > 0:
+        # dropless MoE in decode: serving logits must be exact
+        x = x + moe_apply(params["moe"], norm(params["norm2"], x), cfg,
+                          capacity_factor=None)
+    else:
+        x = x + L.mlp_apply(params["mlp"], norm(params["norm2"], x),
+                            cfg.mlp)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+def _stack_init(rng, n, init_fn):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def init_params(cfg, rng, dtype=jnp.bfloat16):
+    ninit, _ = L.make_norm(cfg.norm)
+    r = jax.random.split(rng, 8)
+    params = {
+        "embed": L.embedding_init(r[0], cfg.vocab_size, cfg.d_model,
+                                  dtype),
+        "layers": _stack_init(r[1], cfg.n_layers,
+                              lambda k: _block_init(k, cfg, dtype)),
+        "final_norm": ninit(cfg.d_model, dtype),
+        "lm_head": L.dense_init(r[2], cfg.d_model, cfg.vocab_size,
+                                dtype=dtype),
+    }
+    if cfg.family == "hybrid":
+        params["shared_attn"] = attention_init(r[3], cfg, dtype)
+        params["shared_norm"] = ninit(cfg.d_model, dtype)
+    if cfg.family == "audio":
+        enc_cfg = cfg.encoder_cfg()
+        params["enc_layers"] = _stack_init(
+            r[4], cfg.encoder_layers,
+            lambda k: _block_init(k, enc_cfg, dtype))
+        params["enc_norm"] = ninit(cfg.d_model, dtype)
+        params["cross_layers"] = _stack_init(
+            r[5], cfg.n_layers,
+            lambda k: {"norm": ninit(cfg.d_model, dtype),
+                       "attn": attention_init(k, cfg, dtype)})
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (teacher-forced)
+# --------------------------------------------------------------------------
+
+def _scan_layers(stacked, x, fn, remat=True):
+    def body(carry, lp):
+        return fn(carry, lp), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    out, _ = jax.lax.scan(body, x, stacked)
+    return out
+
+
+def forward(cfg, params, batch, impl="xla_chunked"):
+    """Returns final hidden states (B, S, d_model)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))
+    x = shd.constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    if cfg.family == "audio":
+        enc = _encode(cfg, params, batch)
+        return _decode_stack_ed(cfg, params, x, positions, enc, impl)
+
+    if cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+
+        def group_fn(x, gparams):
+            x = _scan_layers(gparams, x,
+                             lambda h, lp: _block_apply(
+                                 lp, h, cfg, positions, impl),
+                             remat=cfg.remat)
+            _, norm = L.make_norm(cfg.norm)
+            a, _ = attention_apply(
+                params["shared_attn"], norm(params["shared_norm"], x),
+                cfg, positions, causal=True, impl=impl)
+            return x + a
+
+        def gbody(carry, gp):
+            return group_fn(carry, gp), None
+        x, _ = jax.lax.scan(gbody, x, grouped)
+    else:
+        x = _scan_layers(params["layers"], x,
+                         lambda h, lp: _block_apply(
+                             lp, h, cfg, positions, impl),
+                         remat=cfg.remat)
+
+    _, norm = L.make_norm(cfg.norm)
+    return norm(params["final_norm"], x)
+
+
+def _encode(cfg, params, batch):
+    """Whisper encoder over precomputed conv-frontend frames."""
+    frames = batch["frames"]                       # (B, F, d) stub
+    b, f, _ = frames.shape
+    pos_tab = L.sinusoidal_positions(f, cfg.d_model)
+    x = frames + pos_tab[None].astype(frames.dtype)
+    enc_cfg = cfg.encoder_cfg()
+    positions = jnp.broadcast_to(jnp.arange(f)[None], (b, f))
+    x = _scan_layers(params["enc_layers"], x,
+                     lambda h, lp: _block_apply(
+                         lp, h, enc_cfg, positions, "xla_chunked",
+                         causal=False),
+                     remat=cfg.remat)
+    _, norm = L.make_norm(cfg.norm)
+    return norm(params["enc_norm"], x)
+
+
+def _decode_stack_ed(cfg, params, x, positions, enc, impl):
+    """Whisper decoder: self-attention + cross-attention + MLP."""
+    _, norm = L.make_norm(cfg.norm)
+
+    def layer(h, lp):
+        blk, cross = lp
+        a, _ = attention_apply(blk["attn"], norm(blk["norm1"], h), cfg,
+                               positions, causal=True, impl=impl)
+        h = h + a
+        c, _ = attention_apply(cross["attn"], norm(cross["norm"], h),
+                               cfg, None, causal=False, impl=impl,
+                               x_kv=enc)
+        h = h + c
+        h = h + L.mlp_apply(blk["mlp"], norm(blk["norm2"], h), cfg.mlp)
+        return h
+
+    def body(carry, lp):
+        return layer(carry, lp), None
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, (params["layers"],
+                                  params["cross_layers"]))
+    return norm(params["final_norm"], x)
+
+
+def logits_from_hidden(cfg, params, hidden):
+    out = hidden @ params["lm_head"]["w"]
+    return shd.constrain(out, "logits")
+
+
+# --------------------------------------------------------------------------
+# decode (serving)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache pytree for one-token decode at kv length `max_len`."""
+    cache = {}
+    hd = cfg.head_dim
+
+    def kv(n_layers, length, heads):
+        c = {"k": jnp.zeros((n_layers, batch, heads, length, hd), dtype),
+             "v": jnp.zeros((n_layers, batch, heads, length, hd), dtype)}
+        if cfg.sliding_window is not None and length >= cfg.sliding_window:
+            c["pos"] = jnp.full((n_layers, length), -1, jnp.int32)
+        return c
+
+    if cfg.family == "ssm":
+        cache["ssm"] = init_ssm_state(cfg, batch, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        cache["ssm"] = init_ssm_state(cfg, batch, cfg.n_layers)
+        cache["shared_kv"] = kv(groups, max_len, cfg.n_kv_heads)
+    elif cfg.family == "audio":
+        cache["kv"] = kv(cfg.n_layers, max_len, cfg.n_kv_heads)
+        cache["cross"] = None        # filled by prime_cross_cache
+    else:
+        length = max_len if cfg.sliding_window is None else \
+            min(max_len, cfg.sliding_window)
+        cache["kv"] = kv(cfg.n_layers, length, cfg.n_kv_heads)
+    return cache
+
+
+def prime_cross_cache(cfg, params, batch_inputs):
+    """Whisper: run the encoder once, precompute per-layer cross K/V."""
+    enc = _encode(cfg, params, batch_inputs)        # (B, F, d)
+
+    def layer_kv(cross_lp):
+        k = L.dense(cross_lp["attn"]["wk"], enc)
+        v = L.dense(cross_lp["attn"]["wv"], enc)
+        b, f, _ = k.shape
+        k = k.reshape(b, f, cfg.n_kv_heads, cfg.head_dim
+                      ).transpose(0, 2, 1, 3)
+        v = v.reshape(b, f, cfg.n_kv_heads, cfg.head_dim
+                      ).transpose(0, 2, 1, 3)
+        return {"k": k, "v": v}
+
+    return jax.vmap(layer_kv)(params["cross_layers"])
+
+
+def decode_step(cfg, params, cache, tokens, index, impl="naive"):
+    """tokens: (B, 1) int32; index: scalar int32 position.
+    Returns (logits (B, vocab), new_cache)."""
+    x = L.embed(params["embed"], tokens)
+    _, norm = L.make_norm(cfg.norm)
+
+    if cfg.family == "ssm":
+        def body(carry, inp):
+            lp, st = inp
+            h, new_st = _block_decode(lp, carry, cfg, st, index, impl)
+            return h, new_st
+        x, new_ssm = jax.lax.scan(body, x, (params["layers"],
+                                            cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        groups = cfg.n_layers // cfg.attn_every
+        grouped = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]),
+            params["layers"])
+        g_ssm = jax.tree.map(
+            lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]),
+            cache["ssm"])
+
+        def gbody(carry, inp):
+            gp, st, skv = inp
+
+            def body(c2, inp2):
+                lp, st2 = inp2
+                h, new_st = _block_decode(lp, c2, cfg, st2, index, impl)
+                return h, new_st
+            h, new_st = jax.lax.scan(body, carry, (gp, st))
+            a, new_skv = attention_apply(
+                params["shared_attn"], norm(params["shared_norm"], h),
+                cfg, None, kv_cache=skv, cache_index=index)
+            return h + a, (new_st, new_skv)
+
+        x, (new_ssm, new_skv) = jax.lax.scan(
+            gbody, x, (grouped, g_ssm, cache["shared_kv"]))
+        new_ssm = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_ssm)
+        new_cache = {"ssm": new_ssm, "shared_kv": new_skv}
+    elif cfg.family == "audio":
+        def body(carry, inp):
+            lp, cross_lp, kv, cross_kv = inp
+            a, new_kv = attention_apply(
+                lp["attn"], norm(lp["norm1"], carry), cfg, None,
+                kv_cache=kv, cache_index=index)
+            h = carry + a
+            # cross-attention over primed encoder K/V (no update)
+            c = _cross_decode(cfg, cross_lp, norm(cross_lp["norm"], h),
+                              cross_kv)
+            h = h + c
+            h = h + L.mlp_apply(lp["mlp"], norm(lp["norm2"], h), cfg.mlp)
+            return h, new_kv
+        x, new_kv = jax.lax.scan(
+            body, x, (params["layers"], params["cross_layers"],
+                      cache["kv"], cache["cross"]))
+        new_cache = {"kv": new_kv, "cross": cache["cross"]}
+    else:
+        # fori_loop with indexed in-place cache updates instead of a
+        # scan over stacked cache leaves: scan ys forced a second copy
+        # of the (donated) KV cache (qwen2-vl decode: +5 GiB/device;
+        # EXPERIMENTS.md §Perf iteration 3). XLA aliases while-loop
+        # carries, so dynamic_update_index_in_dim stays in place.
+        has_pos = "pos" in cache["kv"]
+
+        def body(li, carry):
+            h, ck, cv, cpos = carry
+            lp = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, li, 0, keepdims=False), params["layers"])
+            kv = {"k": jax.lax.dynamic_index_in_dim(ck, li, 0, False),
+                  "v": jax.lax.dynamic_index_in_dim(cv, li, 0, False)}
+            if has_pos:
+                kv["pos"] = jax.lax.dynamic_index_in_dim(
+                    cpos, li, 0, False)
+            h, new_kv = _block_decode(lp, h, cfg, kv, index, impl)
+            ck = jax.lax.dynamic_update_index_in_dim(
+                ck, new_kv["k"], li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(
+                cv, new_kv["v"], li, 0)
+            if has_pos:
+                cpos = jax.lax.dynamic_update_index_in_dim(
+                    cpos, new_kv["pos"], li, 0)
+            return (h, ck, cv, cpos)
+
+        cpos0 = cache["kv"].get("pos",
+                                jnp.zeros((cfg.n_layers, 1), jnp.int32))
+        x, ck, cv, cpos = jax.lax.fori_loop(
+            0, cfg.n_layers, body,
+            (x, cache["kv"]["k"], cache["kv"]["v"], cpos0))
+        new_kv = {"k": ck, "v": cv}
+        if has_pos:
+            new_kv["pos"] = cpos
+        new_cache = {"kv": new_kv}
+
+    x = norm(params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, new_cache
+
+
+def _cross_decode(cfg, cross_lp, x, cross_kv):
+    """Single-query cross-attention against fixed encoder K/V."""
+    hd = cfg.head_dim
+    b = x.shape[0]
+    q = L.dense(cross_lp["attn"]["wq"], x).reshape(
+        b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    rep = cfg.n_heads // cfg.n_kv_heads
+    k = jnp.repeat(cross_kv["k"], rep, 1)
+    v = jnp.repeat(cross_kv["v"], rep, 1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) \
+        * hd ** -0.5
+    p = jax.nn.softmax(s, -1).astype(q.dtype)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, cfg.n_heads * hd)
+    return L.dense(cross_lp["attn"]["wo"], o)

@@ -1,0 +1,11 @@
+from repro.optim.adafactor import adafactor  # noqa: F401
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,57 @@
+"""int8 gradient compression with error feedback (distributed-
+optimization trick for cross-pod gradient reduction).
+
+Per-tensor symmetric quantization to int8 before the (pod-axis)
+all-reduce, dequantization after; the quantization residual is carried
+in an error-feedback buffer so the compression is unbiased over time.
+
+`compress_decompress` is the stateless variant used inside jit (models
+the precision loss; XLA still all-reduces the dequantized values —
+on real hardware the int8 reduction halves cross-pod DCN bytes 4x).
+`make_error_feedback` provides the stateful production form.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quant(g):
+    g32 = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads):
+    def f(g):
+        q, s = _quant(g)
+        return _dequant(q, s).astype(g.dtype)
+    return jax.tree.map(f, grads)
+
+
+def make_error_feedback():
+    """Returns (init, apply): apply(grads, err) -> (compressed, new_err)
+    with error feedback: e' = g + e - Q(g + e)."""
+    def init(params):
+        return jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(grads, err):
+        def f(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q, s = _quant(corrected)
+            deq = _dequant(q, s)
+            return deq.astype(g.dtype), corrected - deq
+        out = jax.tree.map(f, grads, err)
+        comp = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda o: o[1], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return comp, new_err
+
+    return init, apply

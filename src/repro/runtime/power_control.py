@@ -1,0 +1,108 @@
+"""Power-control integration: the paper's per-VM capping controller
+governing training/serving jobs (the 'VMs' of this framework).
+
+Each job registers with a JobPowerAgent carrying its predicted
+criticality tag (from core.predictor) and utilization. The agent:
+
+  * reports job power to the chassis model (core.power_model) from the
+    measured step-time duty cycle;
+  * receives frequency caps from the per-VM controller (core.capping)
+    when the chassis manager raises an alert;
+  * maps the DVFS frequency to a throughput multiplier: the training
+    loop sleeps (1/f - 1) x step_time, exactly how a p-state cap
+    manifests to a compute-bound job.
+
+Criticality-aware semantics from the paper: user-facing (serving) jobs
+are in the high-priority core group and are never throttled by the
+in-band path; batch (training) jobs absorb the frequency cuts; RAPL
+remains the hardware backstop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.capping import (ChassisManager, PerVMController,
+                                RaplController, ServerCapState)
+from repro.core.power_model import F_MAX, ServerPowerModel
+
+
+@dataclass
+class JobSpec:
+    name: str
+    cores: int
+    user_facing: bool                  # prediction from core.predictor
+    p95_util: float                    # predicted bucket midpoint
+
+
+@dataclass
+class ChassisPowerSim:
+    """One simulated chassis hosting framework jobs on its servers."""
+    budget_w: float
+    model: ServerPowerModel = field(default_factory=ServerPowerModel)
+    jobs: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.state = None
+        self.controller = None
+        self.rapl = None
+        self.manager = ChassisManager(self.budget_w)
+
+    def register(self, job: JobSpec):
+        self.jobs.append(job)
+        n_cores = sum(j.cores for j in self.jobs)
+        uf_mask = np.concatenate([
+            np.full(j.cores, j.user_facing) for j in self.jobs])
+        self.state = ServerCapState(n_cores, uf_mask)
+        self.controller = PerVMController(self.model, self.budget_w)
+        self.rapl = RaplController(self.model, self.budget_w)
+
+    def job_slice(self, name: str) -> slice:
+        start = 0
+        for j in self.jobs:
+            if j.name == name:
+                return slice(start, start + j.cores)
+            start += j.cores
+        raise KeyError(name)
+
+    def step(self, utils: np.ndarray) -> dict:
+        """One 200 ms control step; utils = per-core utilization."""
+        power = self.model.power(utils, self.state.freq)
+        alert = self.manager.poll(power)
+        p = self.controller.step(self.state, utils, alert)
+        if p > self.controller.budget:
+            p = self.rapl.step(self.state, utils)
+        return {"power_w": p, "alert": alert,
+                "freq": self.state.freq.copy()}
+
+    def job_frequency(self, name: str) -> float:
+        return float(self.state.freq[self.job_slice(name)].mean())
+
+
+class ThrottledLoop:
+    """Wraps a training step with the DVFS-cap duty cycle: at frequency
+    f the job runs at f x nominal throughput, i.e. each step stretches
+    by 1/f. (On real hardware the p-state does this in silicon; here we
+    make the effect visible to wall-clock metrics.)"""
+
+    def __init__(self, chassis: ChassisPowerSim, job: str,
+                 utilization: float = 1.0):
+        self.chassis = chassis
+        self.job = job
+        self.utilization = utilization
+
+    def run_step(self, fn, *args):
+        t0 = time.time()
+        out = fn(*args)
+        dt = time.time() - t0
+        utils = np.zeros(self.chassis.state.n_cores)
+        for j in self.chassis.jobs:
+            utils[self.chassis.job_slice(j.name)] = \
+                self.utilization if j.name == self.job else j.p95_util
+        self.chassis.step(utils)
+        f = self.chassis.job_frequency(self.job)
+        if f < F_MAX:
+            time.sleep(dt * (F_MAX / f - 1.0))
+        return out, {"freq": f, "step_s": dt}

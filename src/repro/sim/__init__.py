@@ -1,0 +1,2 @@
+"""Datacenter simulation substrate: workload/telemetry generation, cluster
+scheduler simulation, and chassis power dynamics."""

@@ -1,0 +1,171 @@
+"""Cluster VM-scheduler simulation (paper §IV-E, Fig. 7).
+
+Event-driven 30-day simulation of a 20-rack x 3-chassis x 12-blade
+cluster. Like Azure's simulator, it runs the *actual* placement code
+(`repro.core.placement`) for every arrival; our only extension is the
+simulated prediction channel (the paper's only extension was simulating
+calls to the ML system).
+
+Reported metrics (paper's four):
+  * deployment failure rate,
+  * average empty-server ratio,
+  * std-dev across chassis of the chassis score 1 - rho_peak/rho_max,
+  * std-dev across servers of the server score .5(1+(gNUF-gUF)/N).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.placement import ClusterState, SchedulerPolicy
+from repro.sim import telemetry as tel
+
+CORES_PER_BLADE = 40            # Table I: 2 x 20 cores
+BLADES_PER_CHASSIS = 12
+CHASSIS_PER_RACK = 3
+RACKS = 20
+
+
+@dataclass(frozen=True)
+class PredictionChannel:
+    """Simulated ML-system responses (Table III operating point).
+
+    mode:
+      'oracle'    — perfect workload type and P95 bucket;
+      'ml'        — criticality flipped w.p. its measured error, P95
+                    bucket resampled w.p. its measured error; low-
+                    confidence queries fall back to conservative values
+                    (UF, bucket 4), as the real scheduler does;
+      'crit_only' — criticality as 'ml', utilization assumed 100 %
+                    (Fig 7 orange bars);
+      'none'      — no predictions (NoRule baseline ignores them).
+    """
+    mode: str = "ml"
+    crit_recall_uf: float = 0.99     # P(pred UF | true UF)   — Table III
+    crit_recall_nuf: float = 0.69    # P(pred NUF | true NUF)
+    p95_accuracy: float = 0.84
+    p95_high_conf: float = 0.73
+
+    def predict(self, rng, true_uf: bool, true_p95: float):
+        if self.mode == "oracle":
+            return true_uf, true_p95
+        if true_uf:
+            uf = rng.random() < self.crit_recall_uf
+        else:
+            uf = not (rng.random() < self.crit_recall_nuf)
+        if self.mode == "crit_only":
+            return uf, 1.0
+        if rng.random() > self.p95_high_conf:
+            return uf, 1.0                       # low confidence -> 100 %
+        if rng.random() < self.p95_accuracy:
+            p95 = true_p95
+        else:
+            p95 = float(np.clip(true_p95 + rng.choice([-0.25, 0.25]),
+                                0.125, 0.875))
+        return uf, p95
+
+
+@dataclass
+class SimMetrics:
+    failure_rate: float
+    empty_server_ratio: float
+    chassis_score_std: float
+    server_score_std: float
+    placements: int
+    failures: int
+
+
+def _sample_vm(rng):
+    cores = int(rng.choice(tel.CORE_SIZES, p=tel.CORE_PROBS))
+    life_h = tel._sample_bucket(rng, tel.LIFETIME_BUCKETS,
+                                tel.LIFETIME_PROBS)
+    return cores, life_h
+
+
+def _sample_deployment_size(rng):
+    return int(tel._sample_bucket(rng, tel.DEPLOY_SIZE_BUCKETS,
+                                  tel.DEPLOY_SIZE_PROBS))
+
+
+def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
+             days: float = 30.0, seed: int = 0,
+             deployments_per_hour: float = 8.0,
+             target_uf_core_ratio: float = 0.40,
+             sample_every_h: float = 2.0) -> SimMetrics:
+    """Run the 30-day simulation. Table I parameters throughout:
+    UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
+    (bucket 2)."""
+    rng = np.random.default_rng(seed)
+    n_servers = RACKS * CHASSIS_PER_RACK * BLADES_PER_CHASSIS
+    chassis_of = np.arange(n_servers) // BLADES_PER_CHASSIS
+    state = ClusterState(
+        n_servers=n_servers, cores_per_server=CORES_PER_BLADE,
+        chassis_of_server=chassis_of,
+        n_chassis=n_servers // BLADES_PER_CHASSIS)
+
+    departures: list = []        # heap of (time, vm_token)
+    vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
+    token = 0
+    placements = failures = 0
+    t = 0.0
+    next_sample = 0.0
+    empty_samples, chassis_stds, server_stds = [], [], []
+    horizon = days * 24.0
+
+    while t < horizon:
+        t += rng.exponential(1.0 / deployments_per_hour)
+        # departures first
+        while departures and departures[0][0] <= t:
+            _, tok = heapq.heappop(departures)
+            srv, cores, p95e, ufp = vm_live.pop(tok)
+            state.remove(srv, cores, p95e, ufp)
+        while next_sample <= t and next_sample < horizon:
+            busy = state.free_cores < CORES_PER_BLADE
+            empty_samples.append(1.0 - busy.mean())
+            chassis_stds.append(float(np.std(state.score_chassis())))
+            server_stds.append(float(np.std(state.score_server(True))))
+            next_sample += sample_every_h
+        if t >= horizon:
+            break
+        for _ in range(_sample_deployment_size(rng)):
+            cores, life_h = _sample_vm(rng)
+            true_uf = rng.random() < target_uf_core_ratio
+            true_p95 = float(np.clip(
+                rng.normal(0.65 if true_uf else 0.44, 0.12), 0.05, 1.0))
+            uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
+            p95_eff = policy.effective_p95(p95_pred)
+            srv = policy.choose(state, cores, uf_pred)
+            placements += 1
+            if srv is None:
+                failures += 1
+                continue
+            state.place(srv, cores, p95_eff, uf_pred)
+            vm_live[token] = (srv, cores, p95_eff, uf_pred)
+            heapq.heappush(departures, (t + life_h, token))
+            token += 1
+
+    return SimMetrics(
+        failure_rate=failures / max(placements, 1),
+        empty_server_ratio=float(np.mean(empty_samples)),
+        chassis_score_std=float(np.mean(chassis_stds)),
+        server_score_std=float(np.mean(server_stds)),
+        placements=placements, failures=failures)
+
+
+def fig7_sweep(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), days: float = 30.0,
+               seed: int = 0, deployments_per_hour: float = 8.0) -> dict:
+    """Fig 7: NoRule baseline + {ml, oracle, crit_only} x alpha sweep."""
+    out = {"NoRule": simulate(
+        SchedulerPolicy(use_power_rule=False), PredictionChannel("none"),
+        days=days, seed=seed, deployments_per_hour=deployments_per_hour)}
+    for mode in ("ml", "oracle", "crit_only"):
+        for a in alphas:
+            pol = SchedulerPolicy(
+                alpha=a,
+                use_utilization_predictions=(mode != "crit_only"))
+            out[f"{mode}:alpha={a}"] = simulate(
+                pol, PredictionChannel(mode), days=days, seed=seed,
+                deployments_per_hour=deployments_per_hour)
+    return out

@@ -1,0 +1,13 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any user XLA_FLAGS out of the way.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")

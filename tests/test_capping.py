@@ -1,0 +1,114 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.capping import (ALERT_MARGIN_W, LIFT_AFTER_S,
+                                POLL_INTERVAL_S, ChassisManager,
+                                PerVMController, RaplController,
+                                ServerCapState)
+from repro.core.power_model import (F_MAX, F_MIN, ServerPowerModel,
+                                    dyn_scale, freq_power_curve)
+
+
+def make(n_uf=20, n_nuf=20, budget=230.0):
+    model = ServerPowerModel()
+    state = ServerCapState(
+        n_uf + n_nuf,
+        np.concatenate([np.ones(n_uf, bool), np.zeros(n_nuf, bool)]))
+    return model, state, PerVMController(model, budget)
+
+
+def test_power_model_calibration():
+    m = ServerPowerModel()
+    assert m.power_uniform(0.0, 1.0) == pytest.approx(112.0)
+    assert m.power_uniform(1.0, 1.0) == pytest.approx(310.0)
+    assert m.power_uniform(0.0, 0.5) == pytest.approx(111.0)
+    assert m.power_uniform(1.0, 0.5) == pytest.approx(169.0)
+
+
+def test_freq_power_curve_monotone():
+    freqs, watts = freq_power_curve(ServerPowerModel(), util=0.6)
+    assert (np.diff(watts) < 0).all()          # descending freq table
+
+
+def test_alert_drops_nuf_to_min_pstate():
+    model, state, ctrl = make()
+    util = np.concatenate([np.full(20, 0.6), np.ones(20)])
+    ctrl.step(state, util, alert=True)
+    assert state.capping
+    assert (state.freq[20:] == F_MIN).all()
+    assert (state.freq[:20] == F_MAX).all()    # UF untouched
+
+
+def test_in_band_never_throttles_uf_cores():
+    model, state, ctrl = make(budget=215.0)
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        util = np.concatenate([rng.uniform(0.4, 1.0, 20), np.ones(20)])
+        ctrl.step(state, util, alert=True)
+        assert (state.freq[:20] == F_MAX).all()
+
+
+def test_feedback_converges_below_target():
+    model, state, ctrl = make(budget=240.0)
+    util = np.concatenate([np.full(20, 0.55), np.ones(20)])
+    p = None
+    for _ in range(600):
+        p = ctrl.step(state, util, alert=True)
+    assert p < ctrl.target
+    # and the controller recovered some NUF frequency from the floor
+    assert state.freq[20:].max() > F_MIN
+
+
+def test_cap_lifts_after_quiet_period():
+    # power at (0.6 UF, 1.0 NUF) utils ~= 270 W > target 255 => capping
+    model, state, ctrl = make(budget=260.0)
+    util = np.concatenate([np.full(20, 0.6), np.ones(20)])
+    ctrl.step(state, util, alert=True)
+    assert state.capping
+    # load drops; alert clears; capped power stays under the target
+    util_low = np.concatenate([np.full(20, 0.3), np.full(20, 0.4)])
+    quiet_steps = int(LIFT_AFTER_S / POLL_INTERVAL_S) + 2
+    for _ in range(quiet_steps):
+        ctrl.step(state, util_low, alert=False)
+    assert not state.capping
+    assert (state.freq == F_MAX).all()
+
+
+def test_rapl_throttles_everything_as_backstop():
+    model = ServerPowerModel()
+    state = ServerCapState(40, np.ones(40, bool))   # all user-facing
+    rapl = RaplController(model, 200.0)
+    util = np.ones(40)
+    p = model.power(util, state.freq)
+    for _ in range(100):
+        p = rapl.step(state, util)
+    assert p <= 200.0 + 1e-6
+    assert (state.freq < F_MAX).all()              # UF throttled too
+
+
+@given(st.integers(0, 10_000))
+def test_power_never_exceeds_budget_at_convergence(seed):
+    rng = np.random.default_rng(seed)
+    model, state, ctrl = make(budget=float(rng.uniform(215, 300)))
+    rapl = RaplController(model, ctrl.budget)
+    util = np.concatenate([rng.uniform(0.2, 0.9, 20), np.ones(20)])
+    p = None
+    for _ in range(200):
+        p = ctrl.step(state, util, alert=True)
+        if p > ctrl.budget:
+            p = rapl.step(state, util)
+    assert p <= ctrl.budget + 1e-6
+
+
+def test_chassis_manager_threshold():
+    mgr = ChassisManager(1000.0)
+    assert not mgr.poll(900.0)
+    assert mgr.poll(mgr.alert_threshold_w)
+    assert mgr.poll(1000.0)
+
+
+def test_dyn_scale_calibration_point():
+    # paper: dynamic power at f/2 is (169-111)/(310-112) of max
+    assert float(dyn_scale(0.5)) == pytest.approx(
+        (169.0 - 111.0) / (310.0 - 112.0), abs=1e-9)

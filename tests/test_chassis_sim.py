@@ -1,0 +1,68 @@
+import numpy as np
+import pytest
+
+from repro.sim.chassis_sim import (paper_chassis_specs,
+                                   paper_single_server_spec,
+                                   simulate_chassis, simulate_server)
+
+DUR = 120.0     # short runs for CI; benchmarks use the full durations
+
+
+@pytest.fixture(scope="module")
+def nocap():
+    return simulate_server(paper_single_server_spec(), None, "none",
+                           duration_s=DUR, seed=3)
+
+
+def test_caps_respected(nocap):
+    for mode in ("rapl", "per_vm"):
+        r = simulate_server(paper_single_server_spec(), 230.0, mode,
+                            duration_s=DUR, seed=3)
+        # after control convergence (RAPL steps 5%/poll), power stays
+        # within the PSU alert margin of the cap; transient load spikes
+        # between polls are what that margin exists for
+        assert r.power_w[50:].max() <= 230.0 + 5.0
+
+
+def test_per_vm_protects_uf_at_moderate_cap(nocap):
+    r = simulate_server(paper_single_server_spec(), 230.0, "per_vm",
+                        duration_s=DUR, seed=3)
+    assert r.uf_p95_latency <= nocap.uf_p95_latency * 1.05
+
+
+def test_full_server_hurts_uf(nocap):
+    r = simulate_server(paper_single_server_spec(), 230.0, "rapl",
+                        duration_s=DUR, seed=3)
+    assert r.uf_p95_latency > nocap.uf_p95_latency * 1.15
+
+
+def test_per_vm_costs_nuf_more_than_rapl(nocap):
+    rv = simulate_server(paper_single_server_spec(), 230.0, "per_vm",
+                         duration_s=DUR, seed=3)
+    rr = simulate_server(paper_single_server_spec(), 230.0, "rapl",
+                         duration_s=DUR, seed=3)
+    assert rv.nuf_slowdown > rr.nuf_slowdown
+
+
+def test_very_low_cap_forces_rapl_backup(nocap):
+    r = simulate_server(paper_single_server_spec(), 210.0, "per_vm",
+                        duration_s=DUR, seed=3)
+    assert r.rapl_engaged_frac > 0.01
+    assert r.uf_p95_latency > nocap.uf_p95_latency * 1.1
+
+
+def test_balanced_placement_protects_uf():
+    specs = paper_chassis_specs(balanced=True)
+    nc = simulate_chassis(specs, None, "none", duration_s=DUR, seed=4)
+    rv = simulate_chassis(specs, 2450.0, "per_vm", duration_s=DUR,
+                          seed=4)
+    assert rv.uf_p95_latency <= nc.uf_p95_latency * 1.05
+    assert rv.power_w[25:].max() <= 2450.0 + 12.0
+
+
+def test_imbalanced_placement_defeats_per_vm_capping():
+    specs = paper_chassis_specs(balanced=False)
+    nc = simulate_chassis(specs, None, "none", duration_s=DUR, seed=4)
+    rv = simulate_chassis(specs, 2450.0, "per_vm", duration_s=DUR,
+                          seed=4)
+    assert rv.uf_p95_latency > nc.uf_p95_latency * 1.15

@@ -1,0 +1,84 @@
+"""Sharding/dry-run machinery on a small fake-device mesh, run in a
+subprocess (device count must be set before jax initializes)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import step_for_shape
+
+out = {}
+for multi_pod in (False, True):
+    mesh = make_debug_mesh(2, 2, multi_pod=multi_pod)
+    for arch in ("llama3-8b", "mamba2-2.7b", "mixtral-8x22b"):
+        cfg = get_config(arch).reduced()
+        shape = ShapeConfig("t", 64, 8, "train")
+        strat = shd.make_strategy("fsdp2d", mesh)
+        step, args, names = step_for_shape(cfg, shape, impl="naive",
+                                           n_data=2)
+        shards = []
+        for name, arg in zip(names, args):
+            if name == "params":
+                shards.append(shd.param_shardings(strat, mesh, arg))
+            elif name == "opt_state":
+                shards.append(shd.opt_shardings(strat, mesh, arg))
+            else:
+                shards.append(shd.batch_shardings(strat, mesh, arg))
+        with shd.use_strategy(strat, mesh), mesh:
+            compiled = jax.jit(step, in_shardings=tuple(shards)) \
+                .lower(*args).compile()
+            mem = compiled.memory_analysis()
+        key = f"{arch}|pod{2 if multi_pod else 1}"
+        out[key] = {"temp": mem.temp_size_in_bytes,
+                    "args": mem.argument_size_in_bytes}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_debug_mesh_dryrun_compiles():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT ")][0]
+    out = json.loads(line[len("RESULT "):])
+    assert len(out) == 6
+    for key, rec in out.items():
+        assert rec["args"] > 0
+
+
+@pytest.mark.slow
+def test_production_dryrun_artifacts_if_present():
+    """If the full 512-device sweep has produced artifacts, validate
+    their invariants (every cell ok or an allowed skip)."""
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+    if not os.path.isdir(art) or len(os.listdir(art)) < 10:
+        pytest.skip("full dry-run artifacts not present")
+    bad = []
+    for name in os.listdir(art):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(art, name)) as f:
+            rec = json.load(f)
+        if rec["status"] == "error":
+            bad.append((name, rec.get("error")))
+        elif rec["status"] == "skipped":
+            assert rec["shape"] == "long_500k"
+    assert not bad, bad

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+
+from repro.core.forest import (ObliviousForest, evaluate,
+                               train_gradient_boosting,
+                               train_random_forest)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    n = 800
+    x = rng.normal(0, 1, (n, 6)).astype(np.float32)
+    # labels depend on two features with noise
+    y = ((x[:, 0] + 0.5 * x[:, 3] + rng.normal(0, 0.3, n)) > 0)
+    return x, y.astype(np.int64)
+
+
+def test_rf_learns_signal(dataset):
+    x, y = dataset
+    f = train_random_forest(x[:600], y[:600], 2, n_trees=24)
+    pred, conf = f.predict_np(x[600:])
+    acc = (pred == y[600:]).mean()
+    assert acc > 0.85
+    assert ((conf >= 0.5) & (conf <= 1.0)).all()
+
+
+def test_gb_learns_signal(dataset):
+    x, y = dataset
+    f = train_gradient_boosting(x[:600], y[:600], 2, n_trees=24)
+    pred, _ = f.predict_np(x[600:])
+    assert (pred == y[600:]).mean() > 0.85
+
+
+def test_probabilities_normalized(dataset):
+    x, y = dataset
+    for trainer in (train_random_forest, train_gradient_boosting):
+        f = trainer(x, y, 2, n_trees=8)
+        p = f.predict_proba_np(x[:50])
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+        assert (p >= 0).all()
+
+
+def test_leaf_index_manual():
+    """Hand-built depth-2 oblivious tree: verify bit-packed indexing."""
+    feat_idx = np.array([[0, 1]], np.int32)
+    thr = np.array([[0.5, 0.5]], np.float32)
+    leaves = np.arange(4, dtype=np.float32).reshape(1, 4, 1)
+    f = ObliviousForest(feat_idx, thr, leaves, "rf", 2)
+    x = np.array([[0.0, 0.0], [0.0, 1.0], [1.0, 0.0], [1.0, 1.0]],
+                 np.float32)
+    idx = f.leaf_index_np(x)[:, 0]
+    np.testing.assert_array_equal(idx, [0, 1, 2, 3])
+
+
+def test_multiclass(dataset):
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (600, 5)).astype(np.float32)
+    y = (np.digitize(x[:, 0], [-0.6, 0.0, 0.6])).astype(np.int64)
+    f = train_random_forest(x, y, 4, n_trees=24, depth=6)
+    pred, _ = f.predict_np(x)
+    assert (pred == y).mean() > 0.75
+
+
+def test_evaluate_metrics_structure(dataset):
+    x, y = dataset
+    f = train_random_forest(x, y, 2, n_trees=8)
+    m = evaluate(f, x, y)
+    assert 0 <= m["pct_high_conf"] <= 1
+    for b in m["buckets"].values():
+        assert 0 <= b["recall"] <= 1
+        assert 0 <= b["precision"] <= 1

@@ -1,0 +1,134 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp
+oracles (interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.forest import train_gradient_boosting, train_random_forest
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.forest.ops import forest_predict
+from repro.kernels.forest.ref import forest_predict_ref
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.template.ops import criticality_scores
+from repro.kernels.template.ref import criticality_scores_ref
+
+RNG = np.random.default_rng(0)
+
+
+def randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(0, 1, shape).astype(dtype))
+
+
+# --- template ------------------------------------------------------------
+
+@pytest.mark.parametrize("batch,days", [(8, 5), (130, 5), (32, 10)])
+def test_template_kernel_vs_oracle(batch, days):
+    series = jnp.asarray(
+        RNG.uniform(0, 100, (batch, days * 48)).astype(np.float32))
+    out = criticality_scores(series, block_b=8)
+    ref = criticality_scores_ref(series)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-3, atol=5e-4)
+
+
+def test_template_kernel_classification_agreement():
+    from repro.sim.telemetry import generate_population
+    pop = generate_population(200, seed=9)
+    s = jnp.asarray(pop.series)
+    out = np.asarray(criticality_scores(s))
+    ref = np.asarray(criticality_scores_ref(s))
+    assert ((out[:, 0] < 0.72) == (ref[:, 0] < 0.72)).mean() == 1.0
+
+
+# --- forest ----------------------------------------------------------------
+
+@pytest.mark.parametrize("trainer,kind", [(train_random_forest, "rf"),
+                                          (train_gradient_boosting, "gb")])
+@pytest.mark.parametrize("n_classes", [2, 4])
+def test_forest_kernel_vs_oracle(trainer, kind, n_classes):
+    x = RNG.normal(0, 1, (300, 7)).astype(np.float32)
+    y = RNG.integers(0, n_classes, 300)
+    y[x[:, 0] > 0] = 0
+    f = trainer(x, y, n_classes, n_trees=12, depth=4)
+    p_np = f.predict_proba_np(x)
+    p_ref = np.asarray(forest_predict_ref(
+        jnp.asarray(x), jnp.asarray(f.feat_idx),
+        jnp.asarray(f.thresholds), jnp.asarray(f.leaf_values), kind))
+    p_pal = np.asarray(forest_predict(f, x))
+    np.testing.assert_allclose(p_ref, p_np, atol=1e-5)
+    np.testing.assert_allclose(p_pal, p_np, atol=1e-5)
+
+
+# --- flash attention -------------------------------------------------------
+
+@pytest.mark.parametrize("lq,lk,window", [
+    (128, 128, None), (256, 256, 64), (64, 192, None), (100, 200, 50)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_flash_vs_ref(lq, lk, window, dtype):
+    q = randn(2, 4, lq, 32).astype(dtype)
+    k = randn(2, 2, lk, 32).astype(dtype)
+    v = randn(2, 2, lk, 32).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          bq=64, bk=64)
+    kr = jnp.repeat(k, 2, 1)
+    vr = jnp.repeat(v, 2, 1)
+    ref = attention_ref(q.astype(jnp.float32), kr.astype(jnp.float32),
+                        vr.astype(jnp.float32), causal=True,
+                        window=window)
+    tol = 2e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_flash_non_causal():
+    q, k, v = randn(1, 2, 64, 16), randn(1, 2, 96, 16), randn(1, 2, 96, 16)
+    out = flash_attention(q, k, v, causal=False, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5)
+
+
+# --- ssd -------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,chunk", [(64, 16), (96, 32), (100, 32),
+                                     (128, 128)])
+def test_ssd_vs_recurrence(l, chunk):
+    B, H, P, N = 2, 3, 16, 8
+    x = randn(B, l, H, P)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.2, (B, l, H)).astype(np.float32))
+    a = jnp.asarray(-RNG.uniform(0.3, 2.0, H).astype(np.float32))
+    bm, cm = randn(B, l, N), randn(B, l, N)
+    d = randn(H)
+    y = ssd(x, dt, a, bm, cm, d, chunk=chunk)
+    yr, _ = ssd_ref(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+
+
+def test_ssd_chunk_invariance():
+    """Property: the chunked dual form is exact — results must not
+    depend on the chunk size."""
+    B, L, H, P, N = 1, 128, 2, 8, 4
+    x = randn(B, L, H, P)
+    dt = jnp.asarray(RNG.uniform(0.01, 0.1, (B, L, H)).astype(np.float32))
+    a = jnp.asarray(-RNG.uniform(0.5, 1.0, H).astype(np.float32))
+    bm, cm = randn(B, L, N), randn(B, L, N)
+    d = randn(H)
+    outs = [np.asarray(ssd(x, dt, a, bm, cm, d, chunk=c))
+            for c in (16, 32, 64)]
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+    np.testing.assert_allclose(outs[1], outs[2], atol=1e-4)
+
+
+def test_ssd_state_decay_property():
+    """With dt -> 0 the SSD is the identity-decay system: y ~ D*x."""
+    B, L, H, P, N = 1, 32, 2, 8, 4
+    x = randn(B, L, H, P)
+    dt = jnp.full((B, L, H), 1e-8)
+    a = jnp.asarray(np.full(H, -1.0, np.float32))
+    bm, cm = randn(B, L, N), randn(B, L, N)
+    d = jnp.asarray(np.full(H, 2.0, np.float32))
+    y = np.asarray(ssd(x, dt, a, bm, cm, d, chunk=16))
+    np.testing.assert_allclose(y, 2.0 * np.asarray(x), atol=1e-4)

@@ -1,0 +1,115 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.oversubscription import (SCENARIOS, BudgetResult,
+                                         FleetProfile, OversubConfig,
+                                         compute_budget, scenario_table)
+from repro.core.power_model import ServerPowerModel
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    return FleetProfile(beta=0.4, util_uf=0.65, util_nuf=0.44,
+                        allocated_frac=0.85, servers_per_chassis=12,
+                        model=ServerPowerModel())
+
+
+def test_paper_example_walk(fleet):
+    """§III-E example: 10000 draws topped by 2900, 2850, 2850 — with
+    ample reduction capacity, the budget walks below the top draws while
+    the event rate stays within (0.1%, 1%)."""
+    rng = np.random.default_rng(0)
+    draws = rng.uniform(2000, 2700, 9997)
+    draws = np.concatenate([draws, [2900.0, 2850.0, 2850.0]])
+    cfg = OversubConfig(emax_uf=0.001, fmin_uf=0.75,
+                        emax_nuf=0.01, fmin_nuf=0.50, buffer=0.0)
+    res = compute_budget(draws, 3720.0, cfg, fleet)
+    assert res.budget_w < 2900.0
+    assert res.uf_event_rate <= 0.001
+    assert res.nuf_event_rate <= 0.01
+    # capping events happened (we oversubscribed past the peak)
+    assert res.uf_event_rate + res.nuf_event_rate > 0
+
+
+def test_budget_monotone_in_event_tolerance(fleet):
+    rng = np.random.default_rng(1)
+    draws = np.concatenate([rng.uniform(2000, 2900, 50_000),
+                            rng.uniform(2900, 3300, 500)])
+    budgets = []
+    for emax in (0.0005, 0.002, 0.008):
+        cfg = OversubConfig(emax_uf=0.0, fmin_uf=1.0,
+                            emax_nuf=emax, fmin_nuf=0.5, buffer=0.0)
+        budgets.append(compute_budget(draws, 3720.0, cfg, fleet).budget_w)
+    assert budgets[0] >= budgets[1] >= budgets[2]
+
+
+def test_budget_monotone_in_frequency_floor(fleet):
+    rng = np.random.default_rng(2)
+    draws = np.concatenate([rng.uniform(2000, 2900, 50_000),
+                            rng.uniform(3300, 3489, 40)])
+    budgets = []
+    for fmin in (0.9, 0.7, 0.5):
+        cfg = OversubConfig(emax_uf=0.0, fmin_uf=1.0,
+                            emax_nuf=0.01, fmin_nuf=fmin, buffer=0.0)
+        budgets.append(compute_budget(draws, 3720.0, cfg, fleet).budget_w)
+    # deeper throttling allowed => lower (more aggressive) budget
+    assert budgets[0] >= budgets[1] >= budgets[2]
+
+
+def test_zero_uf_tolerance_never_needs_uf_throttling(fleet):
+    rng = np.random.default_rng(3)
+    draws = np.concatenate([rng.uniform(2000, 2900, 20_000),
+                            rng.uniform(3000, 3489, 200)])
+    cfg = SCENARIOS["predictions_no_uf_impact"]
+    res = compute_budget(draws, 3720.0, cfg, fleet)
+    assert res.uf_event_rate == 0.0
+
+
+def test_buffer_raises_budget(fleet):
+    rng = np.random.default_rng(4)
+    draws = rng.uniform(2000, 3400, 10_000)
+    cfg0 = OversubConfig(0.001, 0.75, 0.009, 0.5, buffer=0.0)
+    cfg1 = OversubConfig(0.001, 0.75, 0.009, 0.5, buffer=0.10)
+    r0 = compute_budget(draws, 3720.0, cfg0, fleet)
+    r1 = compute_budget(draws, 3720.0, cfg1, fleet)
+    assert r1.budget_w >= r0.budget_w
+    assert r1.budget_w == pytest.approx(
+        min(r0.budget_pre_buffer_w * 1.10, 3720.0))
+
+
+def test_savings_formula():
+    r = BudgetResult(3270.0, 3270.0, 3720.0, 0.0, 0.0, 100)
+    # delta = 1 - 3270/3720 = 12.096...% of 128 MW at $10/W
+    assert r.savings_usd() == pytest.approx(
+        (1 - 3270.0 / 3720.0) * 128e6 * 10, rel=1e-12)
+
+
+def test_scenario_table_orderings(fleet):
+    """The paper's qualitative orderings hold on synthetic telemetry."""
+    from repro.sim.telemetry import generate_chassis_telemetry
+    draws = generate_chassis_telemetry(64, 30, 3720.0, seed=5)
+    rows = scenario_table(draws, 3720.0, fleet,
+                          beta_internal_only=0.54,
+                          beta_non_premium=0.4225)
+    osub = {k: r.oversubscription for k, r in rows.items()}
+    assert osub["traditional"] == 0.0
+    # predictions beat the state of the art
+    assert osub["predictions_all_minimal_uf_impact"] > \
+        osub["state_of_the_art"]
+    # restricting predictions to internal VMs costs oversubscription
+    assert osub["predictions_internal_no_uf_impact"] <= \
+        osub["predictions_all_no_uf_impact"] + 1e-9
+
+
+@given(st.integers(0, 1000))
+def test_budget_never_exceeds_provisioned(seed):
+    rng = np.random.default_rng(seed)
+    draws = rng.uniform(1000, 3500, 2000)
+    fleet = FleetProfile(beta=0.4, util_uf=0.65, util_nuf=0.44,
+                         allocated_frac=0.85, servers_per_chassis=12,
+                         model=ServerPowerModel())
+    cfg = OversubConfig(0.001, 0.75, 0.009, 0.5)
+    res = compute_budget(draws, 3720.0, cfg, fleet)
+    assert res.budget_w <= 3720.0 + 1e-9
+    assert 0.0 <= res.oversubscription <= 1.0

@@ -1,0 +1,111 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.placement import (ALPHA_DEFAULT, ClusterState,
+                                  SchedulerPolicy, _score_chassis_scalar,
+                                  _score_server_scalar, packing_score)
+
+
+def make_state(n_servers=12, per_chassis=4, cores=40):
+    return ClusterState(
+        n_servers=n_servers, cores_per_server=cores,
+        chassis_of_server=np.arange(n_servers) // per_chassis,
+        n_chassis=n_servers // per_chassis)
+
+
+def test_vectorized_matches_scalar_oracle():
+    rng = np.random.default_rng(0)
+    st_ = make_state()
+    for _ in range(60):
+        srv = int(rng.integers(0, 12))
+        cores = int(rng.integers(1, 8))
+        if st_.free_cores[srv] < cores:
+            continue
+        st_.place(srv, cores, float(rng.uniform(0, 1)),
+                  bool(rng.random() < 0.5))
+    kappa = st_.score_chassis()
+    for c in range(st_.n_chassis):
+        assert kappa[c] == pytest.approx(_score_chassis_scalar(st_, c))
+    for uf in (True, False):
+        eta = st_.score_server(uf)
+        for s in range(st_.n_servers):
+            assert eta[s] == pytest.approx(
+                _score_server_scalar(st_, s, uf))
+
+
+def test_score_reversal_between_types():
+    st_ = make_state()
+    st_.place(0, 10, 0.8, False)        # NUF load on server 0
+    eta_uf = st_.score_server(True)
+    eta_nuf = st_.score_server(False)
+    # a UF VM prefers the NUF-loaded server; an NUF VM avoids it
+    assert eta_uf[0] > eta_uf[1]
+    assert eta_nuf[0] < eta_nuf[1]
+    # reversal identity: eta_uf + eta_nuf == 1
+    np.testing.assert_allclose(eta_uf + eta_nuf, 1.0)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_scores_in_unit_interval(seed):
+    rng = np.random.default_rng(seed)
+    st_ = make_state()
+    for _ in range(30):
+        srv = int(rng.integers(0, 12))
+        cores = int(rng.integers(1, 6))
+        if st_.free_cores[srv] < cores:
+            continue
+        st_.place(srv, cores, float(rng.uniform(0, 1)),
+                  bool(rng.random() < 0.5))
+    kappa = st_.score_chassis()
+    assert ((kappa >= 0) & (kappa <= 1)).all()
+    for uf in (True, False):
+        eta = st_.score_server(uf)
+        assert ((eta >= 0) & (eta <= 1)).all()
+    sc = st_.score_candidates(True, np.arange(12), ALPHA_DEFAULT)
+    assert ((sc >= 0) & (sc <= 1)).all()
+
+
+def test_place_remove_roundtrip():
+    st_ = make_state()
+    before = (st_.free_cores.copy(), st_.gamma_uf.copy(),
+              st_.rho_peak.copy())
+    st_.place(3, 8, 0.7, True)
+    st_.remove(3, 8, 0.7, True)
+    np.testing.assert_allclose(st_.free_cores, before[0])
+    np.testing.assert_allclose(st_.gamma_uf, before[1])
+    np.testing.assert_allclose(st_.rho_peak, before[2])
+
+
+def test_constraint_rule_blocks_full_servers():
+    st_ = make_state()
+    st_.place(0, 40, 0.5, True)
+    assert 0 not in st_.feasible(1)
+    pol = SchedulerPolicy()
+    chosen = pol.choose(st_, 1, True)
+    assert chosen != 0
+
+
+def test_deployment_failure_when_no_capacity():
+    st_ = make_state(n_servers=2, per_chassis=2, cores=4)
+    st_.place(0, 4, 0.5, True)
+    st_.place(1, 4, 0.5, False)
+    pol = SchedulerPolicy()
+    assert pol.choose(st_, 1, True) is None
+
+
+def test_chassis_balancing_preference():
+    st_ = make_state()
+    # chassis 0 heavily loaded
+    for srv in range(4):
+        st_.place(srv, 20, 0.9, True)
+    pol = SchedulerPolicy(alpha=1.0, packing_weight=0.0)
+    chosen = pol.choose(st_, 4, True)
+    assert st_.chassis_of_server[chosen] != 0
+
+
+def test_no_utilization_predictions_uses_conservative_p95():
+    pol = SchedulerPolicy(use_utilization_predictions=False)
+    assert pol.effective_p95(0.25) == 1.0
+    pol2 = SchedulerPolicy()
+    assert pol2.effective_p95(0.25) == 0.25

@@ -1,0 +1,56 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core.criticality import classify
+from repro.core.predictor import (UF, bucket_to_p95, table3_metrics,
+                                  train_service)
+from repro.sim.telemetry import generate_population
+
+
+@pytest.fixture(scope="module")
+def trained():
+    pop = generate_population(1200, seed=21)
+    hist, arr = F.split_history_arrivals(pop)
+    hist_labels = np.asarray(classify(jnp.asarray(hist.series)))
+    aggs = F.subscription_aggregates(hist, hist_labels)
+    x = F.build_features(arr, aggs)
+    y_uf = np.asarray(classify(jnp.asarray(arr.series))).astype(np.int64)
+    y_p95 = F.p95_bucket(np.array([v.p95_util for v in arr.vms]))
+    svc = train_service(x[:400], y_uf[:400], y_p95[:400], model="rf",
+                        n_trees=16)
+    return svc, x[400:], y_uf[400:], y_p95[400:]
+
+
+def test_query_interface(trained):
+    svc, x, y_uf, y_p95 = trained
+    out = svc.query(x[:32])
+    assert out["workload_type"].shape == (32,)
+    assert set(np.unique(out["workload_type_used"])) <= {0, 1}
+    # low-confidence falls back to conservative UF / bucket 3
+    low = out["workload_conf"] < svc.confidence_gate
+    assert (out["workload_type_used"][low] == UF).all()
+    lowp = out["p95_conf"] < svc.confidence_gate
+    assert (out["p95_bucket_used"][lowp] == 3).all()
+
+
+def test_criticality_accuracy(trained):
+    svc, x, y_uf, y_p95 = trained
+    m = table3_metrics(svc, x, y_uf, y_p95)
+    assert m["criticality"]["accuracy_high_conf"] > 0.8
+    assert m["criticality"]["buckets"][1]["recall"] > 0.8
+
+
+def test_p95_two_stage_predicts(trained):
+    svc, x, y_uf, y_p95 = trained
+    bucket, conf = svc.p95.predict(x)
+    assert set(np.unique(bucket)) <= {0, 1, 2, 3}
+    hi = conf >= 0.6
+    if hi.sum() > 20:
+        assert (bucket[hi] == y_p95[hi]).mean() > 0.5
+
+
+def test_bucket_midpoints():
+    np.testing.assert_allclose(bucket_to_p95(np.arange(4)),
+                               [0.125, 0.375, 0.625, 0.875])

@@ -1,0 +1,73 @@
+"""Paper §V production lessons: prioritized throttling list + VM kill."""
+import numpy as np
+import pytest
+
+from repro.core.power_model import F_MAX, F_MIN, ServerPowerModel
+from repro.core.priority import PrioritizedVM, Tier, TieredController
+
+
+def make_controller(budget=240.0, enable_kill=True):
+    c = TieredController(ServerPowerModel(), budget,
+                         enable_kill=enable_kill)
+    c.register(PrioritizedVM("spot", 8, Tier.LOW_PRIORITY))
+    c.register(PrioritizedVM("internal-batch", 10, Tier.INTERNAL_NUF))
+    c.register(PrioritizedVM("ext-batch", 10, Tier.EXTERNAL_NUF))
+    c.register(PrioritizedVM("frontend", 12, Tier.USER_FACING))
+    return c
+
+
+UTILS = {"spot": 1.0, "internal-batch": 1.0, "ext-batch": 1.0,
+         "frontend": 0.7}
+
+
+def test_throttling_order_follows_tiers():
+    c = make_controller(budget=260.0, enable_kill=False)
+    for _ in range(60):
+        c.step(UTILS)
+    vms = {v.name: v for v in c.vms}
+    # lower tiers throttled at least as deep as higher tiers
+    assert vms["spot"].freq <= vms["internal-batch"].freq
+    assert vms["internal-batch"].freq <= vms["ext-batch"].freq
+    assert vms["frontend"].freq == F_MAX          # never touched in-band
+
+
+def test_budget_enforced():
+    c = make_controller(budget=240.0, enable_kill=False)
+    out = None
+    for _ in range(200):
+        out = c.step(UTILS)
+    assert out["power_w"] <= 240.0 + 1e-6
+
+
+def test_kill_preferred_vm_shed_before_throttling_tier():
+    c = TieredController(ServerPowerModel(), 220.0)
+    c.register(PrioritizedVM("shreddable", 10, Tier.LOW_PRIORITY,
+                             kill_preferred=True))
+    c.register(PrioritizedVM("batch", 20, Tier.INTERNAL_NUF))
+    c.register(PrioritizedVM("frontend", 10, Tier.USER_FACING))
+    out = c.step({"shreddable": 1.0, "batch": 1.0, "frontend": 0.8})
+    assert "shreddable" in out["killed"]
+    vms = {v.name: v for v in c.vms}
+    assert not vms["shreddable"].alive
+
+
+def test_recovery_raises_highest_tier_first():
+    c = make_controller(budget=250.0, enable_kill=False)
+    for _ in range(80):
+        c.step(UTILS)                       # drive down
+    low = {k: 0.15 for k in UTILS}          # load drops
+    for _ in range(3):
+        c.step(low)
+    vms = {v.name: v for v in c.vms}
+    # external batch recovers before spot
+    assert vms["ext-batch"].freq >= vms["spot"].freq
+
+
+def test_impact_report_structure():
+    c = make_controller()
+    c.step(UTILS)
+    rep = c.impact_report()
+    assert set(rep) == {"spot", "internal-batch", "ext-batch",
+                        "frontend"}
+    for v in rep.values():
+        assert F_MIN <= v["freq"] <= F_MAX

@@ -1,0 +1,58 @@
+import numpy as np
+import pytest
+
+from repro.core.placement import SchedulerPolicy
+from repro.sim.scheduler_sim import PredictionChannel, SimMetrics, simulate
+
+DAYS = 4.0      # short CI runs; the Fig 7 benchmark uses 30 days
+
+
+@pytest.fixture(scope="module")
+def norule():
+    return simulate(SchedulerPolicy(use_power_rule=False),
+                    PredictionChannel("none"), days=DAYS, seed=0)
+
+
+@pytest.fixture(scope="module")
+def ours():
+    return simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+                    days=DAYS, seed=0)
+
+
+def test_policy_improves_chassis_balance(norule, ours):
+    assert ours.chassis_score_std < norule.chassis_score_std
+
+
+def test_policy_improves_server_balance(norule, ours):
+    assert ours.server_score_std < norule.server_score_std
+
+
+def test_failure_rate_not_degraded(norule, ours):
+    assert ours.failure_rate <= norule.failure_rate + 0.01
+
+
+def test_alpha_extremes_match_paper_findings():
+    a0 = simulate(SchedulerPolicy(alpha=0.0), PredictionChannel("ml"),
+                  days=DAYS, seed=0)
+    a1 = simulate(SchedulerPolicy(alpha=1.0), PredictionChannel("ml"),
+                  days=DAYS, seed=0)
+    a08 = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+                   days=DAYS, seed=0)
+    # alpha=0 ignores the chassis score -> worse chassis balance than 0.8
+    assert a08.chassis_score_std < a0.chassis_score_std
+    # alpha=1 ignores the server score -> worse server balance than 0.8
+    assert a08.server_score_std < a1.server_score_std
+
+
+def test_oracle_not_worse_than_ml():
+    ml = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+                  days=DAYS, seed=0)
+    oracle = simulate(SchedulerPolicy(alpha=0.8),
+                      PredictionChannel("oracle"), days=DAYS, seed=0)
+    assert oracle.chassis_score_std <= ml.chassis_score_std * 1.15
+
+
+def test_metrics_sane(ours):
+    assert 0 <= ours.failure_rate <= 1
+    assert 0 <= ours.empty_server_ratio <= 1
+    assert ours.placements > 100

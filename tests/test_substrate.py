@@ -1,0 +1,216 @@
+"""Substrate tests: loss, optimizers, data pipeline, checkpointing,
+fault tolerance, power-control integration, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.models.loss import chunked_ce
+from repro.optim import adafactor, adamw
+from repro.optim.grad_compress import (compress_decompress,
+                                       make_error_feedback)
+from repro.runtime.fault_tolerance import (FaultToleranceConfig,
+                                           FaultTolerantLoop)
+from repro.runtime.power_control import (ChassisPowerSim, JobSpec,
+                                         ThrottledLoop)
+
+
+# --- loss ------------------------------------------------------------------
+
+def test_chunked_ce_matches_direct():
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.normal(0, 1, (2, 64, 16)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (16, 50)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 50, (2, 64)), jnp.int32)
+    out = float(chunked_ce(h, w, y, chunk=16))
+    logits = np.asarray(h @ w, np.float64)
+    lse = np.log(np.exp(logits - logits.max(-1, keepdims=True))
+                 .sum(-1)) + logits.max(-1)
+    gold = np.take_along_axis(logits, np.asarray(y)[..., None],
+                              -1)[..., 0]
+    expect = float((lse - gold).mean())
+    assert out == pytest.approx(expect, rel=1e-4)
+
+
+def test_chunked_ce_ignores_negative_labels():
+    h = jnp.ones((1, 8, 4))
+    w = jnp.eye(4)
+    y = jnp.asarray([[0, 1, -1, -1, 2, 3, -1, 0]], jnp.int32)
+    out = float(chunked_ce(h, w, y, chunk=4))
+    assert np.isfinite(out)
+
+
+# --- optimizers --------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [adamw, adafactor])
+def test_optimizer_descends_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.asarray(np.ones((4, 8), np.float32) * 3.0)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state, gnorm = opt.update(grads, state, params, 0.05)
+    assert float(loss(params)) < 0.5 * l0
+    assert np.isfinite(float(gnorm))
+
+
+def test_grad_compression_bounded_error():
+    rng = np.random.default_rng(0)
+    g = {"a": jnp.asarray(rng.normal(0, 1, (64, 64)).astype(np.float32))}
+    out = compress_decompress(g)
+    err = np.abs(np.asarray(out["a"]) - np.asarray(g["a"]))
+    assert err.max() <= float(np.abs(np.asarray(g["a"])).max()) / 127.0 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_time():
+    init, apply = make_error_feedback()
+    g = {"a": jnp.asarray(np.full((16,), 0.001, np.float32))}
+    err = init(g)
+    total = np.zeros(16, np.float32)
+    for _ in range(100):
+        comp, err = apply(g, err)
+        total += np.asarray(comp["a"])
+    # accumulated compressed sum approaches the true sum (error feedback)
+    np.testing.assert_allclose(total, 0.1, rtol=0.15)
+
+
+# --- data --------------------------------------------------------------------
+
+def test_data_deterministic_and_restart_safe():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=7)
+    a = SyntheticLM(cfg).batch_at(12)
+    b = SyntheticLM(cfg).batch_at(12)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"][:, :-1],
+                                  a["tokens"][:, 1:])
+
+
+def test_prefetcher_in_order():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2, seed=1)
+    src = SyntheticLM(cfg)
+    pf = Prefetcher(src, start_step=5, depth=2)
+    steps = [pf.next()[0] for _ in range(4)]
+    pf.close()
+    assert steps == [5, 6, 7, 8]
+
+
+# --- checkpoint ----------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"params": {"w": jnp.asarray(np.arange(6, dtype=np.float32)
+                                        .reshape(2, 3)),
+                       "b": jnp.asarray(np.ones(3, np.float32))},
+            "step_scale": jnp.asarray(np.float32(2.5)),
+            "bf16": jnp.ones((4,), jnp.bfloat16) * 1.5}
+    ck.save(10, tree)
+    restored, step = ck.restore(tree)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert restored["bf16"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["bf16"], np.float32), 1.5)
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = {"w": jnp.ones(3)}
+    ck.save(5, tree)
+    # fake a partial write
+    os.makedirs(tmp_path / "step_00000009")
+    assert ck.latest_step() == 5
+
+
+def test_checkpoint_rotation(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    tree = {"w": jnp.ones(2)}
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree)
+    assert ck.all_steps() == [3, 4]
+
+
+# --- fault tolerance -------------------------------------------------------------
+
+def test_fault_tolerant_loop_recovers(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    cfg = FaultToleranceConfig(checkpoint_every=5,
+                               inject_failure_rate=0.15)
+    loop = FaultTolerantLoop(cfg, ck, rng_seed=3)
+
+    def step_fn(state, batch):
+        return {"x": state["x"] + batch}, {"x": float(state["x"])}
+
+    def batch_fn(step):
+        return 1.0
+
+    state, history = loop.run({"x": jnp.asarray(0.0)}, step_fn, batch_fn,
+                              n_steps=40)
+    assert loop.state.restarts > 0                  # failures did happen
+    assert float(state["x"]) == 40.0                # and were recovered
+
+
+def test_straggler_detection(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    cfg = FaultToleranceConfig(straggler_factor=2.0,
+                               straggler_patience=2)
+    loop = FaultTolerantLoop(cfg, ck)
+    hits = []
+    loop.on_straggler = lambda s: hits.append(s.step)
+    for dt in [0.1] * 20 + [0.5] * 4:
+        loop._track_straggler(dt)
+        loop.state.step_times.append(dt)
+    assert loop.state.mitigations >= 1
+
+
+# --- power-control integration ----------------------------------------------------
+
+def test_throttled_loop_slows_batch_job_not_uf():
+    chassis = ChassisPowerSim(budget_w=260.0)
+    chassis.register(JobSpec("serve", cores=16, user_facing=True,
+                             p95_util=0.7))
+    chassis.register(JobSpec("train", cores=24, user_facing=False,
+                             p95_util=1.0))
+    utils = np.concatenate([np.full(16, 0.7), np.ones(24)])
+    for _ in range(50):
+        out = chassis.step(utils)
+    assert out["power_w"] <= 260.0 + 1e-6
+    f_train = chassis.job_frequency("train")
+    f_serve = chassis.job_frequency("serve")
+    assert f_serve == pytest.approx(1.0)
+    assert f_train < 1.0
+
+
+class _StubMesh:
+    """Mesh stand-in (tests run on ONE real device; the strategy logic
+    only needs axis names and sizes)."""
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 2}
+
+
+def test_sharding_rules_divisible():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import sharding as shd
+    mesh = _StubMesh()
+    strat = shd.make_strategy("fsdp2d", mesh)
+    spec = strat.param_spec("layers/attn/wq/w", (4, 64, 128), mesh)
+    assert spec == P(None, "data", "model")
+    # non-divisible trailing dim loses only that axis
+    spec = strat.param_spec("lm_head/w", (64, 51865), mesh)
+    assert spec == P("data", None)
+
+
+def test_constrain_identity_outside_context():
+    from repro.launch import sharding as shd
+    x = jnp.ones((4, 4))
+    assert shd.constrain(x, "residual") is x

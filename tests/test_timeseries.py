@@ -1,0 +1,73 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import timeseries as ts
+
+
+def test_rolling_day_mean_matches_naive():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(0, 100, (3, 240)).astype(np.float32)
+    out = np.asarray(ts.rolling_day_mean(jnp.asarray(x)))
+    for t in range(240):
+        lo = max(t - 47, 0)
+        expect = x[:, lo:t + 1].mean(-1)
+        np.testing.assert_allclose(out[:, t], expect, rtol=2e-5)
+
+
+def test_detrend_removes_exponential_trend():
+    slots = np.arange(240)
+    base = np.tile(10 + 5 * np.sin(2 * np.pi * slots / 48), (1, 1))
+    trended = base * np.exp(0.05 * slots / 48)
+    flat = np.asarray(ts.detrend(jnp.asarray(trended.astype(np.float32))))
+    # after detrending, day-over-day drift of the mean is small
+    daily = flat.reshape(1, 5, 48).mean(-1)[0]
+    assert daily[1:].std() < 0.05 * daily[1:].mean()
+
+
+def test_template_extraction_recovers_period():
+    slots = np.arange(240)
+    pattern = np.sin(2 * np.pi * slots / 48)
+    x = jnp.asarray((pattern + 0.01)[None].astype(np.float32))
+    tmpl = np.asarray(ts.extract_template(x, 48))[0]
+    np.testing.assert_allclose(tmpl, pattern[:48] + 0.01, atol=1e-5)
+
+
+def test_template_deviation_zero_for_perfectly_periodic():
+    slots = np.arange(240)
+    x = jnp.asarray((5 + np.sin(2 * np.pi * slots / 48))[None]
+                    .astype(np.float32))
+    dev = float(ts.template_deviation(x, 48)[0])
+    assert dev < 1e-5
+
+
+@given(hnp.arrays(np.float32, (2, 240),
+                  elements=st.floats(0, 100, width=32)))
+def test_preprocess_finite(x):
+    out = np.asarray(ts.preprocess(jnp.asarray(x)))
+    assert np.isfinite(out).all()
+
+
+@given(st.integers(0, 1000))
+def test_deviation_nonnegative_and_keeps_order(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 100, (1, 240)).astype(np.float32))
+    for period in (48, 24, 16):
+        d = float(ts.template_deviation(x, period)[0])
+        assert d >= 0.0
+        assert np.isfinite(d)
+
+
+def test_template_deviation_trims_outliers():
+    slots = np.arange(240)
+    clean = 5 + np.sin(2 * np.pi * slots / 48)
+    dirty = clean.copy()
+    dirty[10:40] = 50.0               # large interruption (<20% of series)
+    d_clean = float(ts.template_deviation(
+        jnp.asarray(clean[None].astype(np.float32)), 48)[0])
+    d_dirty = float(ts.template_deviation(
+        jnp.asarray(dirty[None].astype(np.float32)), 48)[0])
+    # trimming keeps the deviation bounded despite the interruption
+    assert d_dirty < 10 * (d_clean + 0.1)
