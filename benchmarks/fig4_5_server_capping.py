@@ -1,32 +1,42 @@
 """Figs 4 & 5: single-server capping dynamics + performance impact of
-full-server (RAPL) vs per-VM capping at caps 250/240/230/220/210 W."""
+full-server (RAPL) vs per-VM capping at caps 250/240/230/220/210 W.
+
+All caps of a mode run as ONE vmapped fleet-engine call (the cap grid
+is the batch axis); each figure is a slice of the fleet run."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.sim.chassis_sim import paper_single_server_spec, simulate_server
+from repro.sim.chassis_sim import paper_single_server_spec
+from repro.sim.fleet import run_fleet
 
 CAPS = (250, 240, 230, 220, 210)
 PAPER_NOTE = {230: "paper: rapl +18% lat; per-VM ~0 lat, +28% runtime",
               210: "paper: per-VM can no longer protect (RAPL engages)"}
 
 
-def run(duration_s: float = 600.0, seed: int = 3):
-    spec = paper_single_server_spec()
-    nocap, us = timed(lambda: simulate_server(spec, None, "none",
-                                              duration_s, seed), repeat=1)
+def run(duration_s: float = 600.0, seed: int = 3,
+        backend: str = "jax"):
+    spec = [paper_single_server_spec()]
+    caps = np.asarray(CAPS, np.float64)
+    fleet_nc, us = timed(lambda: run_fleet(
+        spec, None, "none", duration_s, seed, backend=backend), repeat=1)
+    nocap = fleet_nc.chassis(0)
     emit("fig4/no_cap", us,
          f"power_max={nocap.power_w.max():.0f}W "
          f"power_min={nocap.power_w.min():.0f}W")
+    fleet_rr, us_r = timed(lambda: run_fleet(
+        spec, caps, "rapl", duration_s, seed, backend=backend), repeat=1)
+    fleet_rv, us_v = timed(lambda: run_fleet(
+        spec, caps, "per_vm", duration_s, seed, backend=backend),
+        repeat=1)
     rows = {}
-    for cap in CAPS:
-        rr = simulate_server(spec, float(cap), "rapl", duration_s, seed)
-        rv = simulate_server(spec, float(cap), "per_vm", duration_s,
-                             seed)
+    for i, cap in enumerate(CAPS):
+        rr, rv = fleet_rr.chassis(i), fleet_rv.chassis(i)
         rows[cap] = (rr, rv)
         note = PAPER_NOTE.get(cap, "")
-        emit(f"fig5/cap{cap}W", us,
+        emit(f"fig5/cap{cap}W", (us_r + us_v) / len(CAPS),
              f"rapl_lat=x{rr.uf_p95_latency / nocap.uf_p95_latency:.2f} "
              f"rapl_runtime=x{rr.nuf_slowdown:.2f} "
              f"pervm_lat=x{rv.uf_p95_latency / nocap.uf_p95_latency:.2f} "
@@ -34,7 +44,7 @@ def run(duration_s: float = 600.0, seed: int = 3):
              f"pervm_rapl_backup={rv.rapl_engaged_frac:.2f} {note}")
     # Fig 4 dynamics summary: caps respected, controller sits below cap
     rr, rv = rows[230]
-    emit("fig4/cap230W", us,
+    emit("fig4/cap230W", us_r + us_v,
          f"rapl_power_max={rr.power_w[25:].max():.0f}W "
          f"pervm_power_max={rv.power_w[25:].max():.0f}W "
          f"pervm_min_nuf_freq={rv.min_nuf_freq.min():.2f}")

@@ -1,22 +1,31 @@
 """Fig 6: chassis-level dynamics — capping granularity x VM placement
-(balanced vs imbalanced), 12 servers, 36 UF + 36 NUF VMs, 2450 W."""
+(balanced vs imbalanced), 12 servers, 36 UF + 36 NUF VMs, 2450 W.
+
+Each (placement, mode) cell is one compiled fleet-engine run; the
+balanced and imbalanced chassis reuse the same compilation (identical
+shapes, different layout values)."""
 from __future__ import annotations
 
 from benchmarks.common import emit, timed
-from repro.sim.chassis_sim import paper_chassis_specs, simulate_chassis
+from repro.sim.chassis_sim import paper_chassis_specs
+from repro.sim.fleet import run_fleet
 
 BUDGET = 2450.0
 
 
-def run(duration_s: float = 600.0, seed: int = 4):
+def run(duration_s: float = 600.0, seed: int = 4,
+        backend: str = "jax"):
     out = {}
     for balanced in (True, False):
         specs = paper_chassis_specs(balanced)
         label = "balanced" if balanced else "imbalanced"
-        nc, us = timed(lambda s=specs: simulate_chassis(
-            s, None, "none", duration_s, seed), repeat=1)
-        rv = simulate_chassis(specs, BUDGET, "per_vm", duration_s, seed)
-        rr = simulate_chassis(specs, BUDGET, "rapl", duration_s, seed)
+        fnc, us = timed(lambda s=specs: run_fleet(
+            s, None, "none", duration_s, seed, backend=backend), repeat=1)
+        nc = fnc.chassis(0)
+        rv = run_fleet(specs, BUDGET, "per_vm", duration_s, seed,
+                       backend=backend).chassis(0)
+        rr = run_fleet(specs, BUDGET, "rapl", duration_s, seed,
+                       backend=backend).chassis(0)
         out[label] = (nc, rv, rr)
         emit(f"fig6/{label}", us,
              f"pervm_lat=x{rv.uf_p95_latency / nc.uf_p95_latency:.2f} "

@@ -1,0 +1,81 @@
+"""Fleet-engine throughput: numpy Python-loop oracle vs the
+scan/vmap-compiled jax engine at 1 / 64 / 1024 chassis.
+
+Metric: chassis-steps/second (one chassis-step = one 200 ms control
+poll of a 12-blade chassis, 480 cores). The numpy baseline loops
+chassis one at a time — the seed's execution model — so its rate is
+per-chassis-constant; at large fleet sizes it is measured on a subset
+and extrapolated (recorded in the JSON). Writes BENCH_fleet_engine.json.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sim.chassis_sim import paper_chassis_specs, simulate_chassis
+from repro.sim.fleet import build_layout, run_fleet
+
+CHASSIS_COUNTS = (1, 64, 1024)
+NUMPY_MEASURE_CAP = 8          # loop at most this many chassis
+BUDGET = 2450.0
+
+
+def _time(fn, repeat: int = 3) -> float:
+    """Best-of-`repeat` wall time (first call = warmup / jit compile)."""
+    fn()
+    best = np.inf
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(duration_s: float = 30.0, seed: int = 0,
+        out_path: str = "BENCH_fleet_engine.json") -> dict:
+    specs = paper_chassis_specs(balanced=True)
+    layout = build_layout(specs)
+    n_steps = int(duration_s / 0.2)
+    results = []
+
+    def numpy_loop(m):
+        # the seed's execution model, literally: loop the one-chassis
+        # numpy simulator (per-chassis setup + stepping + aggregation)
+        for c in range(m):
+            simulate_chassis(specs, BUDGET, "per_vm", duration_s,
+                             seed + c, backend="numpy")
+
+    for n in CHASSIS_COUNTS:
+        budgets = np.full(n, BUDGET)
+        seeds = seed + np.arange(n)
+        m = min(n, NUMPY_MEASURE_CAP)
+        t_np = _time(lambda: numpy_loop(m))
+        np_sps = m * n_steps / t_np
+        t_jax = _time(lambda: run_fleet(
+            specs, budgets, "per_vm", duration_s, seeds,
+            backend="jax", layout=layout))
+        jax_sps = n * n_steps / t_jax
+        row = {"n_chassis": n, "n_steps": n_steps,
+               "numpy_steps_per_s": np_sps,
+               "numpy_measured_chassis": m,
+               "numpy_extrapolated": m < n,
+               "jax_steps_per_s": jax_sps,
+               "jax_wall_s": t_jax,
+               "speedup": jax_sps / np_sps}
+        results.append(row)
+        emit(f"fleet_engine/{n}chassis", t_jax * 1e6,
+             f"numpy={np_sps:.0f}sps jax={jax_sps:.0f}sps "
+             f"speedup=x{row['speedup']:.1f}")
+    out = {"duration_s": duration_s, "budget_w": BUDGET,
+           "chassis": "12 blades x 40 cores, balanced 36UF+36NUF",
+           "results": results}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -37,6 +37,9 @@ def main() -> None:
     if on("table4"):
         from benchmarks.table4_oversubscription import run
         run()
+    if on("fleet"):
+        from benchmarks.fleet_engine import run
+        run()
     if on("roofline"):
         from benchmarks.roofline_report import run
         run()

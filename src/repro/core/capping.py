@@ -17,28 +17,32 @@ The hybrid design, faithful to the paper:
     included) until under — "protection from overdraw must take
     precedence over performance loss". RAPL converges within ~2 s.
 
-The controller is a pure state-transition function over fixed-shape
-arrays, so the chassis simulator can scan it over time; a jnp twin
-(`repro.runtime.power_control`) drives the training-loop integration.
+The classes here are small per-server adapters kept for the original
+object API (tests, examples). The actual dynamics live in
+`repro.core.fleet_dynamics.fleet_step`, a pure fixed-shape transition
+over padded (n_servers, n_cores) arrays with identical numpy and jnp
+paths; `repro.sim.fleet` scans/vmaps it over time and chassis, and
+`repro.runtime.power_control` runs the jnp twin under the framework.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
-from repro.core.power_model import (F_MAX, F_MIN, N_PSTATES,
-                                    ServerPowerModel, pstate_frequencies)
+from repro.core.fleet_dynamics import (ALERT_FRACTION, ALERT_MARGIN_W,
+                                       LIFT_AFTER_S, N_RAISE,
+                                       POLL_INTERVAL_S, PSU_TRIP_MARGIN_W,
+                                       RAISE_HEADROOM_W, RAPL_STEP_FRAC,
+                                       ControlParams, FleetState,
+                                       RunParams, inband_step, rapl_step)
+from repro.core.power_model import (F_MAX, N_PSTATES, ServerPowerModel,
+                                    pstate_frequencies)
 
-POLL_INTERVAL_S = 0.2       # 200 ms PSU polling
-ALERT_MARGIN_W = 5.0        # controller target sits 5 W under the cap
-LIFT_AFTER_S = 30.0         # cap lifted 30 s after alert clears
-N_RAISE = 4                 # cores stepped up per feedback iteration
-RAPL_STEP_FRAC = 0.05       # RAPL lowers all-core frequency 5 %/poll
-                            # (reaches f_min from f_max within 2 s)
-RAISE_HEADROOM_W = 2.0      # feedback-raise safety margin below target
-PSU_TRIP_MARGIN_W = 2.0     # PSU averaging window: sub-poll transients
-                            # this small do not trip the out-of-band path
+__all__ = ["POLL_INTERVAL_S", "ALERT_MARGIN_W", "LIFT_AFTER_S", "N_RAISE",
+           "RAPL_STEP_FRAC", "RAISE_HEADROOM_W", "PSU_TRIP_MARGIN_W",
+           "ServerCapState", "PerVMController", "RaplController",
+           "ChassisManager"]
 
 
 @dataclass
@@ -54,9 +58,34 @@ class ServerCapState:
 
     def __post_init__(self):
         if self.freq is None:
-            self.freq = np.full(self.n_cores, F_MAX)
+            self.freq = np.full(self.n_cores, F_MAX, dtype=np.float32)
         if self.pstate is None:
-            self.pstate = np.zeros(self.n_cores, dtype=np.int64)
+            self.pstate = np.zeros(self.n_cores, dtype=np.int32)
+
+    def _pack(self) -> FleetState:
+        """View as a (1, n_cores) fleet state for the shared transition."""
+        return FleetState(
+            freq=np.asarray(self.freq, np.float32).reshape(1, -1),
+            pstate=np.asarray(self.pstate, np.int32).reshape(1, -1),
+            capping=np.array([self.capping]),
+            rapl=np.array([self.rapl_active]),
+            clear_s=np.array([self.clear_since_s], np.float32))
+
+    def _unpack(self, fs: FleetState) -> None:
+        self.freq = np.asarray(fs.freq[0])
+        self.pstate = np.asarray(fs.pstate[0])
+        self.capping = bool(fs.capping[0])
+        self.rapl_active = bool(fs.rapl[0])
+        self.clear_since_s = float(fs.clear_s[0])
+
+    def _run_params(self, budget_w: float) -> RunParams:
+        return RunParams(
+            server_budget_w=np.float32(budget_w),
+            target_w=np.float32(budget_w - ALERT_MARGIN_W),
+            alert_w=np.float32(np.inf),
+            min_pstate=np.int32(N_PSTATES - 1),
+            uf_mask=np.asarray(self.uf_mask, bool).reshape(1, -1),
+            active=None)
 
 
 class PerVMController:
@@ -68,67 +97,20 @@ class PerVMController:
         self.target = server_budget_w - ALERT_MARGIN_W
         self.freq_table = pstate_frequencies(N_PSTATES)  # descending
         self.min_pstate = N_PSTATES - 1
+        self._cp = ControlParams.from_model(model, mode="per_vm")
 
     def step(self, st: ServerCapState, util: np.ndarray, alert: bool,
              dt: float = POLL_INTERVAL_S) -> float:
         """One 200 ms control step. `util` = per-core utilization (0-1),
         `alert` = chassis-manager alert. Returns the server power draw
         AFTER the control action (what the next poll would read)."""
-        power = self.model.power(util, st.freq)
-        low = ~st.uf_mask
-        if alert and power > self.target and not st.capping:
-            # Immediate drop of all low-priority cores to min p-state.
-            st.capping = True
-            st.clear_since_s = 0.0
-            st.pstate[low] = self.min_pstate
-        elif st.capping:
-            if alert or power > self.target:
-                st.clear_since_s = 0.0
-            else:
-                st.clear_since_s += dt
-            if st.clear_since_s >= LIFT_AFTER_S:
-                # lift the cap: all cores back to maximum performance
-                st.capping = False
-                st.rapl_active = False
-                st.pstate[:] = 0
-            elif power > self.target:
-                self._lower(st, low)
-            else:
-                self._raise_if_headroom(st, low, util)
-        if st.rapl_active:
-            # respect RAPL's out-of-band reductions while they persist
-            st.freq = np.minimum(self.freq_table[st.pstate], st.freq)
-        else:
-            st.freq = self.freq_table[st.pstate]
-        return float(self.model.power(util, st.freq))
-
-    def _lower(self, st, low):
-        """Lower the N lowest-frequency... highest-frequency low-priority
-        cores one p-state (fastest power shed without touching UF)."""
-        idx = np.nonzero(low & (st.pstate < self.min_pstate))[0]
-        if len(idx) == 0:
-            return
-        order = np.argsort(st.pstate[idx])       # highest-freq cores first
-        sel = idx[order[:N_RAISE]]
-        st.pstate[sel] += 1
-
-    def _raise_if_headroom(self, st, low, util):
-        """Feedback recovery: raise N low-priority cores to the next
-        higher p-state, but only if the predicted power stays below the
-        target ('selects the highest frequency that keeps the power below
-        this threshold')."""
-        idx = np.nonzero(low & (st.pstate > 0))[0]
-        if len(idx) == 0:
-            return
-        order = np.argsort(-st.pstate[idx])      # lowest-freq cores first
-        sel = idx[order[:N_RAISE]]
-        trial = st.pstate.copy()
-        trial[sel] -= 1
-        trial_power = self.model.power(util, self.freq_table[trial])
-        # small safety margin so inter-poll load spikes rarely push the
-        # draw over the hard budget (which would trip the PSU->BMC path)
-        if trial_power < self.target - RAISE_HEADROOM_W:
-            st.pstate = trial
+        cp = self._cp if dt == self._cp.dt else replace(self._cp, dt=dt)
+        fs, p = inband_step(
+            cp, st._run_params(self.budget), st._pack(),
+            np.asarray(util, np.float32).reshape(1, -1),
+            np.array([alert]), np)
+        st._unpack(fs)
+        return float(p[0])
 
 
 class RaplController:
@@ -139,25 +121,16 @@ class RaplController:
     def __init__(self, model: ServerPowerModel, server_budget_w: float):
         self.model = model
         self.budget = server_budget_w
+        self._cp = ControlParams.from_model(model, mode="rapl")
 
     def step(self, st: ServerCapState, util: np.ndarray,
              dt: float = POLL_INTERVAL_S) -> float:
-        power = self.model.power(util, st.freq)
-        table = pstate_frequencies(N_PSTATES)
-        intended = table[st.pstate]         # in-band controller's setting
-        if power > self.budget:
-            st.rapl_active = True
-            uniform = max(st.freq.max() - RAPL_STEP_FRAC * F_MAX, F_MIN)
-            st.freq = np.minimum(st.freq, uniform)
-        elif st.rapl_active:
-            if power < self.budget - 2 * ALERT_MARGIN_W:
-                # RAPL's feedback loop restores frequency gradually,
-                # handing control back to the in-band setting
-                st.freq = np.minimum(st.freq + RAPL_STEP_FRAC * F_MAX,
-                                     intended)
-            if np.all(st.freq >= intended - 1e-9):
-                st.rapl_active = False
-        return float(self.model.power(util, st.freq))
+        fs, p = rapl_step(
+            self._cp, st._run_params(self.budget), st._pack(),
+            np.asarray(util, np.float32).reshape(1, -1),
+            np.ones(1, bool), np)
+        st._unpack(fs)
+        return float(p[0])
 
 
 @dataclass(frozen=True)
@@ -166,7 +139,7 @@ class ChassisManager:
     threshold sits just below the chassis budget so the in-band
     controller can act before the PSU->BMC hardware path must."""
     chassis_budget_w: float
-    alert_fraction: float = 0.97    # alert at 97 % of the chassis budget
+    alert_fraction: float = ALERT_FRACTION
 
     @property
     def alert_threshold_w(self) -> float:

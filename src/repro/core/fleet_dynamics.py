@@ -1,0 +1,322 @@
+"""Batched power-capping dynamics: one pure state-transition function.
+
+This is the compiled heart of the paper's control plane (§III-D). The
+per-VM controller, chassis manager, and RAPL backstop that
+`repro.core.capping` exposes as small per-server classes are all thin
+wrappers around `fleet_step`, a *pure* fixed-shape transition over
+padded arrays:
+
+    freq, pstate : (..., n_servers, n_cores)
+    capping, rapl_active, clear_since : (..., n_servers)
+
+The leading batch dims `...` are free: `()` for one server, `(B,)` for
+a fleet of B chassis, `(G, H)` for a scenario grid. Every operation is
+branchless (masked `where`, rank-based top-k selection) and identical
+under `xp = numpy` and `xp = jax.numpy`, so:
+
+  * the numpy path is the validation oracle (bit-for-bit the same
+    arithmetic the simulator always ran),
+  * the jnp path jits, scans over time, and vmaps over chassis
+    (`repro.sim.fleet`), making fleet-scale sweeps one compiled call.
+
+Semantics are the paper's hybrid design: on a chassis alert the in-band
+controller drops every non-user-facing core to the minimum p-state, then
+feedback-raises/lowers N = 4 cores per 200 ms poll against the target
+(budget - 5 W); the cap lifts 30 s after the alert clears; RAPL throttles
+*all* cores equally as the out-of-band backstop. See DESIGN.md §8 for
+the state layout and padding rules.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core.power_model import (CORES_PER_SERVER, CUBIC_MIX, F_MAX,
+                                    F_MIN, N_PSTATES, P_IDLE_FMAX,
+                                    P_IDLE_FMIN, P_PEAK_FMAX,
+                                    ServerPowerModel, pstate_frequencies)
+
+POLL_INTERVAL_S = 0.2       # 200 ms PSU polling
+ALERT_MARGIN_W = 5.0        # controller target sits 5 W under the cap
+LIFT_AFTER_S = 30.0         # cap lifted 30 s after alert clears
+N_RAISE = 4                 # cores stepped up per feedback iteration
+RAPL_STEP_FRAC = 0.05       # RAPL lowers all-core frequency 5 %/poll
+                            # (reaches f_min from f_max within 2 s)
+RAISE_HEADROOM_W = 2.0      # feedback-raise safety margin below target
+PSU_TRIP_MARGIN_W = 2.0     # PSU averaging window: sub-poll transients
+                            # this small do not trip the out-of-band path
+ALERT_FRACTION = 0.97       # chassis manager alerts at 97 % of budget
+
+#: p-state frequency table, descending f_max .. f_min (float32 so the
+#: numpy oracle and the jnp engine run the same precision).
+FREQ_TABLE = pstate_frequencies(N_PSTATES).astype(np.float32)
+
+_F32 = np.float32
+_I32 = np.int32
+
+
+class FleetState(NamedTuple):
+    """Controller state for a (batch of) server(s); all fixed-shape."""
+    freq: Any          # (..., S, C) float32, current core frequency
+    pstate: Any        # (..., S, C) int32, index into FREQ_TABLE
+    capping: Any       # (..., S) bool, in-band cap engaged
+    rapl: Any          # (..., S) bool, out-of-band RAPL engaged
+    clear_s: Any       # (..., S) float32, seconds since alert cleared
+
+
+class RunParams(NamedTuple):
+    """Per-run (vmappable) parameters. Scalars have shape `(...,)` (or
+    are python floats) matching the state's batch dims; masks have shape
+    `(..., S, C)` or `(S, C)`."""
+    server_budget_w: Any      # hard per-server budget (RAPL trip level)
+    target_w: Any             # in-band controller target (budget - 5 W)
+    alert_w: Any              # chassis-manager alert threshold
+    min_pstate: Any           # int, NUF frequency floor (p-state index)
+    uf_mask: Any              # True = user-facing (never in-band capped)
+    active: Any               # True = core exists (False = padding);
+                              # None = every core active (lets XLA drop
+                              # all padding masks, the common case)
+
+
+@dataclass(frozen=True)
+class ControlParams:
+    """Static (hashable) configuration — safe as a jit static arg."""
+    mode: str = "per_vm"              # 'none' | 'rapl' | 'per_vm'
+    dt: float = POLL_INTERVAL_S
+    n_raise: int = N_RAISE
+    alert_margin_w: float = ALERT_MARGIN_W
+    lift_after_s: float = LIFT_AFTER_S
+    rapl_step: float = RAPL_STEP_FRAC * F_MAX
+    raise_headroom_w: float = RAISE_HEADROOM_W
+    psu_trip_margin_w: float = PSU_TRIP_MARGIN_W
+    #: keep calling the RAPL loop while a previous engagement restores
+    #: (the chassis simulator does; the framework integration does not)
+    rapl_continuation: bool = True
+    #: power-model scalars (ServerPowerModel, flattened to hashables)
+    p_dyn_per_core: float = (P_PEAK_FMAX - P_IDLE_FMAX) / CORES_PER_SERVER
+    cubic_mix: float = CUBIC_MIX
+
+    def __post_init__(self):
+        if self.mode not in ("none", "rapl", "per_vm"):
+            raise ValueError(f"unknown capping mode {self.mode!r}; "
+                             "expected 'none' | 'rapl' | 'per_vm'")
+
+    @classmethod
+    def from_model(cls, model: ServerPowerModel, mode: str = "per_vm",
+                   **kw) -> "ControlParams":
+        return cls(mode=mode, p_dyn_per_core=model.p_dyn_per_core, **kw)
+
+
+def init_state(batch_shape, n_servers: int, n_cores: int,
+               xp=np) -> FleetState:
+    shape_c = tuple(batch_shape) + (n_servers, n_cores)
+    shape_s = tuple(batch_shape) + (n_servers,)
+    return FleetState(
+        freq=xp.full(shape_c, _F32(F_MAX), dtype=_F32),
+        pstate=xp.zeros(shape_c, dtype=_I32),
+        capping=xp.zeros(shape_s, dtype=bool),
+        rapl=xp.zeros(shape_s, dtype=bool),
+        clear_s=xp.full(shape_s, _F32(np.inf), dtype=_F32))
+
+
+def _per_server(x, xp):
+    """Broadcast a run scalar to the server axis: shape `(...,)` gains a
+    trailing axis (-> `(..., 1)`), a true scalar stays 0-d — either way
+    the result broadcasts against `(..., S)` per-server arrays."""
+    x = xp.asarray(x)
+    return x[..., None] if x.ndim else x
+
+
+def _per_core(x, xp):
+    """Broadcast a run scalar against `(..., S, C)` per-core arrays."""
+    x = xp.asarray(x)
+    return x[..., None, None] if x.ndim else x
+
+
+def server_power(util, freq, active, cp: ControlParams, xp):
+    """Server power draw, the calibrated model of `core.power_model`:
+    P = P_idle(f_mean) + sum_c u_c * p_dyn * g(f_c). Padded cores are
+    excluded from both the dynamic sum and the frequency mean
+    (active=None means every core is real — no masking work)."""
+    fr = xp.asarray(freq, _F32) * _F32(1.0 / F_MAX)
+    g = cp.cubic_mix * fr * fr * fr + (1.0 - cp.cubic_mix) * fr
+    ug = xp.asarray(util, _F32) * g
+    if active is None:
+        dyn = xp.sum(ug, axis=-1) * _F32(cp.p_dyn_per_core)
+        fmean = xp.mean(fr, axis=-1)
+    else:
+        dyn = xp.sum(xp.where(active, ug, _F32(0.0)), axis=-1) \
+            * _F32(cp.p_dyn_per_core)
+        fmean = xp.sum(xp.where(active, fr, _F32(0.0)), axis=-1) \
+            / xp.maximum(xp.sum(active, axis=-1), 1)
+    idle = _F32(P_IDLE_FMIN) + _F32(P_IDLE_FMAX - P_IDLE_FMIN) \
+        * (2.0 * fmean - 1.0)
+    return idle + dyn
+
+
+#: composite selection keys fit int16 (level*(C+1)+idx <= 491 for the
+#: 40-core blades); the narrow dtype halves the selection's memory
+#: traffic, which matters at fleet scale
+_BIG_KEY = np.int16(2 ** 14)
+
+
+def _first_n_mask(eligible, level, n_levels: int, n_take: int, xp):
+    """Mask of the `n_take` eligible cores that come first by ascending
+    (level, core index). `level`: (..., C) int32 in [0, n_levels). The
+    ordering is total, so numpy and jnp select identical cores.
+
+    Greedy unrolled min-pass (n_take is 4): each pass thresholds at the
+    smallest remaining composite key. Keys are unique, so exactly
+    min(n_take, #eligible) cores pass, identically in numpy and jnp.
+    Measured faster than rank/sort/top_k formulations for the compiled
+    fleet step at thousands of chassis (every intermediate is (..., C))."""
+    n_cores = eligible.shape[-1]
+    if n_levels * (n_cores + 1) + n_cores >= int(_BIG_KEY):
+        raise ValueError(
+            f"n_cores={n_cores} overflows the int16 selection keys "
+            f"(max ~{int(_BIG_KEY) // (n_levels + 1) - 1} cores per "
+            "server at n_levels="
+            f"{n_levels}); widen _BIG_KEY/keys to int32 first")
+    i16 = np.int16
+    idx = xp.arange(n_cores, dtype=i16)
+    key = xp.where(eligible,
+                   level.astype(i16) * i16(n_cores + 1) + idx, _BIG_KEY)
+    sel = xp.zeros(eligible.shape, dtype=bool)
+    for _ in range(n_take):
+        kmin = xp.min(key, axis=-1)
+        pick = (key == kmin[..., None]) & (kmin < _BIG_KEY)[..., None]
+        sel = sel | pick
+        key = xp.where(pick, _BIG_KEY, key)
+    return sel
+
+
+def inband_step(cp: ControlParams, rp: RunParams, st: FleetState,
+                util, alert, xp, p_in=None):
+    """One in-band per-VM controller poll (paper Fig. 2 steps 4-5).
+    `alert`: (..., S) bool. `p_in` optionally carries the already-polled
+    entry power. Returns (new_state, power_after_action)."""
+    table = xp.asarray(FREQ_TABLE)
+    active = rp.active
+    low = ~rp.uf_mask if active is None else (~rp.uf_mask) & active
+    minp = _per_core(rp.min_pstate, xp)
+
+    p0 = server_power(util, st.freq, active, cp, xp) \
+        if p_in is None else p_in                             # (..., S)
+    target = _per_server(rp.target_w, xp)
+    over_t = p0 > target
+    start = alert & over_t & ~st.capping
+    quiet = ~(alert | over_t)
+    clear = xp.where(st.capping & quiet,
+                     st.clear_s + _F32(cp.dt), _F32(0.0))
+    lift = st.capping & (clear >= _F32(cp.lift_after_s))
+    lower_c = st.capping & ~lift & over_t
+    raise_c = st.capping & ~lift & ~over_t
+
+    # one fused selection — lower_c and raise_c are mutually exclusive
+    # per server, so a single greedy pass serves both:
+    #   lower: N highest-frequency (lowest-pstate) low-prio cores;
+    #   raise: N lowest-frequency (highest-pstate) low-prio cores —
+    #          committed only if the predicted power keeps headroom
+    #          below the target.
+    lo_s = lower_c[..., None]
+    eligible = low & xp.where(lo_s, st.pstate < minp,
+                              raise_c[..., None] & (st.pstate > 0))
+    level = xp.where(lo_s, st.pstate, _I32(N_PSTATES - 1) - st.pstate)
+    sel = _first_n_mask(eligible, level, N_PSTATES, cp.n_raise, xp)
+    sel_lo = sel & lo_s
+    sel_hi = sel & raise_c[..., None]
+    trial = st.pstate - sel_hi.astype(_I32)
+    trial_p = server_power(util, table[trial], active, cp, xp)
+    commit = raise_c & (trial_p < target
+                        - _F32(cp.raise_headroom_w))
+
+    pstate = xp.where(start[..., None] & low, minp, st.pstate)
+    pstate = xp.where(lift[..., None], _I32(0), pstate)
+    pstate = pstate + xp.where(sel_lo, _I32(1), _I32(0))
+    pstate = xp.where(commit[..., None], trial, pstate)
+
+    capping = (st.capping | start) & ~lift
+    rapl = st.rapl & ~lift
+    clear_s = xp.where(start, _F32(0.0),
+                       xp.where(st.capping & ~lift, clear, _F32(np.inf)))
+
+    intended = table[pstate]
+    freq = xp.where(rapl[..., None], xp.minimum(intended, st.freq),
+                    intended)
+    if active is not None:
+        freq = xp.where(active, freq, _F32(F_MAX))
+    p1 = server_power(util, freq, active, cp, xp)
+    return FleetState(freq, pstate, capping, rapl, clear_s), p1
+
+
+def rapl_step(cp: ControlParams, rp: RunParams, st: FleetState,
+              util, engaged, xp, p_in=None, intended=None):
+    """Out-of-band full-server capping (paper §II-B): throttle ALL cores
+    equally while over the hard server budget; restore gradually, handing
+    control back to the in-band p-state setting. `engaged`: (..., S).
+    `p_in`/`intended` optionally carry the entry power and the in-band
+    frequency setting already computed by the caller."""
+    active = rp.active
+    budget = _per_server(rp.server_budget_w, xp)
+    p1 = server_power(util, st.freq, active, cp, xp) \
+        if p_in is None else p_in
+    over = p1 > budget
+    cut = engaged & over
+    restore = engaged & ~over & st.rapl
+
+    if intended is None:
+        intended = xp.asarray(FREQ_TABLE)[st.pstate]
+    if active is None:
+        f_top = xp.max(st.freq, axis=-1)
+    else:
+        f_top = xp.max(xp.where(active, st.freq, _F32(F_MIN)), axis=-1)
+    uniform = xp.maximum(f_top - _F32(cp.rapl_step), _F32(F_MIN))
+    freq = xp.where(cut[..., None],
+                    xp.minimum(st.freq, uniform[..., None]), st.freq)
+    do_raise = restore & (p1 < budget - _F32(2.0 * cp.alert_margin_w))
+    freq = xp.where(do_raise[..., None],
+                    xp.minimum(freq + _F32(cp.rapl_step), intended), freq)
+    reached = freq >= intended - _F32(1e-9)
+    if active is None:
+        done = xp.all(reached, axis=-1)
+    else:
+        freq = xp.where(active, freq, _F32(F_MAX))
+        done = xp.all(reached | ~active, axis=-1)
+    rapl = xp.where(cut, True, xp.where(restore & done, False, st.rapl))
+    p2 = server_power(util, freq, active, cp, xp)
+    return FleetState(freq, st.pstate, st.capping, rapl, st.clear_s), p2
+
+
+class StepOutputs(NamedTuple):
+    server_power_w: Any      # (..., S) after control action
+    chassis_power_w: Any     # (...,)
+    alert: Any               # (...,) chassis-manager alert this poll
+    rapl: Any                # (..., S) RAPL engaged after the step
+
+
+def fleet_step(cp: ControlParams, rp: RunParams, st: FleetState,
+               util, xp) -> tuple:
+    """One 200 ms poll of a whole (batch of) chassis: PSU poll ->
+    chassis-manager alert -> per-VM controllers -> RAPL backstop."""
+    active = rp.active
+    p0 = server_power(util, st.freq, active, cp, xp)       # (..., S)
+    chassis_p = xp.sum(p0, axis=-1)                        # (...,)
+    alert = chassis_p >= xp.asarray(rp.alert_w)
+
+    if cp.mode == "none":
+        return st, StepOutputs(p0, chassis_p, alert, st.rapl)
+    if cp.mode == "rapl":
+        engaged = xp.ones(p0.shape, dtype=bool)
+        st2, p = rapl_step(cp, rp, st, util, engaged, xp, p_in=p0)
+    else:                                                  # 'per_vm'
+        st1, p1 = inband_step(cp, rp, st, util,
+                              xp.broadcast_to(alert[..., None], p0.shape),
+                              xp, p_in=p0)
+        engaged = p1 > _per_server(rp.server_budget_w, xp) \
+            + _F32(cp.psu_trip_margin_w)
+        if cp.rapl_continuation:
+            engaged = engaged | st1.rapl
+        st2, p = rapl_step(cp, rp, st1, util, engaged, xp, p_in=p1)
+    return st2, StepOutputs(p, xp.sum(p, axis=-1), alert, st2.rapl)

@@ -1,13 +1,13 @@
 """Power-control integration: the paper's per-VM capping controller
 governing training/serving jobs (the 'VMs' of this framework).
 
-Each job registers with a JobPowerAgent carrying its predicted
-criticality tag (from core.predictor) and utilization. The agent:
+Each job registers with a ChassisPowerSim carrying its predicted
+criticality tag (from core.predictor) and utilization. The sim:
 
   * reports job power to the chassis model (core.power_model) from the
     measured step-time duty cycle;
-  * receives frequency caps from the per-VM controller (core.capping)
-    when the chassis manager raises an alert;
+  * applies frequency caps from the per-VM controller when the chassis
+    manager raises an alert;
   * maps the DVFS frequency to a throughput multiplier: the training
     loop sleeps (1/f - 1) x step_time, exactly how a p-state cap
     manifests to a compute-bound job.
@@ -16,17 +16,26 @@ Criticality-aware semantics from the paper: user-facing (serving) jobs
 are in the high-priority core group and are never throttled by the
 in-band path; batch (training) jobs absorb the frequency cuts; RAPL
 remains the hardware backstop.
+
+This is the jnp twin the capping docstring promises: the control step
+is the SAME `repro.core.fleet_dynamics.fleet_step` the simulators scan,
+jit-compiled here (one server, jnp path) so the control plane runs
+compiled alongside the training loop. `backend='numpy'` keeps the
+oracle path for environments without jax.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.capping import (ChassisManager, PerVMController,
-                                RaplController, ServerCapState)
-from repro.core.power_model import F_MAX, ServerPowerModel
+from repro.core.capping import ChassisManager, ServerCapState
+from repro.core.fleet_dynamics import (ALERT_FRACTION, ALERT_MARGIN_W,
+                                       ControlParams, FleetState,
+                                       RunParams, fleet_step)
+from repro.core.power_model import F_MAX, N_PSTATES, ServerPowerModel
 
 
 @dataclass
@@ -37,18 +46,32 @@ class JobSpec:
     p95_util: float                    # predicted bucket midpoint
 
 
+@functools.lru_cache(maxsize=None)
+def _jit_step(cp: ControlParams):
+    """Compiled one-chassis control step (cached per static config)."""
+    import jax
+    import jax.numpy as jnp
+    return jax.jit(lambda rp, st, util: fleet_step(cp, rp, st, util, jnp))
+
+
 @dataclass
 class ChassisPowerSim:
     """One simulated chassis hosting framework jobs on its servers."""
     budget_w: float
     model: ServerPowerModel = field(default_factory=ServerPowerModel)
     jobs: list = field(default_factory=list)
+    backend: str = "jax"
 
     def __post_init__(self):
         self.state = None
-        self.controller = None
-        self.rapl = None
         self.manager = ChassisManager(self.budget_w)
+        # the framework integration trips RAPL exactly at the budget and
+        # does not keep polling it through the restore phase (the seed's
+        # semantics), unlike the chassis simulator
+        self._cp = ControlParams.from_model(
+            self.model, mode="per_vm", psu_trip_margin_w=0.0,
+            rapl_continuation=False)
+        self._rp = None
 
     def register(self, job: JobSpec):
         self.jobs.append(job)
@@ -56,8 +79,13 @@ class ChassisPowerSim:
         uf_mask = np.concatenate([
             np.full(j.cores, j.user_facing) for j in self.jobs])
         self.state = ServerCapState(n_cores, uf_mask)
-        self.controller = PerVMController(self.model, self.budget_w)
-        self.rapl = RaplController(self.model, self.budget_w)
+        self._rp = RunParams(
+            server_budget_w=np.float32(self.budget_w),
+            target_w=np.float32(self.budget_w - ALERT_MARGIN_W),
+            alert_w=np.float32(self.budget_w * ALERT_FRACTION),
+            min_pstate=np.int32(N_PSTATES - 1),
+            uf_mask=np.asarray(uf_mask, bool).reshape(1, -1),
+            active=None)
 
     def job_slice(self, name: str) -> slice:
         start = 0
@@ -69,12 +97,15 @@ class ChassisPowerSim:
 
     def step(self, utils: np.ndarray) -> dict:
         """One 200 ms control step; utils = per-core utilization."""
-        power = self.model.power(utils, self.state.freq)
-        alert = self.manager.poll(power)
-        p = self.controller.step(self.state, utils, alert)
-        if p > self.controller.budget:
-            p = self.rapl.step(self.state, utils)
-        return {"power_w": p, "alert": alert,
+        util = np.asarray(utils, np.float32).reshape(1, -1)
+        st = self.state._pack()
+        if self.backend == "jax":
+            st2, outs = _jit_step(self._cp)(self._rp, st, util)
+        else:
+            st2, outs = fleet_step(self._cp, self._rp, st, util, np)
+        self.state._unpack(FleetState(*(np.asarray(x) for x in st2)))
+        return {"power_w": float(outs.chassis_power_w),
+                "alert": bool(outs.alert),
                 "freq": self.state.freq.copy()}
 
     def job_frequency(self, name: str) -> float:

@@ -2,7 +2,7 @@
 
 A 200 ms-step simulator of the paper's testbed: 12-blade chassis, 40-core
 blades (2x20), the per-VM controller + chassis manager + RAPL backup from
-`repro.core.capping`, and two instrumented applications:
+`repro.core.fleet_dynamics`, and two instrumented applications:
 
   * UF app — latency-critical transaction processing: open-loop arrivals
     into a fluid queue whose service capacity is the sum of its cores'
@@ -10,72 +10,37 @@ blades (2x20), the per-VM controller + chassis manager + RAPL backup from
   * NUF app — batch (Terasort-like): saturates its cores; total work is
     fixed, so its metric is the completion slowdown: (time-integral of
     core frequency at no-cap) / (same integral capped).
+
+This module is now a thin, API-stable adapter over the batched fleet
+engine (`repro.sim.fleet`): `backend='numpy'` steps the oracle in a
+Python loop (the seed's execution model); `backend='jax'` runs the
+scan/vmap-compiled engine, where Figs 4-6 are slices of one fleet run.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from repro.core.power_model import ServerPowerModel
+from repro.sim.fleet import (FleetResult, ServerSpec, SimResult, VMSpec,
+                             _uf_load_trace, run_fleet)
 
-import numpy as np
-
-from repro.core.capping import (ALERT_MARGIN_W, POLL_INTERVAL_S,
-                                ChassisManager, PerVMController,
-                                RaplController, ServerCapState)
-from repro.core.power_model import F_MAX, ServerPowerModel
-
-
-@dataclass
-class VMSpec:
-    n_cores: int
-    is_uf: bool
-    #: offered load as a fraction of the VM's full-frequency capacity
-    load: float = 0.75
-
-
-@dataclass
-class ServerSpec:
-    vms: list                       # list[VMSpec]; sum cores <= n_cores
-    n_cores: int = 40
-
-
-@dataclass
-class AppMetrics:
-    latencies: list = field(default_factory=list)     # UF: per-step latency
-    speed_integral: float = 0.0                       # NUF: sum f dt
-
-    def p95_latency(self) -> float:
-        return float(np.percentile(np.array(self.latencies), 95))
-
-
-def _uf_load_trace(rng, n_steps: int, base: float) -> np.ndarray:
-    """Fluctuating interactive load (paper Fig. 4 power wiggles)."""
-    wave = 0.12 * np.sin(np.linspace(0, 6 * np.pi, n_steps))
-    slow = 0.06 * np.sin(np.linspace(0, 1.5 * np.pi, n_steps))
-    noise = rng.normal(0, 0.03, n_steps)
-    return np.clip(base + wave + slow + noise, 0.05, 1.2)
-
-
-@dataclass
-class SimResult:
-    power_w: np.ndarray                 # (n_steps,) per server or chassis
-    min_nuf_freq: np.ndarray            # (n_steps,)
-    uf_p95_latency: float               # mean across UF VMs
-    nuf_slowdown: float                 # mean across NUF VMs (>= 1.0)
-    rapl_engaged_frac: float
+__all__ = ["VMSpec", "ServerSpec", "SimResult", "simulate_server",
+           "simulate_chassis", "paper_single_server_spec",
+           "paper_chassis_specs", "_uf_load_trace"]
 
 
 def simulate_server(spec: ServerSpec, budget_w: float | None,
                     mode: str, duration_s: float = 600.0,
                     seed: int = 0,
-                    model: ServerPowerModel | None = None) -> SimResult:
+                    model: ServerPowerModel | None = None,
+                    backend: str = "numpy") -> SimResult:
     """One server under a power cap. mode: 'none' | 'rapl' | 'per_vm'."""
-    chassis = simulate_chassis([spec], None if budget_w is None
-                               else budget_w, mode, duration_s, seed, model)
-    return chassis
+    return simulate_chassis([spec], budget_w, mode, duration_s, seed,
+                            model, backend)
 
 
 def simulate_chassis(specs: list, budget_w: float | None, mode: str,
                      duration_s: float = 600.0, seed: int = 0,
-                     model: ServerPowerModel | None = None) -> SimResult:
+                     model: ServerPowerModel | None = None,
+                     backend: str = "numpy") -> SimResult:
     """Simulate a chassis of servers under a shared chassis budget.
 
     mode 'per_vm' runs the full paper stack: chassis-manager alerts ->
@@ -83,127 +48,9 @@ def simulate_chassis(specs: list, budget_w: float | None, mode: str,
     existing full-server mechanism (PSU -> BMC -> RAPL, all cores
     equally). mode 'none' = uncapped.
     """
-    model = model or ServerPowerModel()
-    rng = np.random.default_rng(seed)
-    n_steps = int(duration_s / POLL_INTERVAL_S)
-    n_srv = len(specs)
-
-    states, per_vm_ctrls, rapl_ctrls, core_vm, vm_specs = [], [], [], [], []
-    uf_loads = []        # list of (server idx, vm idx, cores, load trace)
-    server_budget = None if budget_w is None else budget_w / n_srv
-    for si, spec in enumerate(specs):
-        uf_mask = np.zeros(spec.n_cores, bool)
-        owner = np.full(spec.n_cores, -1)
-        c0 = 0
-        for vi, vm in enumerate(spec.vms):
-            owner[c0:c0 + vm.n_cores] = vi
-            if vm.is_uf:
-                uf_mask[c0:c0 + vm.n_cores] = True
-                uf_loads.append((si, vi, (c0, c0 + vm.n_cores),
-                                 _uf_load_trace(rng, n_steps, vm.load)))
-            c0 += vm.n_cores
-        states.append(ServerCapState(spec.n_cores, uf_mask))
-        core_vm.append(owner)
-        vm_specs.append(spec.vms)
-        sb = server_budget if server_budget is not None else np.inf
-        per_vm_ctrls.append(PerVMController(model, sb))
-        rapl_ctrls.append(RaplController(model, sb))
-
-    manager = ChassisManager(budget_w if budget_w is not None else np.inf)
-    backlogs = {(si, vi): 0.0 for si, vi, _, _ in uf_loads}
-    uf_metrics = {(si, vi): AppMetrics() for si, vi, _, _ in uf_loads}
-    nuf_speed = {}
-    for si, spec in enumerate(specs):
-        for vi, vm in enumerate(spec.vms):
-            if not vm.is_uf:
-                nuf_speed[(si, vi)] = 0.0
-
-    power_trace = np.zeros(n_steps)
-    min_freq_trace = np.zeros(n_steps)
-    rapl_steps = 0
-
-    utils = [np.zeros(s.n_cores) for s in specs]
-    for t in range(n_steps):
-        # --- offered utilization per core ---
-        for si, spec in enumerate(specs):
-            u = utils[si]
-            for vi, vm in enumerate(spec.vms):
-                sel = core_vm[si] == vi
-                if vm.is_uf:
-                    continue            # set from load trace below
-                u[sel] = 1.0            # batch saturates its cores
-        for si, vi, (a, b), trace in uf_loads:
-            # interactive util rises when cores are slowed (same work,
-            # less capacity): util = min(1, load / f)
-            f = states[si].freq[a:b]
-            utils[si][a:b] = np.minimum(trace[t] / np.maximum(f, 1e-3), 1.0)
-
-        # --- power + control ---
-        chassis_power = sum(
-            per_vm_ctrls[si].model.power(utils[si], states[si].freq)
-            for si in range(n_srv))
-        alert = manager.poll(chassis_power)
-        total = 0.0
-        for si in range(n_srv):
-            st = states[si]
-            if mode == "per_vm":
-                p = per_vm_ctrls[si].step(st, utils[si], alert)
-                # out-of-band backup if still above the blade budget
-                # (PSU trip threshold sits just above it), or while a
-                # previous engagement is still restoring
-                from repro.core.capping import PSU_TRIP_MARGIN_W
-                if (p > per_vm_ctrls[si].budget + PSU_TRIP_MARGIN_W
-                        or st.rapl_active):
-                    p = rapl_ctrls[si].step(st, utils[si])
-            elif mode == "rapl":
-                p = rapl_ctrls[si].step(st, utils[si])
-            else:
-                p = per_vm_ctrls[si].model.power(utils[si], st.freq)
-            total += p
-            if st.rapl_active:
-                rapl_steps += 1
-        power_trace[t] = total
-
-        nuf_f = [states[si].freq[core_vm[si] == vi]
-                 for si in range(n_srv)
-                 for vi, vm in enumerate(specs[si].vms) if not vm.is_uf]
-        min_freq_trace[t] = min(f.min() for f in nuf_f) if nuf_f else F_MAX
-
-        # --- application models ---
-        for si, vi, (a, b), trace in uf_loads:
-            cap = float(states[si].freq[a:b].sum())          # capacity
-            lam = trace[t] * (b - a)                         # offered work
-            backlog = backlogs[(si, vi)]
-            backlog = max(0.0, backlog + (lam - cap) * POLL_INTERVAL_S)
-            # closed-loop client pool (the paper's TPC-E-like app has a
-            # finite concurrency): in-flight work is bounded, so sustained
-            # overload degrades throughput with bounded latency
-            backlog = min(backlog, 1.0 * cap)
-            backlogs[(si, vi)] = backlog
-            service = 1.0 / (states[si].freq[a:b].mean())
-            # cap the stationary-queue term at rho=0.9: sustained overload
-            # is carried by the backlog term instead of the M/M/c pole
-            rho = min(lam / max(cap, 1e-6), 0.9)
-            latency = service * (1.0 + rho / (1.0 - rho) * 0.15) \
-                + backlog / max(cap, 1e-6)
-            uf_metrics[(si, vi)].latencies.append(latency)
-        for (si, vi) in nuf_speed:
-            sel = core_vm[si] == vi
-            nuf_speed[(si, vi)] += float(
-                states[si].freq[sel].sum()) * POLL_INTERVAL_S
-
-    uf_p95 = float(np.mean([m.p95_latency()
-                            for m in uf_metrics.values()])) \
-        if uf_metrics else 0.0
-    # slowdown = nominal speed integral / achieved speed integral
-    slowdowns = []
-    for (si, vi), integ in nuf_speed.items():
-        sel = core_vm[si] == vi
-        nominal = float(sel.sum()) * F_MAX * duration_s
-        slowdowns.append(nominal / max(integ, 1e-9))
-    nuf_slow = float(np.mean(slowdowns)) if slowdowns else 1.0
-    return SimResult(power_trace, min_freq_trace, uf_p95, nuf_slow,
-                     rapl_steps / max(n_steps * n_srv, 1))
+    res: FleetResult = run_fleet(specs, budget_w, mode, duration_s,
+                                 seed, model, backend=backend)
+    return res.chassis(0)
 
 
 # --- canonical experiment setups -----------------------------------------

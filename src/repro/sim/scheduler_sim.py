@@ -11,16 +11,26 @@ Reported metrics (paper's four):
   * average empty-server ratio,
   * std-dev across chassis of the chassis score 1 - rho_peak/rho_max,
   * std-dev across servers of the server score .5(1+(gNUF-gUF)/N).
+
+New: the placements the scheduler actually produced can be fed to the
+batched fleet engine (`repro.sim.fleet`) to measure the *capping
+dynamics* they induce — `evaluate_power_dynamics` vmaps the compiled
+chassis simulator across the live chassis layouts, closing the loop
+between Fig 7 (placement balance) and Figs 4-6 (per-VM capping).
 """
 from __future__ import annotations
 
 import heapq
+from collections import defaultdict
 from dataclasses import dataclass
 
 import numpy as np
 
 from repro.core.placement import ClusterState, SchedulerPolicy
 from repro.sim import telemetry as tel
+from repro.sim.fleet import (ServerSpec, VMSpec, build_layout,
+                             build_uf_traces, run_fleet_layouts,
+                             stack_layouts)
 
 CORES_PER_BLADE = 40            # Table I: 2 x 20 cores
 BLADES_PER_CHASSIS = 12
@@ -68,6 +78,17 @@ class PredictionChannel:
 
 
 @dataclass
+class PowerEval:
+    """Capping dynamics of scheduler-produced placements (fleet engine)."""
+    chassis_ids: np.ndarray             # (B,) evaluated chassis
+    uf_p95_latency: np.ndarray          # (B,)
+    nuf_slowdown: np.ndarray            # (B,)
+    rapl_engaged_frac: np.ndarray       # (B,)
+    alert_frac: np.ndarray              # (B,)
+    power_max_w: np.ndarray             # (B,)
+
+
+@dataclass
 class SimMetrics:
     failure_rate: float
     empty_server_ratio: float
@@ -75,6 +96,62 @@ class SimMetrics:
     server_score_std: float
     placements: int
     failures: int
+    power: PowerEval | None = None
+
+
+def evaluate_power_dynamics(vm_live: dict, chassis_of: np.ndarray,
+                            n_chassis: int, budget_w: float,
+                            blades_per_chassis: int = BLADES_PER_CHASSIS,
+                            cores_per_blade: int = CORES_PER_BLADE,
+                            sample_chassis: int = 8,
+                            duration_s: float = 60.0, seed: int = 0,
+                            backend: str = "jax") -> PowerEval:
+    """Run the fleet engine on the placements the scheduler produced.
+
+    Picks the `sample_chassis` most-allocated chassis, packs each one's
+    live VMs into padded fleet layouts (UF VMs' offered load = their
+    effective P95), and simulates the per-VM capping stack on all of
+    them in one vmapped call. Different chassis have different VM
+    placements — the layout arrays are the batch axis.
+    """
+    per_server = defaultdict(list)
+    alloc = np.zeros(n_chassis)
+    for (srv, cores, p95e, ufp) in vm_live.values():
+        per_server[srv].append(VMSpec(int(cores), bool(ufp),
+                                      load=float(p95e)))
+        alloc[chassis_of[srv]] += cores
+    picked = np.argsort(-alloc)[:sample_chassis]
+    picked = picked[alloc[picked] > 0]
+
+    def chassis_specs(c):
+        servers = np.nonzero(chassis_of == c)[0]
+        return [ServerSpec(vms=per_server.get(int(s), []),
+                           n_cores=cores_per_blade) for s in servers]
+
+    all_specs = [chassis_specs(c) for c in picked]
+    pad_uf = max(1, max(sum(v.is_uf for s in sp for v in s.vms)
+                        for sp in all_specs))
+    pad_nuf = max(1, max(sum(not v.is_uf for s in sp for v in s.vms)
+                         for sp in all_specs))
+    layouts = [build_layout(sp, pad_uf_to=pad_uf, pad_nuf_to=pad_nuf,
+                            pad_cores_to=cores_per_blade)
+               for sp in all_specs]
+    n_steps = int(duration_s / 0.2)
+    traces = np.stack([build_uf_traces(lo, n_steps, seed + i)
+                       for i, lo in enumerate(layouts)])
+    la = stack_layouts(layouts)
+    res = run_fleet_layouts(
+        la, np.stack([lo.uf_valid for lo in layouts]),
+        np.stack([lo.nuf_valid for lo in layouts]),
+        np.stack([lo.nuf_cores for lo in layouts]),
+        np.full(len(layouts), budget_w), "per_vm", traces,
+        backend=backend)
+    return PowerEval(chassis_ids=picked,
+                     uf_p95_latency=res.uf_p95_latency,
+                     nuf_slowdown=res.nuf_slowdown,
+                     rapl_engaged_frac=res.rapl_engaged_frac,
+                     alert_frac=res.alert_frac,
+                     power_max_w=res.power_w.max(-1))
 
 
 def _sample_vm(rng):
@@ -93,7 +170,11 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              days: float = 30.0, seed: int = 0,
              deployments_per_hour: float = 8.0,
              target_uf_core_ratio: float = 0.40,
-             sample_every_h: float = 2.0) -> SimMetrics:
+             sample_every_h: float = 2.0,
+             power_eval_budget_w: float | None = None,
+             power_eval_chassis: int = 8,
+             power_eval_duration_s: float = 60.0,
+             power_eval_backend: str = "jax") -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
     UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
     (bucket 2)."""
@@ -146,12 +227,19 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             heapq.heappush(departures, (t + life_h, token))
             token += 1
 
+    power = None
+    if power_eval_budget_w is not None and vm_live:
+        power = evaluate_power_dynamics(
+            vm_live, chassis_of, state.n_chassis, power_eval_budget_w,
+            sample_chassis=power_eval_chassis,
+            duration_s=power_eval_duration_s, seed=seed,
+            backend=power_eval_backend)
     return SimMetrics(
         failure_rate=failures / max(placements, 1),
         empty_server_ratio=float(np.mean(empty_samples)),
         chassis_score_std=float(np.mean(chassis_stds)),
         server_score_std=float(np.mean(server_stds)),
-        placements=placements, failures=failures)
+        placements=placements, failures=failures, power=power)
 
 
 def fig7_sweep(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), days: float = 30.0,

@@ -1,0 +1,133 @@
+"""Minimal deterministic stand-in for `hypothesis`.
+
+The tier-1 suite must run on a bare interpreter (jax + numpy + pytest
+only). When the real hypothesis is unavailable, `conftest.py` installs
+this module as `hypothesis` (and `hypothesis.strategies`,
+`hypothesis.extra.numpy`) in `sys.modules`. Property tests then run a
+fixed number of deterministic examples drawn from a seeded generator —
+weaker than real hypothesis (no shrinking, no edge-case bias), but the
+properties still get exercised instead of the whole collection crashing.
+"""
+from __future__ import annotations
+
+
+import sys
+import types
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self.sample = sample
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                  max_value + 1)))
+
+
+def floats(min_value=0.0, max_value=1.0, width=64, **_):
+    def sample(rng):
+        v = rng.uniform(min_value, max_value)
+        return float(np.float32(v)) if width == 32 else float(v)
+    return _Strategy(sample)
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+
+def arrays(dtype, shape, elements=None, **_):
+    if isinstance(shape, int):
+        shape = (shape,)
+
+    def sample(rng):
+        if elements is None:
+            return rng.random(shape).astype(dtype)
+        n = int(np.prod(shape))
+        flat = [elements.sample(rng) for _ in range(n)]
+        return np.asarray(flat, dtype=dtype).reshape(shape)
+    return _Strategy(sample)
+
+
+class settings:
+    _max_examples = DEFAULT_MAX_EXAMPLES
+    _profiles: dict = {}
+
+    def __init__(self, **kw):          # @settings(...) decorator form
+        self._kw = kw
+
+    def __call__(self, fn):
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, max_examples=DEFAULT_MAX_EXAMPLES,
+                         **_):
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._max_examples = cls._profiles.get(name, DEFAULT_MAX_EXAMPLES)
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied()
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def given(*strategies, **kw_strategies):
+    def decorate(fn):
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for _ in range(settings._max_examples):
+                args = [s.sample(rng) for s in strategies]
+                kwargs = {k: s.sample(rng)
+                          for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _Unsatisfied:
+                    continue
+        # keep the test's name/module for pytest, but NOT __wrapped__
+        # (pytest would introspect the original signature and look for
+        # fixtures named like the strategy arguments)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this stub as `hypothesis` in sys.modules."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.booleans = booleans
+    st_mod.sampled_from = sampled_from
+    extra = types.ModuleType("hypothesis.extra")
+    hnp = types.ModuleType("hypothesis.extra.numpy")
+    hnp.arrays = arrays
+    hyp.strategies = st_mod
+    extra.numpy = hnp
+    hyp.extra = extra
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = hnp

@@ -1,13 +1,19 @@
 import os
-import sys
 
 # tests must see exactly ONE device (the dry-run sets 512 in its own
 # process); keep any user XLA_FLAGS out of the way.
 os.environ.pop("XLA_FLAGS", None)
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-from hypothesis import settings  # noqa: E402
+# The suite must collect and run on a bare interpreter (jax + numpy +
+# pytest). If hypothesis is missing, install the deterministic stub so
+# property tests still exercise a fixed sample instead of crashing
+# collection. `pip install -e .[test]` brings in the real thing.
+try:
+    from hypothesis import settings
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+    from hypothesis import settings
 
 settings.register_profile("ci", max_examples=20, deadline=None)
 settings.load_profile("ci")

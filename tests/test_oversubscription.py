@@ -102,6 +102,51 @@ def test_scenario_table_orderings(fleet):
         osub["predictions_all_no_uf_impact"] + 1e-9
 
 
+def test_infeasible_highest_draw_returns_provisioned(fleet):
+    """first_bad == 0: even the single highest draw cannot be capped
+    within the event-rate tolerances -> no oversubscription at all."""
+    draws = np.array([100.0] * 5 + [200.0])
+    cfg = OversubConfig(emax_uf=0.0, fmin_uf=0.75,
+                        emax_nuf=0.0, fmin_nuf=0.50, buffer=0.10)
+    res = compute_budget(draws, 3720.0, cfg, fleet)
+    assert res.budget_w == 3720.0
+    assert res.budget_pre_buffer_w == 3720.0
+    assert res.uf_event_rate == 0.0 and res.nuf_event_rate == 0.0
+    assert res.oversubscription == 0.0
+
+
+def test_buffer_clamped_at_provisioned_power(fleet):
+    """Step 5 never raises the budget past the provisioned power."""
+    rng = np.random.default_rng(7)
+    draws = rng.uniform(2000, 2900, 5000)
+    cfg = OversubConfig(0.001, 0.75, 0.01, 0.5, buffer=1.0)  # +100 %
+    res = compute_budget(draws, 3000.0, cfg, fleet)
+    assert res.budget_pre_buffer_w < 2900.0
+    assert res.budget_w == 3000.0                 # clamped
+    assert res.oversubscription == 0.0
+
+
+def test_full_server_parity_with_exclusive_counting():
+    """When the fleet is all-UF (red_NUF = 0) and both floors match,
+    exclusive event counting degenerates to the pooled full-server
+    rule: every event is a UF event and the combined tolerance binds.
+    Both paths must then pick the identical budget on a shared draw
+    set."""
+    rng = np.random.default_rng(8)
+    draws = np.concatenate([rng.uniform(2000, 3000, 20_000),
+                            rng.uniform(3000, 3400, 120)])
+    all_uf = FleetProfile(beta=1.0, util_uf=0.65, util_nuf=0.44,
+                          allocated_frac=0.85, servers_per_chassis=12,
+                          model=ServerPowerModel())
+    cfg = OversubConfig(emax_uf=0.004, fmin_uf=0.60,
+                        emax_nuf=0.0, fmin_nuf=0.60, buffer=0.0)
+    excl = compute_budget(draws, 3720.0, cfg, all_uf)
+    full = compute_budget(draws, 3720.0, cfg, all_uf, full_server=True)
+    assert full.budget_w == pytest.approx(excl.budget_w)
+    assert full.uf_event_rate == pytest.approx(excl.uf_event_rate)
+    assert excl.nuf_event_rate == 0.0 and full.nuf_event_rate == 0.0
+
+
 @given(st.integers(0, 1000))
 def test_budget_never_exceeds_provisioned(seed):
     rng = np.random.default_rng(seed)
