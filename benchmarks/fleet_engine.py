@@ -18,6 +18,7 @@ from benchmarks.common import emit
 from repro.sim.chassis_sim import paper_chassis_specs, simulate_chassis
 from repro.sim.fleet import build_layout, run_fleet
 
+OUT_PATH = "BENCH_fleet_engine.json"
 CHASSIS_COUNTS = (1, 64, 1024)
 NUMPY_MEASURE_CAP = 8          # loop at most this many chassis
 BUDGET = 2450.0
@@ -35,7 +36,7 @@ def _time(fn, repeat: int = 3) -> float:
 
 
 def run(duration_s: float = 30.0, seed: int = 0,
-        out_path: str = "BENCH_fleet_engine.json") -> dict:
+        out_path: str = OUT_PATH) -> dict:
     specs = paper_chassis_specs(balanced=True)
     layout = build_layout(specs)
     n_steps = int(duration_s / 0.2)

@@ -3,10 +3,27 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run             # all
   PYTHONPATH=src python -m benchmarks.run table4 fig7 # subset
+
+Each driver row pins the JSON artifact it writes (None = stdout only),
+so callers and CI can locate outputs without running anything.
 """
 from __future__ import annotations
 
 import sys
+
+#: (name, import path, JSON output path or None) — run order.
+DRIVERS = (
+    ("table2", "benchmarks.table2_criticality", None),
+    ("fig3", "benchmarks.fig3_scatter", None),
+    ("table3", "benchmarks.table3_models", None),
+    ("fig4_fig5", "benchmarks.fig4_5_server_capping", None),
+    ("fig6", "benchmarks.fig6_chassis", None),
+    ("fig7", "benchmarks.fig7_scheduler", None),
+    ("table4", "benchmarks.table4_oversubscription", None),
+    ("fleet", "benchmarks.fleet_engine", "BENCH_fleet_engine.json"),
+    ("serve", "benchmarks.serve_online", "BENCH_serve.json"),
+    ("roofline", "benchmarks.roofline_report", None),
+)
 
 
 def main() -> None:
@@ -16,33 +33,10 @@ def main() -> None:
         return not want or any(w in name for w in want)
 
     print("name,us_per_call,derived")
-    if on("table2"):
-        from benchmarks.table2_criticality import run
-        run()
-    if on("fig3"):
-        from benchmarks.fig3_scatter import run
-        run()
-    if on("table3"):
-        from benchmarks.table3_models import run
-        run()
-    if on("fig4") or on("fig5"):
-        from benchmarks.fig4_5_server_capping import run
-        run()
-    if on("fig6"):
-        from benchmarks.fig6_chassis import run
-        run()
-    if on("fig7"):
-        from benchmarks.fig7_scheduler import run
-        run()
-    if on("table4"):
-        from benchmarks.table4_oversubscription import run
-        run()
-    if on("fleet"):
-        from benchmarks.fleet_engine import run
-        run()
-    if on("roofline"):
-        from benchmarks.roofline_report import run
-        run()
+    for name, module, out in DRIVERS:
+        if on(name):
+            run = __import__(module, fromlist=["run"]).run
+            run(out_path=out) if out else run()
 
 
 if __name__ == '__main__':

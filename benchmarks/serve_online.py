@@ -1,0 +1,163 @@
+"""Online serving throughput: per-arrival numpy path vs the compiled
+serve pipeline (`repro.serve`).
+
+Baseline = the offline path called one arrival at a time, exactly as
+the pre-serve code would answer an online query: build the feature row
+from the aggregates dict, run the four numpy forests (Table III
+defaults), score candidates with `SchedulerPolicy.choose`, update
+`ClusterState`. The serve path runs the same arrivals through
+`ServePipeline` micro-batches.
+
+Both placement modes are measured against their own numpy twin:
+
+  * `rank_rule`  — the full Azure-style two-rule rank aggregation
+                   (`SchedulerPolicy()`), served by the incremental-
+                   rank scan (decision-exact; sort- and scatter-free);
+  * `algorithm1` — the paper's literal Algorithm-1 / §IV-E preference
+                   (`SchedulerPolicy(packing_weight=0)`), served by
+                   the rank-free scan (decision-exact; the fast path
+                   the production scheduler's 7 ms budget wants).
+
+Metrics: arrivals/s and p50/p99 per-batch latency. Writes
+BENCH_serve.json. `--smoke` serves one 64-arrival batch (CI).
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import features as F
+from repro.core.placement import ClusterState, SchedulerPolicy
+from repro.core.predictor import bucket_to_p95, train_service
+from repro.serve import ServeConfig, ServePipeline
+from repro.sim.telemetry import arrival_batch, generate_population
+
+OUT_PATH = "BENCH_serve.json"
+
+N_HISTORY = 1500
+N_ARRIVALS = 2048
+N_SERVERS = 720              # the Fig-7 cluster: 20 racks x 3 x 12
+BLADES_PER_CHASSIS = 12
+CORES_PER_SERVER = 40
+BATCH_SIZES = (64, 256)
+POLICIES = {"rank_rule": SchedulerPolicy(),
+            "algorithm1": SchedulerPolicy(packing_weight=0.0)}
+
+
+def _train(seed: int = 0, n_trees: int = 48):
+    pop = generate_population(N_HISTORY + N_ARRIVALS, seed=seed)
+    hist = F.Population(vms=pop.vms[:N_HISTORY])
+    arrivals = F.Population(vms=pop.vms[N_HISTORY:])
+    labels = hist.labels.astype(np.float64)      # ground truth as labels
+    aggs = F.subscription_aggregates(hist, labels)
+    svc = train_service(F.build_features(hist, aggs), labels.astype(np.int64),
+                        F.p95_bucket([v.p95_util for v in hist.vms]),
+                        n_trees=n_trees, seed=seed)
+    return hist, arrivals, labels, aggs, svc
+
+
+def _numpy_state():
+    return ClusterState(
+        n_servers=N_SERVERS, cores_per_server=CORES_PER_SERVER,
+        chassis_of_server=np.arange(N_SERVERS) // BLADES_PER_CHASSIS,
+        n_chassis=N_SERVERS // BLADES_PER_CHASSIS)
+
+
+def _numpy_per_arrival(arrivals, aggs, svc, policy) -> float:
+    """Serve every arrival one at a time on the host path; returns
+    wall seconds."""
+    state = _numpy_state()
+    t0 = time.perf_counter()
+    for vm in arrivals.vms:
+        x = F.build_features(F.Population(vms=[vm]), aggs)
+        q = svc.query(x)
+        is_uf = bool(q["workload_type_used"][0])
+        p95 = float(bucket_to_p95(q["p95_bucket_used"][0]))
+        srv = policy.choose(state, vm.cores, is_uf)
+        if srv is not None:
+            state.place(srv, vm.cores, policy.effective_p95(p95), is_uf)
+    return time.perf_counter() - t0
+
+
+def _make_pipe(svc, hist, labels, bs, policy):
+    return ServePipeline.from_history(
+        svc, hist, labels, n_servers=N_SERVERS,
+        cores_per_server=CORES_PER_SERVER,
+        blades_per_chassis=BLADES_PER_CHASSIS,
+        config=ServeConfig(batch_size=bs, policy=policy))
+
+
+def _serve_batches(pipe: ServePipeline, batches) -> list:
+    """Serve pre-packed batches; returns per-batch seconds."""
+    times = []
+    for b in batches:
+        t0 = time.perf_counter()
+        pipe.serve(b)                 # ServeResult is host-materialized
+        times.append(time.perf_counter() - t0)
+    return times
+
+
+def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:
+    hist, arrivals, labels, aggs, svc = _train(
+        n_trees=12 if smoke else 48)
+    if smoke:
+        arrivals = F.Population(vms=arrivals.vms[:64])
+    out = {"n_servers": N_SERVERS, "n_arrivals": len(arrivals.vms),
+           "modes": {}}
+    for mode, policy in POLICIES.items():
+        rows = []
+        for bs in (64,) if smoke else BATCH_SIZES:
+            batches = [arrival_batch(arrivals,
+                                     np.arange(i, min(i + bs,
+                                                      len(arrivals.vms))))
+                       for i in range(0, len(arrivals.vms), bs)]
+            pipe = _make_pipe(svc, hist, labels, bs, policy)
+            if len(batches) > 1:
+                # first batch = jit trace + steady-state entry, untimed
+                _serve_batches(pipe, batches[:1])
+                batches = batches[1:]
+            else:                                  # smoke: warm apart
+                warm = _make_pipe(svc, hist, labels, bs, policy)
+                _serve_batches(warm, batches[:1])
+            times = np.array(_serve_batches(pipe, batches))
+            served = sum(len(b) for b in batches)
+            p50 = float(np.percentile(times, 50))
+            # steady-state throughput from the median batch (the mean
+            # is os-jitter-bound on a small box); p99 is still reported
+            row = {"batch_size": bs, "arrivals": served,
+                   "arrivals_per_s": bs / p50,
+                   "arrivals_per_s_mean": served / times.sum(),
+                   "batch_p50_ms": p50 * 1e3,
+                   "batch_p99_ms": float(np.percentile(times, 99) * 1e3)}
+            rows.append(row)
+            emit(f"serve_online/{mode}/batch{bs}", times.mean() * 1e6,
+                 f"arrivals_per_s={row['arrivals_per_s']:.0f} "
+                 f"p50={row['batch_p50_ms']:.2f}ms "
+                 f"p99={row['batch_p99_ms']:.2f}ms")
+        if smoke:
+            out["modes"][mode] = {"serve": rows}
+            continue
+        t_np = _numpy_per_arrival(arrivals, aggs, svc, policy)
+        np_rate = len(arrivals.vms) / t_np
+        emit(f"serve_online/{mode}/numpy_per_arrival",
+             t_np / len(arrivals.vms) * 1e6,
+             f"arrivals_per_s={np_rate:.0f}")
+        out["modes"][mode] = {
+            "numpy_per_arrival": {"arrivals_per_s": np_rate,
+                                  "us_per_arrival":
+                                      t_np / len(arrivals.vms) * 1e6},
+            "serve": rows,
+            "speedup": {f"batch{r['batch_size']}":
+                        r["arrivals_per_s"] / np_rate for r in rows}}
+    if not smoke:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -58,3 +58,14 @@ res = compute_budget(draws.ravel(), 3720.0,
                      SCENARIOS["predictions_minimal_uf_impact"], fleet)
 print(f"oversubscription: {res.oversubscription:.1%} "
       f"(${res.savings_usd()/1e6:.0f}M on a 128 MW campus)")
+
+# 5 — serve an arrival stream through the online pipeline (DESIGN §9)
+from repro.serve import ServePipeline
+from repro.sim.telemetry import arrival_batch, generate_population as gen
+
+pipe = ServePipeline.from_history(svc, hist, labels, n_servers=36,
+                                  cores_per_server=40,
+                                  blades_per_chassis=12)
+served = pipe.serve(arrival_batch(gen(256, seed=7)))
+print(f"served 256 arrivals: {served.n_admitted} admitted, "
+      f"{served.n_conservative} conservative fallbacks")

@@ -28,9 +28,22 @@ def pack_forest(forest: ObliviousForest):
             t, d, forest.kind)
 
 
-@partial(jax.jit,
-         static_argnames=("n_trees", "depth", "kind", "interpret"))
-def _predict(x, gather, thr, leaf_tab, n_trees, depth, kind, interpret):
+def normalize_forest_output(summed, kind: str, n_trees: int):
+    """Summed leaf values -> class probabilities: RF mean / GB softmax.
+    The one definition shared by the kernel wrapper and the serving
+    path's ref/stacked formulations."""
+    if kind == "rf":
+        return summed / n_trees
+    m = summed - summed.max(-1, keepdims=True)
+    e = jnp.exp(m)
+    return e / e.sum(-1, keepdims=True)
+
+
+def predict_packed(x, gather, thr, leaf_tab, n_trees, depth, kind,
+                   interpret):
+    """Pad the batch to BLOCK_B, run the kernel on packed operands, and
+    normalize. Traceable — shared by `_predict` and the serving path
+    (`repro.serve.inference`)."""
     b = x.shape[0]
     pad = (-b) % BLOCK_B
     if pad:
@@ -38,11 +51,12 @@ def _predict(x, gather, thr, leaf_tab, n_trees, depth, kind, interpret):
     summed = forest_predict_pallas(x.astype(jnp.float32), gather, thr,
                                    leaf_tab, n_trees, depth,
                                    interpret=interpret)[:b]
-    if kind == "rf":
-        return summed / n_trees
-    m = summed - summed.max(-1, keepdims=True)
-    e = jnp.exp(m)
-    return e / e.sum(-1, keepdims=True)
+    return normalize_forest_output(summed, kind, n_trees)
+
+
+_predict = partial(jax.jit,
+                   static_argnames=("n_trees", "depth", "kind",
+                                    "interpret"))(predict_packed)
 
 
 def forest_predict(forest: ObliviousForest, x, interpret: bool | None = None):

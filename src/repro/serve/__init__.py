@@ -1,0 +1,31 @@
+"""Online prediction-and-admission serving pipeline (DESIGN.md §9).
+
+Device-resident Resource-Central path from arrival stream to placement
+decision: micro-batched featurization, batched two-stage forest
+inference with confidence gating, vectorized Algorithm-1 scoring, and
+power-headroom admission — one compiled flow per micro-batch, with
+double-buffered model hot-swap for the paper's daily retrain."""
+from repro.serve.admission import headroom_w, projected_chassis_power, \
+    rho_cap_from_budget
+from repro.serve.featurizer import SubscriptionTable, empty_table, \
+    featurize, featurize_batch, ingest_population, table_from_history, \
+    update_table
+from repro.serve.inference import PackedService, ServiceMeta, \
+    bucket_to_p95_jnp, pack_service, resolve_kernel, served_query
+from repro.serve.pipeline import ServeConfig, ServePipeline, ServeResult
+from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
+                                   DeviceClusterState, device_state,
+                                   fresh_state, place_batch, remove_batch,
+                                   score_chassis_batch, score_server_batch)
+
+__all__ = [
+    "SubscriptionTable", "empty_table", "featurize", "featurize_batch",
+    "ingest_population", "table_from_history", "update_table",
+    "PackedService", "ServiceMeta", "pack_service", "served_query",
+    "bucket_to_p95_jnp", "resolve_kernel",
+    "DeviceClusterState", "device_state", "fresh_state", "place_batch",
+    "remove_batch", "score_chassis_batch", "score_server_batch",
+    "FAIL_CAPACITY", "FAIL_POWER",
+    "rho_cap_from_budget", "projected_chassis_power", "headroom_w",
+    "ServeConfig", "ServePipeline", "ServeResult",
+]

@@ -1,0 +1,65 @@
+"""Power-headroom admission control (serve-pipeline stage 4).
+
+The fleet engine and the oversubscription strategy (paper §III-E)
+budget each chassis in watts; the scheduler's aggregates track
+`rho_peak = sum(p95 * cores)` per chassis. Under the calibrated server
+power model those are linearly related — a chassis of S blades drawing
+its VMs' P95 utilizations at nominal frequency consumes
+
+    P(chassis) = S * P_idle(f_max) + p_dyn_per_core * rho_peak
+
+so a watt budget becomes a ceiling on `rho_peak` that the placement
+scan checks in O(1) per arrival (`serve.placement.place_batch`),
+exactly the quantity `ClusterState` already maintains. Placements that
+would exceed it are rejected with FAIL_POWER before mutating state —
+the serving-path analogue of the fleet engine's alert threshold, which
+then only has to handle *prediction misses*, not knowingly-oversold
+chassis.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
+from repro.serve.placement import DeviceClusterState
+
+
+def rho_cap_from_budget(budget_w, blades_per_chassis: int,
+                        n_chassis: int,
+                        model: ServerPowerModel | None = None) -> np.ndarray:
+    """(C,) ceiling on per-chassis sum(p95*cores) implied by a chassis
+    watt budget. `budget_w`: scalar or (C,); None/inf disables."""
+    if budget_w is None:
+        return np.full(n_chassis, np.inf, np.float32)
+    model = model or ServerPowerModel()
+    budget = np.broadcast_to(np.asarray(budget_w, np.float64), (n_chassis,))
+    static = blades_per_chassis * float(idle_power(F_MAX))
+    cap = (budget - static) / model.p_dyn_per_core
+    return np.where(np.isfinite(budget), np.maximum(cap, 0.0),
+                    np.inf).astype(np.float32)
+
+
+def projected_chassis_power(state: DeviceClusterState,
+                            blades_per_chassis: int,
+                            model: ServerPowerModel | None = None) \
+        -> np.ndarray:
+    """(C,) projected peak draw of each chassis if every placed VM runs
+    at its effective P95 at nominal frequency (the admission model)."""
+    model = model or ServerPowerModel()
+    rho = np.asarray(state.rho_peak, np.float64)
+    return (blades_per_chassis * float(idle_power(F_MAX))
+            + model.p_dyn_per_core * rho).astype(np.float32)
+
+
+def headroom_w(state: DeviceClusterState, budget_w,
+               blades_per_chassis: int,
+               model: ServerPowerModel | None = None) -> np.ndarray:
+    """(C,) watts of remaining admission headroom (can be negative when
+    the budget is tightened below current commitments; +inf when
+    `budget_w` is None — no budget)."""
+    proj = projected_chassis_power(state, blades_per_chassis, model)
+    if budget_w is None:
+        return np.full(proj.shape, np.inf, np.float32)
+    budget = np.broadcast_to(np.asarray(budget_w, np.float64),
+                             proj.shape)
+    return (budget - proj).astype(np.float32)

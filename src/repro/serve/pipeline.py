@@ -1,0 +1,231 @@
+"""Online prediction-and-admission serving pipeline (paper §II-D).
+
+`ServePipeline` is the device-resident Resource-Central path from
+arrival stream to placement decision: a micro-batching ingest queue
+feeds one compiled flow per batch —
+
+    featurize (serve.featurizer)  ->  two-stage inference + gating
+    (serve.inference)  ->  Algorithm-1 scoring with fused power
+    admission (serve.placement / serve.admission)
+
+with all model operands, subscription aggregates, and cluster
+aggregates living on device between batches. The paper's daily retrain
+maps to `hot_swap`: the new forest is packed into the standby model
+buffer while the active one keeps serving, then an atomic flip routes
+the next batch to it — no arrival is dropped and no recompilation
+happens (retrained forests share shapes, so the serving jits are
+already specialized).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import SchedulerPolicy
+from repro.core.power_model import ServerPowerModel
+from repro.core.predictor import UF, PredictionService
+from repro.serve import admission, placement
+from repro.serve.featurizer import SubscriptionTable, featurize_batch, \
+    ingest_population, table_from_history
+from repro.serve.inference import bucket_to_p95_jnp, pack_service, \
+    resolve_kernel, served_query
+from repro.sim.telemetry import ArrivalBatch, Population
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 256
+    kernel: str = "auto"            # 'pallas' | 'ref' | 'auto'
+    policy: SchedulerPolicy = field(default_factory=SchedulerPolicy)
+
+
+@dataclass
+class ServeResult:
+    """Per-arrival decisions for one served batch (host arrays)."""
+    server: np.ndarray              # (B,) int32; FAIL_* codes on reject
+    workload_type: np.ndarray       # (B,) post-gating UF/NUF
+    p95_bucket: np.ndarray          # (B,) post-gating bucket
+    p95_eff: np.ndarray             # (B,) p95 recorded into aggregates
+    conservative: np.ndarray        # (B,) bool — hit a confidence gate
+
+    @property
+    def admitted(self) -> np.ndarray:
+        return self.server >= 0
+
+    @property
+    def n_admitted(self) -> int:
+        return int(self.admitted.sum())
+
+    @property
+    def n_capacity_rejected(self) -> int:
+        return int((self.server == placement.FAIL_CAPACITY).sum())
+
+    @property
+    def n_power_rejected(self) -> int:
+        return int((self.server == placement.FAIL_POWER).sum())
+
+    @property
+    def n_conservative(self) -> int:
+        return int(self.conservative.sum())
+
+
+def _concat_results(parts: list) -> ServeResult:
+    return ServeResult(*(np.concatenate([getattr(p, f) for p in parts])
+                         for f in ("server", "workload_type", "p95_bucket",
+                                   "p95_eff", "conservative")))
+
+
+def _concat_batches(parts: list) -> ArrivalBatch:
+    return ArrivalBatch(*(np.concatenate([getattr(p, f) for p in parts])
+                          for f in ArrivalBatch.__dataclass_fields__))
+
+
+class ServePipeline:
+    """Stateful serving endpoint. Not thread-safe; one instance per
+    serving shard (multi-host sharding is a ROADMAP open item)."""
+
+    def __init__(self, service: PredictionService,
+                 table: SubscriptionTable,
+                 state: placement.DeviceClusterState,
+                 cores_per_server: int,
+                 config: ServeConfig | None = None,
+                 chassis_budget_w=None,
+                 power_model: ServerPowerModel | None = None,
+                 blades_per_chassis: int | None = None):
+        self.config = config or ServeConfig()
+        self.table = table
+        self.state = state
+        self.cores_per_server = int(cores_per_server)
+        self._kernel = resolve_kernel(self.config.kernel)
+        # double-buffered model: index _active serves, 1-_active packs
+        self._buffers = [pack_service(service), None]
+        self._active = 0
+        n_chassis = state.rho_max.shape[0]
+        if blades_per_chassis is None:
+            blades_per_chassis = state.n_servers // n_chassis
+        self.blades_per_chassis = blades_per_chassis
+        self.power_model = power_model or ServerPowerModel()
+        self.rho_cap = jnp.asarray(admission.rho_cap_from_budget(
+            chassis_budget_w, blades_per_chassis, n_chassis,
+            self.power_model))
+        self._queue: list[ArrivalBatch] = []
+        self._queued = 0
+        self.swaps = 0
+        self.served = 0
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_history(cls, service: PredictionService, history: Population,
+                     uf_labels: np.ndarray, n_servers: int,
+                     cores_per_server: int, blades_per_chassis: int,
+                     table_capacity: int | None = None, **kw):
+        """Bootstrap table + empty cluster from an offline labeled
+        history (the state a daily retrain hands the serving job)."""
+        if table_capacity is None:
+            table_capacity = max(
+                (v.subscription for v in history.vms), default=0) + 1024
+        table = table_from_history(history, uf_labels, table_capacity)
+        chassis_of = np.arange(n_servers) // blades_per_chassis
+        state = placement.fresh_state(n_servers, cores_per_server,
+                                      chassis_of)
+        return cls(service, table, state, cores_per_server,
+                   blades_per_chassis=blades_per_chassis, **kw)
+
+    # -- model hot-swap (the paper's daily retrain) ------------------------
+    def hot_swap(self, new_service: PredictionService) -> None:
+        """Pack the retrained forest into the standby buffer, then flip
+        atomically. Serving calls between pack and flip keep using the
+        old model; the queue is untouched, so no arrival is dropped."""
+        standby = 1 - self._active
+        self._buffers[standby] = pack_service(new_service)
+        self._active = standby
+        self.swaps += 1
+
+    # -- telemetry ingestion (label-bootstrap loop) ------------------------
+    def observe(self, history: Population, uf_labels: np.ndarray) -> None:
+        """Fold freshly labeled telemetry into the subscription
+        aggregates (incremental twin of recomputing
+        `features.subscription_aggregates` offline)."""
+        self.table = ingest_population(self.table, history, uf_labels)
+
+    # -- serving -----------------------------------------------------------
+    def submit(self, batch: ArrivalBatch) -> list[ServeResult]:
+        """Ingest arrivals; serve every full micro-batch. Returns the
+        results that became ready (possibly empty — call `flush` to
+        drain a partial tail batch)."""
+        self._queue.append(batch)
+        self._queued += len(batch)
+        if self._queued < self.config.batch_size:
+            return []
+        merged = _concat_batches(self._queue)       # one copy, then slice
+        bs = self.config.batch_size
+        out = []
+        start = 0
+        while self._queued - start >= bs:
+            out.append(self._serve_padded(ArrivalBatch(
+                *(getattr(merged, f)[start:start + bs]
+                  for f in ArrivalBatch.__dataclass_fields__))))
+            start += bs
+        tail = ArrivalBatch(*(getattr(merged, f)[start:]
+                              for f in ArrivalBatch.__dataclass_fields__))
+        self._queue = [tail]
+        self._queued = len(tail)
+        return out
+
+    def flush(self) -> ServeResult | None:
+        """Serve whatever is queued (padded up to the batch size)."""
+        if not self._queued:
+            return None
+        merged = _concat_batches(self._queue)
+        self._queue, self._queued = [], 0
+        return self._serve_padded(merged)
+
+    def serve(self, batch: ArrivalBatch) -> ServeResult:
+        """Serve one batch synchronously, bypassing the queue (chunks
+        internally if larger than the configured micro-batch)."""
+        bs = self.config.batch_size
+        if len(batch) <= bs:
+            return self._serve_padded(batch)
+        parts = [ArrivalBatch(*(getattr(batch, f)[i:i + bs]
+                                for f in ArrivalBatch.__dataclass_fields__))
+                 for i in range(0, len(batch), bs)]
+        return _concat_results([self._serve_padded(p) for p in parts])
+
+    def _serve_padded(self, batch: ArrivalBatch) -> ServeResult:
+        b = len(batch)
+        pad_to = self.config.batch_size
+        packed, meta = self._buffers[self._active]
+        x = featurize_batch(self.table, batch, pad_to=pad_to)
+        q = served_query(packed, meta, x, kernel=self._kernel)
+        is_uf = q["workload_type_used"] == UF
+        policy = self.config.policy
+        if policy.use_utilization_predictions:
+            p95_eff = bucket_to_p95_jnp(q["p95_bucket_used"])
+        else:
+            p95_eff = jnp.ones(pad_to, jnp.float32)
+        cores = jnp.zeros(pad_to, jnp.float32) \
+            .at[:b].set(jnp.asarray(batch.cores))
+        valid = jnp.arange(pad_to) < b
+        self.state, servers = placement.place_batch(
+            self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
+            policy, self.cores_per_server)
+        self.served += b
+        host = jax.device_get((servers, q["workload_type_used"],
+                               q["p95_bucket_used"], p95_eff,
+                               q["conservative"]))
+        return ServeResult(*(a[:b] for a in host))
+
+    def depart(self, servers, cores, p95_eff, is_uf) -> None:
+        """Release departed VMs' aggregates (batched, order-free)."""
+        self.state = placement.remove_batch(
+            self.state, jnp.asarray(servers), jnp.asarray(cores),
+            jnp.asarray(p95_eff), jnp.asarray(is_uf))
+
+    # -- diagnostics -------------------------------------------------------
+    def chassis_headroom_w(self, budget_w) -> np.ndarray:
+        return admission.headroom_w(self.state, budget_w,
+                                    self.blades_per_chassis,
+                                    self.power_model)

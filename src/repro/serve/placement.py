@@ -1,0 +1,366 @@
+"""Vectorized Algorithm-1 placement (serve-pipeline stage 3).
+
+`place_batch` is the jnp twin of `SchedulerPolicy.choose` +
+`ClusterState.place`: one jitted `lax.scan` walks an arrival
+micro-batch in order (placements must see earlier placements — the
+same sequential semantics as the event-driven scheduler), and each
+step scores *all* servers at once.
+
+The rank-weight aggregation is reformulated sort-free, because a
+per-step argsort is the one operation XLA cannot make fast inside a
+scan (~150 us per 720-element sort on CPU — 25x the whole step
+budget):
+
+  * a placement only changes the scores of the placed chassis'
+    K = S/C servers (its kappa, plus the chosen server's packing/eta
+    term), so full-fleet stable ranks are *maintained incrementally*:
+    O(S*K) fused comparisons subtract the old Delta-keys and add the
+    new ones, and the Delta rows are recounted exactly — no sort after
+    the one batched argsort that seeds the scan;
+  * per-arrival feasibility: infeasible servers are strictly fuller,
+    so the packing subset rank is exactly `full_rank - n_infeasible`;
+    the power rule falls back to a prefix count of the feasibility
+    mask in rank order (scatter + cumsum + gather) only when some
+    server is infeasible — a lax.cond keeps that off the common path;
+  * the objective then mirrors `SchedulerPolicy.choose` operation for
+    operation — `sum_r w_r * (1 - subset_rank_r/(n_feas-1))`, first
+    argmax — because even exactly-tied integer rank sums can resolve
+    differently once divided and weighted in floats.
+
+Rank rows are (packing, power-for-UF, power-for-NUF) — the power score
+depends on the arriving VM's type, so both orders are maintained.
+Single-rule policies (packing_weight or power_weight zero, or the
+power rule off) skip the rank machinery entirely: one rule's rank
+weight is a monotone transform of its raw score, so a stable score
+argmax decides (`_place_batch_single_rule`).
+
+Decision equivalence with the numpy path holds because subset ranks
+are exact integers and the float aggregation replicates the host
+arithmetic; the scheduler simulation's serve backend runs this same
+scan in x64, where it is bit-equivalent to the f64 host rule
+(DESIGN.md §9 bounds the residual f32-vs-f64 divergence of the score
+inputs on the serving path).
+
+The power-headroom admission check (serve-pipeline stage 4, see
+`serve/admission.py`) is fused into the scan: a placement that would
+push its chassis' projected peak draw over budget is rejected before
+it mutates the state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.placement import ClusterState, SchedulerPolicy
+
+#: `place_batch` outcome codes (in the returned server array).
+FAIL_CAPACITY = -1      # no feasible server (deployment failure)
+FAIL_POWER = -2         # placed server's chassis lacks power headroom
+
+
+class DeviceClusterState(NamedTuple):
+    """Device mirror of `core.placement.ClusterState`'s aggregates."""
+    free_cores: jnp.ndarray      # (S,) f32
+    gamma_uf: jnp.ndarray        # (S,) f32
+    gamma_nuf: jnp.ndarray       # (S,) f32
+    rho_peak: jnp.ndarray        # (C,) f32
+    rho_max: jnp.ndarray         # (C,) f32
+    chassis_of: jnp.ndarray      # (S,) i32
+    chassis_servers: jnp.ndarray  # (C, S//C) i32 — servers per chassis
+
+    @property
+    def n_servers(self) -> int:
+        return self.free_cores.shape[0]
+
+
+def _chassis_servers(chassis_of: np.ndarray) -> np.ndarray:
+    """(C, K) server-index table (rank maintenance gathers the placed
+    chassis' servers through it). Chassis must be equal-sized."""
+    chassis_of = np.asarray(chassis_of)
+    n_chassis = int(chassis_of.max()) + 1
+    sizes = np.bincount(chassis_of, minlength=n_chassis)
+    assert (sizes == len(chassis_of) // n_chassis).all(), \
+        "chassis must be equal-sized"
+    order = np.argsort(chassis_of, kind="stable")
+    return order.reshape(n_chassis, -1).astype(np.int32)
+
+
+def device_state(state: ClusterState,
+                 dtype=jnp.float32) -> DeviceClusterState:
+    return DeviceClusterState(
+        jnp.asarray(state.free_cores, dtype),
+        jnp.asarray(state.gamma_uf, dtype),
+        jnp.asarray(state.gamma_nuf, dtype),
+        jnp.asarray(state.rho_peak, dtype),
+        jnp.asarray(state.rho_max, dtype),
+        jnp.asarray(state.chassis_of_server, jnp.int32),
+        jnp.asarray(_chassis_servers(state.chassis_of_server)))
+
+
+def fresh_state(n_servers: int, cores_per_server: int,
+                chassis_of: np.ndarray) -> DeviceClusterState:
+    return device_state(ClusterState(
+        n_servers=n_servers, cores_per_server=cores_per_server,
+        chassis_of_server=np.asarray(chassis_of),
+        n_chassis=int(np.asarray(chassis_of).max()) + 1))
+
+
+def score_chassis_batch(state: DeviceClusterState) -> jnp.ndarray:
+    """jnp twin of `ClusterState.score_chassis` — (C,)."""
+    return 1.0 - state.rho_peak / jnp.maximum(state.rho_max, 1e-9)
+
+
+def score_server_batch(state: DeviceClusterState, vm_is_uf,
+                       cores_per_server: int) -> jnp.ndarray:
+    """jnp twin of `ClusterState.score_server`. `vm_is_uf` may be a
+    scalar bool or a (B,) array (then the result is (B, S))."""
+    uf = jnp.asarray(vm_is_uf, bool)
+    diff = jnp.where(uf[..., None] if uf.ndim else uf,
+                     state.gamma_nuf - state.gamma_uf,
+                     state.gamma_uf - state.gamma_nuf)
+    return 0.5 * (1.0 + diff / float(cores_per_server))
+
+
+def _rule_scores(state: DeviceClusterState, policy: SchedulerPolicy,
+                 cps: float) -> jnp.ndarray:
+    """(R, S) score rows the preference rules order. Row 0: packing
+    (`core.placement.packing_score`). Rows 1-2 (when the power rule is
+    on): Algorithm-1 score for a UF / NUF arrival — both are kept
+    because the arriving VM's type flips the eta term."""
+    pack = 1.0 - state.free_cores / cps
+    if not policy.use_power_rule:
+        return pack[None]
+    kappa = score_chassis_batch(state)[state.chassis_of]
+    a = policy.alpha
+    return jnp.stack(
+        [pack] + [a * kappa + (1.0 - a)
+                  * score_server_batch(state, uf, cps)
+                  for uf in (True, False)])
+
+
+def _before(s_j, j, s_i, i):
+    """Stable descending order: does key (s_j, j) sort before key
+    (s_i, i)? Ties break toward the smaller server index — the same
+    order `np.argsort(kind='stable')` of negated scores produces."""
+    return (s_j > s_i) | ((s_j == s_i) & (j < i))
+
+
+def _init_ranks(scores: jnp.ndarray) -> jnp.ndarray:
+    """(R, S) stable descending ranks (one batched argsort + scatter —
+    runs once per micro-batch, outside the scan)."""
+    r, s = scores.shape
+    perm = jnp.argsort(-scores, axis=-1, stable=True)
+    rows = jnp.arange(r)[:, None]
+    return jnp.zeros((r, s), jnp.int32).at[rows, perm].set(
+        jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (r, s)))
+
+
+def _commit(st: DeviceClusterState, srv, found, cores_i, uf_i, p95_i,
+            valid_i, rho_cap):
+    """Admission check + masked state update + outcome code — the
+    shared tail of both scan bodies. `srv` is the winning server with
+    `found` indicating a feasible candidate existed."""
+    dtype = st.free_cores.dtype
+    srv = jnp.where(found, srv, 0).astype(jnp.int32)
+    ch = st.chassis_of[srv]
+    w = p95_i * cores_i
+    admit = st.rho_peak[ch] + w <= rho_cap[ch]
+    scale = (found & admit & valid_i).astype(dtype)
+    uf_f = uf_i.astype(dtype)
+    st2 = st._replace(
+        free_cores=st.free_cores.at[srv].add(-cores_i * scale),
+        gamma_uf=st.gamma_uf.at[srv].add(w * scale * uf_f),
+        gamma_nuf=st.gamma_nuf.at[srv].add(w * scale * (1.0 - uf_f)),
+        rho_peak=st.rho_peak.at[ch].add(w * scale))
+    out = jnp.where(~found, FAIL_CAPACITY,
+                    jnp.where(admit, srv, FAIL_POWER))
+    return st2, out, srv
+
+
+def _place_batch_single_rule(state, cores, is_uf, p95_eff, valid,
+                             rho_cap, policy: SchedulerPolicy, cps):
+    """Rank-free scan for single-rule policies: the winner is the
+    stable argmax of the active rule's raw score over feasible servers
+    (exactly `SchedulerPolicy.choose` with the other rule's weight 0,
+    e.g. `packing_weight=0` == the paper's literal Algorithm-1 /
+    §IV-E preference order)."""
+    dtype = state.free_cores.dtype
+    pack_only = (not policy.use_power_rule) or policy.power_weight == 0.0
+    # no positive rule weight at all: the host objective is identically
+    # zero and `choose` returns the first feasible server
+    no_rule = pack_only and policy.packing_weight == 0.0
+    neg_inf = jnp.asarray(-jnp.inf, dtype)
+
+    def body(st, inp):
+        cores_i, uf_i, p95_i, valid_i = inp
+        feasible = (st.free_cores >= cores_i) & valid_i
+        n_feas = feasible.sum()
+        if no_rule:
+            score = jnp.zeros_like(st.free_cores)
+        elif pack_only:
+            score = 1.0 - st.free_cores / cps
+        else:
+            kappa = score_chassis_batch(st)[st.chassis_of]
+            eta = score_server_batch(st, uf_i, cps)
+            score = policy.alpha * kappa + (1.0 - policy.alpha) * eta
+        srv = jnp.argmax(jnp.where(feasible, score, neg_inf))
+        st2, out, _ = _commit(st, srv, n_feas > 0, cores_i, uf_i,
+                              p95_i, valid_i, rho_cap)
+        return st2, out
+
+    inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
+              jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
+    return jax.lax.scan(body, state, inputs)
+
+
+@partial(jax.jit, static_argnames=("policy", "cores_per_server"))
+def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
+                is_uf: jnp.ndarray, p95_eff: jnp.ndarray,
+                valid: jnp.ndarray, rho_cap: jnp.ndarray,
+                policy: SchedulerPolicy, cores_per_server: int):
+    """Place one arrival micro-batch. cores/is_uf/p95_eff/valid: (B,)
+    arrays (`valid=False` rows are padding and never touch state);
+    `rho_cap`: (C,) admission ceiling on chassis sum(p95*cores)
+    (+inf disables the check — see `serve.admission`). Returns
+    (new_state, servers (B,) i32) with FAIL_* codes for rejects.
+
+    Arithmetic follows the state dtype: f32 on the serving path, f64
+    (bit-equivalent to the numpy rule) when traced under
+    `jax.experimental.enable_x64` with an f64 state — that is how the
+    scheduler simulation's serve backend verifies decision
+    equivalence."""
+    cps = float(cores_per_server)
+    dtype = state.free_cores.dtype
+    n_servers = state.n_servers
+    idx = jnp.arange(n_servers, dtype=jnp.int32)
+    use_power = policy.use_power_rule
+    pw, qw = policy.packing_weight, policy.power_weight
+    rows_q = jnp.arange(2)[:, None]
+    # With a single active rule, argmax of its rank weight IS argmax of
+    # its raw score (rank is a monotone transform; stable argsort and
+    # argmax both break ties toward the smaller server index), so the
+    # whole rank machinery compiles away (~10x fewer step ops).
+    single_rule = (not use_power) or pw == 0.0 or qw == 0.0
+    if single_rule:
+        return _place_batch_single_rule(
+            state, cores, is_uf, p95_eff, valid, rho_cap, policy, cps)
+
+    def subset_rank(r, feasible):
+        """Rank of each server among the feasible subset: prefix count
+        of the feasibility mask in full-rank order. Costs two XLA CPU
+        scatters (~45 us each) — slow-path only."""
+        by_rank = jnp.zeros(n_servers, jnp.int32) \
+            .at[r].set(feasible.astype(jnp.int32))
+        return (jnp.cumsum(by_rank) - by_rank)[r]
+
+    def body(carry, inp):
+        st, scores, ranks = carry
+        cores_i, uf_i, p95_i, valid_i = inp
+        raw_feas = st.free_cores >= cores_i
+        feasible = raw_feas & valid_i
+        n_feas = feasible.sum()
+        n_out = n_servers - n_feas
+        r_pow = jnp.where(uf_i, ranks[1], ranks[2]) if use_power \
+            else ranks[0]
+
+        # Subset rank of the packing rule is exactly r_p - n_out:
+        # infeasible servers are strictly *fuller*, so they hold a
+        # contiguous prefix of the packing order. The power rule needs
+        # the real prefix count only when some server is infeasible
+        # (cond keeps the two scatters off the common serving path).
+        sr_pack = ranks[0] - n_out.astype(jnp.int32)
+        sr_pow = jax.lax.cond(
+            (n_out == 0) | (n_feas == 0),
+            lambda _: r_pow,
+            lambda _: subset_rank(r_pow, feasible), None) if use_power \
+            else r_pow
+
+        # numpy-bitwise objective: exact integer rank ties can still
+        # resolve differently once divided by (n-1) and weighted (the
+        # float sums round per operand set), so mirror
+        # `core.placement._rank_weight` + `choose` operation for
+        # operation and take the first argmax.
+        denom = jnp.maximum(n_feas - 1, 1).astype(dtype)
+        one = jnp.asarray(1.0, dtype)
+        rw_guard = n_feas == 1
+
+        def rw(sr):
+            return jnp.where(rw_guard, one,
+                             one - sr.astype(dtype) / denom)
+
+        obj = pw * rw(sr_pack)
+        if use_power:
+            obj = obj + qw * rw(sr_pow)
+        srv = jnp.argmax(jnp.where(feasible, obj,
+                                   jnp.asarray(-jnp.inf, dtype)))
+        st2, out, srv = _commit(st, srv, n_feas > 0, cores_i, uf_i,
+                                p95_i, valid_i, rho_cap)
+        ch = st.chassis_of[srv]
+        # Incremental rank maintenance. Packing: only the placed
+        # server's score moved. Power: the placed chassis' K servers
+        # moved (kappa, plus the placed server's eta). Subtract the
+        # old moved keys' wins over each server, add the new ones, and
+        # recount the moved rows exactly under the new keys. A
+        # rejected/failed arrival leaves scores unchanged, so every
+        # correction cancels to zero.
+        new_scores = _rule_scores(st2, policy, cps)
+        p_old, p_new = scores[0], new_scores[0]
+        dcnt0 = _before(p_new[srv], srv, p_old, idx).astype(jnp.int32) \
+            - _before(p_old[srv], srv, p_old, idx).astype(jnp.int32)
+        fresh0 = _before(p_new, idx, p_new[srv], srv) \
+            .sum(dtype=jnp.int32)
+        ranks0 = (ranks[0] + dcnt0).at[srv].set(fresh0)
+        if use_power:
+            delta = st.chassis_servers[ch]                   # (K,)
+            q_old, q_new = scores[1:], new_scores[1:]        # (2, S)
+            old_d = q_old[:, delta]                          # (2, K)
+            new_d = q_new[:, delta]
+            dcnt = (_before(new_d[:, None, :], delta[None, None, :],
+                            q_old[:, :, None], idx[None, :, None])
+                    .astype(jnp.int32)
+                    - _before(old_d[:, None, :], delta[None, None, :],
+                              q_old[:, :, None], idx[None, :, None])
+                    .astype(jnp.int32)).sum(-1, dtype=jnp.int32)
+            fresh = _before(q_new[:, None, :], idx[None, None, :],
+                            new_d[:, :, None], delta[None, :, None]) \
+                .sum(-1, dtype=jnp.int32)
+            ranks_q = (ranks[1:] + dcnt) \
+                .at[rows_q, delta[None, :]].set(fresh)
+            ranks2 = jnp.concatenate([ranks0[None], ranks_q], 0)
+        else:
+            ranks2 = ranks0[None]
+        return (st2, new_scores, ranks2), out
+
+    inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
+              jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
+    scores0 = _rule_scores(state, policy, cps)
+    (state, _, _), servers = jax.lax.scan(
+        body, (state, scores0, _init_ranks(scores0)), inputs)
+    return state, servers
+
+
+@jax.jit
+def remove_batch(state: DeviceClusterState, servers: jnp.ndarray,
+                 cores: jnp.ndarray, p95_eff: jnp.ndarray,
+                 is_uf: jnp.ndarray) -> DeviceClusterState:
+    """Batch departure: order-independent scatter-subtract (twin of
+    `ClusterState.remove`). `servers < 0` rows are ignored. Follows
+    the state dtype like `place_batch`, so an f64 place/remove
+    roundtrip is bit-exact."""
+    dtype = state.free_cores.dtype
+    live = servers >= 0
+    srv = jnp.where(live, servers, 0).astype(jnp.int32)
+    scale = live.astype(dtype)
+    cores = cores.astype(dtype) * scale
+    w = p95_eff.astype(dtype) * cores
+    uf_f = is_uf.astype(dtype)
+    ch = state.chassis_of[srv]
+    return state._replace(
+        free_cores=state.free_cores.at[srv].add(cores),
+        gamma_uf=state.gamma_uf.at[srv].add(-w * uf_f),
+        gamma_nuf=state.gamma_nuf.at[srv].add(-w * (1.0 - uf_f)),
+        rho_peak=state.rho_peak.at[ch].add(-w))

@@ -17,6 +17,12 @@ batched fleet engine (`repro.sim.fleet`) to measure the *capping
 dynamics* they induce — `evaluate_power_dynamics` vmaps the compiled
 chassis simulator across the live chassis layouts, closing the loop
 between Fig 7 (placement balance) and Figs 4-6 (per-VM capping).
+
+`simulate(backend='serve')` routes every deployment group through the
+online serving pipeline's batched placement scan
+(`repro.serve.placement`) instead of the per-arrival numpy rule, so
+Fig 7 metrics can be reproduced through the served path and checked
+against the event-driven oracle (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -166,6 +172,10 @@ def _sample_deployment_size(rng):
                                   tel.DEPLOY_SIZE_PROBS))
 
 
+#: Serve-backend micro-batch pad (max deployment size is 60 — Table I).
+SERVE_GROUP_PAD = 64
+
+
 def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              days: float = 30.0, seed: int = 0,
              deployments_per_hour: float = 8.0,
@@ -174,10 +184,33 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              power_eval_budget_w: float | None = None,
              power_eval_chassis: int = 8,
              power_eval_duration_s: float = 60.0,
-             power_eval_backend: str = "jax") -> SimMetrics:
+             power_eval_backend: str = "jax",
+             backend: str = "event",
+             admission_budget_w: float | None = None,
+             trace: list | None = None) -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
     UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
-    (bucket 2)."""
+    (bucket 2).
+
+    backend:
+      'event' — the per-arrival numpy path (`SchedulerPolicy.choose`),
+                the decision oracle;
+      'serve' — each deployment group is placed by one call to the
+                serving pipeline's batched scorer
+                (`repro.serve.placement.place_batch`, padded to
+                SERVE_GROUP_PAD), exercising the online path against
+                the same arrival stream. `admission_budget_w` adds the
+                serve path's per-chassis power-admission ceiling
+                (rejections count as failures).
+    `trace`, if given, collects the chosen server (or failure code)
+    per placement attempt — the decision-equivalence probe."""
+    if backend not in ("event", "serve"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "serve":
+        import jax
+        import jax.numpy as jnp
+        from repro.serve.admission import rho_cap_from_budget
+        from repro.serve.placement import device_state, place_batch
     rng = np.random.default_rng(seed)
     n_servers = RACKS * CHASSIS_PER_RACK * BLADES_PER_CHASSIS
     chassis_of = np.arange(n_servers) // BLADES_PER_CHASSIS
@@ -186,6 +219,9 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         chassis_of_server=chassis_of,
         n_chassis=n_servers // BLADES_PER_CHASSIS)
 
+    if backend == "serve":
+        serve_rho_cap = rho_cap_from_budget(
+            admission_budget_w, BLADES_PER_CHASSIS, state.n_chassis)
     departures: list = []        # heap of (time, vm_token)
     vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
     token = 0
@@ -210,16 +246,46 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             next_sample += sample_every_h
         if t >= horizon:
             break
+        # sample the whole deployment group first (placement consumes
+        # no randomness, so both backends see the same stream), then
+        # place per-VM (event) or via one batched scan (serve)
+        group = []
         for _ in range(_sample_deployment_size(rng)):
             cores, life_h = _sample_vm(rng)
             true_uf = rng.random() < target_uf_core_ratio
             true_p95 = float(np.clip(
                 rng.normal(0.65 if true_uf else 0.44, 0.12), 0.05, 1.0))
             uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
-            p95_eff = policy.effective_p95(p95_pred)
-            srv = policy.choose(state, cores, uf_pred)
+            group.append((cores, life_h, uf_pred,
+                          policy.effective_p95(p95_pred)))
+        if backend == "serve":
+            n = len(group)
+            assert n <= SERVE_GROUP_PAD, \
+                "deployment group exceeds SERVE_GROUP_PAD"
+            pad = np.zeros(SERVE_GROUP_PAD, np.float64)
+            cores_a, uf_a, p95_a = pad.copy(), pad.copy(), pad.copy()
+            for i, (cores, _, ufp, p95e) in enumerate(group):
+                cores_a[i], uf_a[i], p95_a[i] = cores, ufp, p95e
+            # trace/run the scan in x64: bit-equivalent to the f64 host
+            # rule, so 'serve' reproduces 'event' placements exactly
+            # (the f32 serving path's divergence is bounded in
+            # DESIGN.md §9)
+            with jax.experimental.enable_x64():
+                _, srvs = place_batch(
+                    device_state(state, jnp.float64), cores_a,
+                    uf_a.astype(bool), p95_a,
+                    np.arange(SERVE_GROUP_PAD) < n, serve_rho_cap,
+                    policy, state.cores_per_server)
+                chosen = [int(s) for s in np.asarray(srvs)[:n]]
+        else:
+            chosen = None
+        for i, (cores, life_h, uf_pred, p95_eff) in enumerate(group):
+            srv = chosen[i] if chosen is not None else \
+                policy.choose(state, cores, uf_pred)
             placements += 1
-            if srv is None:
+            if trace is not None:
+                trace.append(-1 if srv is None else int(srv))
+            if srv is None or srv < 0:
                 failures += 1
                 continue
             state.place(srv, cores, p95_eff, uf_pred)

@@ -220,6 +220,63 @@ def generate_population(n_vms: int, seed: int = 0,
     return pop
 
 
+# --- streaming arrivals (serve-pipeline ingest format) --------------------
+
+VM_TYPE_IDX = {t: i for i, t in enumerate(VM_TYPES)}
+
+
+@dataclass
+class ArrivalBatch:
+    """Struct-of-arrays view of a slice of arriving VMs — the wire
+    format of the online serving pipeline (`repro.serve`). Ground-truth
+    columns ride along for evaluation; the pipeline never reads them."""
+    subscription: np.ndarray        # (B,) int32
+    cores: np.ndarray               # (B,) float32
+    memory_gb: np.ndarray           # (B,) float32
+    vm_type_idx: np.ndarray         # (B,) int32
+    user_facing: np.ndarray         # (B,) bool — ground truth
+    p95_util: np.ndarray            # (B,) float32 (0-100) — ground truth
+    lifetime_hours: np.ndarray      # (B,) float32 — ground truth
+
+    def __len__(self) -> int:
+        return len(self.subscription)
+
+
+def arrival_batch(pop: Population, idx=None) -> ArrivalBatch:
+    """Pack (a slice of) a population into one ArrivalBatch."""
+    vms = pop.vms if idx is None else [pop.vms[i] for i in np.atleast_1d(idx)]
+    return ArrivalBatch(
+        subscription=np.array([v.subscription for v in vms], np.int32),
+        cores=np.array([v.cores for v in vms], np.float32),
+        memory_gb=np.array([v.memory_gb for v in vms], np.float32),
+        vm_type_idx=np.array([VM_TYPE_IDX[v.vm_type] for v in vms],
+                             np.int32),
+        user_facing=np.array([v.user_facing for v in vms], bool),
+        p95_util=np.array([v.p95_util for v in vms], np.float32),
+        lifetime_hours=np.array([v.lifetime_hours for v in vms],
+                                np.float32))
+
+
+def stream_arrivals(pop: Population, batch_size: int,
+                    arrival_rate_per_s: float | None = None,
+                    seed: int = 0):
+    """Yield `(t_arrive_s, ArrivalBatch)` micro-batches in VM order —
+    the arrival stream the serve pipeline ingests. When
+    `arrival_rate_per_s` is set, batch timestamps follow a Poisson
+    process (the last arrival's time stamps the batch); otherwise
+    timestamps advance by one per batch."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for start in range(0, len(pop.vms), batch_size):
+        idx = np.arange(start, min(start + batch_size, len(pop.vms)))
+        if arrival_rate_per_s is not None:
+            t += float(rng.exponential(1.0 / arrival_rate_per_s,
+                                       len(idx)).sum())
+        else:
+            t += 1.0
+        yield t, arrival_batch(pop, idx)
+
+
 def generate_chassis_telemetry(n_chassis: int, n_days: int,
                                provisioned_w: float, seed: int = 0,
                                slots_per_day: int = 48) -> np.ndarray:
