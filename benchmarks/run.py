@@ -3,12 +3,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run             # all
   PYTHONPATH=src python -m benchmarks.run table4 fig7 # subset
+  PYTHONPATH=src python -m benchmarks.run --check     # artifacts only
 
 Each driver row pins the JSON artifact it writes (None = stdout only),
-so callers and CI can locate outputs without running anything.
+so callers and CI can locate outputs without running anything. A
+driver that declares an artifact must actually produce it — asserted
+after every run, and checkable without running via ``--check``.
 """
 from __future__ import annotations
 
+import os
 import sys
 
 #: (name, import path, JSON output path or None) — run order.
@@ -22,21 +26,48 @@ DRIVERS = (
     ("table4", "benchmarks.table4_oversubscription", None),
     ("fleet", "benchmarks.fleet_engine", "BENCH_fleet_engine.json"),
     ("serve", "benchmarks.serve_online", "BENCH_serve.json"),
+    ("serve_sharded", "benchmarks.serve_sharded",
+     "BENCH_serve_sharded.json"),
     ("roofline", "benchmarks.roofline_report", None),
 )
 
 
+def check_artifacts(ran: set | None = None) -> list:
+    """Assert every BENCH_*.json the driver table lists exists on disk
+    (all of them, or just the drivers in `ran`). Returns the paths."""
+    missing = [out for name, _, out in DRIVERS
+               if out and (ran is None or name in ran)
+               and not os.path.exists(out)]
+    assert not missing, f"driver table lists missing artifacts: {missing}"
+    return [out for _, _, out in DRIVERS if out]
+
+
 def main() -> None:
-    want = set(sys.argv[1:])
+    args = set(sys.argv[1:])
+    if "--check" in args:
+        for p in check_artifacts():
+            print(f"artifact,{p},ok")
+        return
+    want = args
+    names = {name for name, _, _ in DRIVERS}
 
     def on(name):
-        return not want or any(w in name for w in want)
+        # exact driver names select only themselves ('serve' must not
+        # drag in 'serve_sharded'); non-name tokens keep substring
+        # matching ('fig4' -> fig4_fig5)
+        if not want:
+            return True
+        return name in want or any(w in name and w not in names
+                                   for w in want)
 
     print("name,us_per_call,derived")
+    ran = set()
     for name, module, out in DRIVERS:
         if on(name):
             run = __import__(module, fromlist=["run"]).run
             run(out_path=out) if out else run()
+            ran.add(name)
+    check_artifacts(ran)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,164 @@
+"""Sharded serve-pipeline scaling: arrivals/s at 1/2/4/8 shards.
+
+Runs the same arrival stream as `benchmarks/serve_online` through
+`ShardedServePipeline` on a 64-chassis cluster (the fig-7 cluster
+padded from 60 to 64 chassis so every shard count divides it), with
+the shards mapped onto forced host-platform CPU devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` — set below
+before JAX initializes). Each shard scans only B/N arrivals against
+S/N servers, so the protocol wins twice: shorter scans per shard and
+one scan per device in parallel under `shard_map`.
+
+Both placement modes are measured (see `benchmarks/serve_online`):
+`rank_rule` (full two-rule rank aggregation) and `algorithm1` (the
+paper's literal §IV-E preference). Writes BENCH_serve_sharded.json
+with per-shard-count rows and speedups vs the 1-shard run; `--smoke`
+serves one small batch per shard count (CI).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+#: Must be set before jax initializes; when it is already too late
+#: (another benchmark driver initialized the single-device backend
+#: first), `run` re-executes itself in a subprocess — see `_reexec`.
+_FLAG = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = \
+        (os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import features as F
+from repro.core.placement import SchedulerPolicy
+from repro.core.predictor import train_service
+from repro.serve import ShardedServeConfig, ShardedServePipeline
+from repro.sim.telemetry import arrival_batch, generate_population
+
+OUT_PATH = "BENCH_serve_sharded.json"
+
+N_HISTORY = 1500
+N_ARRIVALS = 2048
+BLADES_PER_CHASSIS = 12
+N_CHASSIS = 64               # fig-7's 60 padded up so 1/2/4/8 divide
+N_SERVERS = N_CHASSIS * BLADES_PER_CHASSIS
+CORES_PER_SERVER = 40
+BATCH_SIZE = 256
+SHARD_COUNTS = (1, 2, 4, 8)
+POLICIES = {"rank_rule": SchedulerPolicy(),
+            "algorithm1": SchedulerPolicy(packing_weight=0.0)}
+
+
+def _train(seed: int = 0, n_trees: int = 48):
+    pop = generate_population(N_HISTORY + N_ARRIVALS, seed=seed)
+    hist = F.Population(vms=pop.vms[:N_HISTORY])
+    arrivals = F.Population(vms=pop.vms[N_HISTORY:])
+    labels = hist.labels.astype(np.float64)
+    aggs = F.subscription_aggregates(hist, labels)
+    svc = train_service(F.build_features(hist, aggs),
+                        labels.astype(np.int64),
+                        F.p95_bucket([v.p95_util for v in hist.vms]),
+                        n_trees=n_trees, seed=seed)
+    return hist, arrivals, labels, svc
+
+
+def _make_pipe(svc, hist, labels, n_shards, policy, batch_size):
+    return ShardedServePipeline.from_history(
+        svc, hist, labels, n_servers=N_SERVERS,
+        cores_per_server=CORES_PER_SERVER,
+        blades_per_chassis=BLADES_PER_CHASSIS,
+        config=ShardedServeConfig(batch_size=batch_size, policy=policy,
+                                  n_shards=n_shards))
+
+
+def _reexec(out_path: str, smoke: bool) -> dict:
+    """Run the benchmark in a fresh interpreter where the forced
+    device count can still take effect (XLA_FLAGS is read exactly once
+    at backend init, so a parent that already initialized a
+    single-device JAX — e.g. `benchmarks.run` after the serve driver —
+    would silently measure the vmap fallback and overwrite the
+    artifact with no-scaling rows)."""
+    cmd = [sys.executable, "-m", "benchmarks.serve_sharded"]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ, REPRO_SERVE_SHARDED_SUBPROC="1",
+               PYTHONPATH=os.pathsep.join(
+                   p for p in ("src", os.environ.get("PYTHONPATH"))
+                   if p))
+    subprocess.run(cmd, env=env, check=True)
+    if smoke:
+        return {}
+    with open(out_path) as f:
+        return json.load(f)
+
+
+def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:
+    import jax
+    shard_counts = (1, 4) if smoke else SHARD_COUNTS
+    if len(jax.devices()) < max(shard_counts) \
+            and "REPRO_SERVE_SHARDED_SUBPROC" not in os.environ:
+        return _reexec(out_path, smoke)
+    hist, arrivals, labels, svc = _train(n_trees=12 if smoke else 48)
+    if smoke:
+        arrivals = F.Population(vms=arrivals.vms[:128])
+    bs = 64 if smoke else BATCH_SIZE
+    out = {"n_servers": N_SERVERS, "batch_size": bs,
+           "n_devices": len(jax.devices()),
+           "n_arrivals": len(arrivals.vms), "modes": {}}
+    batches = [arrival_batch(arrivals,
+                             np.arange(i, min(i + bs,
+                                              len(arrivals.vms))))
+               for i in range(0, len(arrivals.vms), bs)]
+    for mode, policy in POLICIES.items():
+        rows = []
+        for n_shards in shard_counts:
+            pipe = _make_pipe(svc, hist, labels, n_shards, policy, bs)
+            if len(batches) > 1:                 # jit trace, untimed
+                pipe.serve(batches[0])
+                rest = batches[1:]
+            else:
+                # single batch: warm a throwaway twin (compilation
+                # caches are shared) so the timed pipe starts from a
+                # clean, un-double-committed cluster
+                _make_pipe(svc, hist, labels, n_shards, policy,
+                           bs).serve(batches[0])
+                rest = batches
+            times = []
+            for b in rest:
+                t0 = time.perf_counter()
+                pipe.serve(b)
+                times.append(time.perf_counter() - t0)
+            times = np.asarray(times)
+            p50 = float(np.percentile(times, 50))
+            row = {"n_shards": n_shards,
+                   "shard_map": pipe.mesh is not None,
+                   "arrivals_per_s": bs / p50,
+                   "batch_p50_ms": p50 * 1e3,
+                   "batch_p99_ms": float(np.percentile(times, 99) * 1e3),
+                   "spill": pipe.spill_info}
+            rows.append(row)
+            emit(f"serve_sharded/{mode}/shards{n_shards}",
+                 times.mean() * 1e6,
+                 f"arrivals_per_s={row['arrivals_per_s']:.0f} "
+                 f"p50={row['batch_p50_ms']:.2f}ms "
+                 f"shard_map={row['shard_map']}")
+        base = rows[0]["arrivals_per_s"]
+        out["modes"][mode] = {
+            "shards": rows,
+            "speedup_vs_1shard": {f"shards{r['n_shards']}":
+                                  r["arrivals_per_s"] / base
+                                  for r in rows}}
+    if not smoke:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -111,6 +111,9 @@ class ControlParams:
 
 def init_state(batch_shape, n_servers: int, n_cores: int,
                xp=np) -> FleetState:
+    """Uncapped initial fleet state — every core at `F_MAX`, no RAPL,
+    no capping — with the given leading batch shape (`()` for one
+    chassis, `(B,)` for a fleet, `(G, H)` for a scenario grid)."""
     shape_c = tuple(batch_shape) + (n_servers, n_cores)
     shape_s = tuple(batch_shape) + (n_servers,)
     return FleetState(

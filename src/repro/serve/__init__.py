@@ -8,24 +8,41 @@ double-buffered model hot-swap for the paper's daily retrain."""
 from repro.serve.admission import headroom_w, projected_chassis_power, \
     rho_cap_from_budget
 from repro.serve.featurizer import SubscriptionTable, empty_table, \
-    featurize, featurize_batch, ingest_population, table_from_history, \
-    update_table
+    featurize, featurize_batch, ingest_population, shard_table, \
+    table_from_history, update_table
 from repro.serve.inference import PackedService, ServiceMeta, \
     bucket_to_p95_jnp, pack_service, resolve_kernel, served_query
-from repro.serve.pipeline import ServeConfig, ServePipeline, ServeResult
+from repro.serve.pipeline import ServeConfig, ServePipeline, \
+    ServeResult, ShardedServeConfig, ShardedServePipeline
 from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
-                                   DeviceClusterState, device_state,
-                                   fresh_state, place_batch, remove_batch,
-                                   score_chassis_batch, score_server_batch)
+                                   FAIL_TOKENS, DeviceClusterState,
+                                   device_state, fresh_state,
+                                   place_batch, place_batch_pooled,
+                                   remove_batch, score_chassis_batch,
+                                   score_server_batch)
+from repro.serve.sharding import (SHARD_AXIS, ShardedState,
+                                  chassis_to_shard,
+                                  device_put_sharded_state,
+                                  place_group_sharded, remove_sharded,
+                                  rho_pool_from_budget, route_shard,
+                                  shard_mesh, shard_state,
+                                  unshard_state)
 
 __all__ = [
     "SubscriptionTable", "empty_table", "featurize", "featurize_batch",
-    "ingest_population", "table_from_history", "update_table",
+    "ingest_population", "shard_table", "table_from_history",
+    "update_table",
     "PackedService", "ServiceMeta", "pack_service", "served_query",
     "bucket_to_p95_jnp", "resolve_kernel",
     "DeviceClusterState", "device_state", "fresh_state", "place_batch",
-    "remove_batch", "score_chassis_batch", "score_server_batch",
-    "FAIL_CAPACITY", "FAIL_POWER",
+    "place_batch_pooled", "remove_batch", "score_chassis_batch",
+    "score_server_batch",
+    "FAIL_CAPACITY", "FAIL_POWER", "FAIL_TOKENS",
     "rho_cap_from_budget", "projected_chassis_power", "headroom_w",
     "ServeConfig", "ServePipeline", "ServeResult",
+    "ShardedServeConfig", "ShardedServePipeline",
+    "SHARD_AXIS", "ShardedState", "chassis_to_shard",
+    "device_put_sharded_state", "place_group_sharded", "remove_sharded",
+    "rho_pool_from_budget", "route_shard", "shard_mesh", "shard_state",
+    "unshard_state",
 ]

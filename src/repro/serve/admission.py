@@ -15,6 +15,12 @@ would exceed it are rejected with FAIL_POWER before mutating state —
 the serving-path analogue of the fleet engine's alert threshold, which
 then only has to handle *prediction misses*, not knowingly-oversold
 chassis.
+
+The sharded pipeline layers a *cluster*-level budget on top: the same
+watt→rho conversion at fleet granularity becomes the power-token pool
+the shards draw from (`serve.sharding.rho_pool_from_budget`,
+docs/sharding.md) — per-chassis ceilings stay local to each shard,
+the global pool bounds what all shards admit together.
 """
 from __future__ import annotations
 

@@ -50,9 +50,39 @@ class SubscriptionTable(NamedTuple):
 
 
 def empty_table(capacity: int) -> SubscriptionTable:
+    """Fresh all-zero table with `capacity` subscription rows."""
     z = jnp.zeros(capacity, jnp.float32)
     return SubscriptionTable(z, z, z, jnp.zeros((capacity, 4), jnp.float32),
                              z, z)
+
+
+def shard_table(table: SubscriptionTable, mesh,
+                axis: str = "shard") -> SubscriptionTable:
+    """Row-partition the table over a device mesh axis.
+
+    Pads the capacity up to a multiple of the axis size and pins each
+    row block to its device with a NamedSharding, so `update_table`
+    scatter-adds and `featurize` gathers run distributed under jit —
+    no featurizer code changes. The sharded serve pipeline applies
+    this when a mesh is active (DESIGN.md §10).
+
+    Capacity semantics of the padded window: because capacity is
+    derived from the array shape, ids in [old capacity, padded
+    capacity) become *valid* rows — `featurize` serves them the
+    unseen-subscription defaults until ingested (they start all-zero),
+    but `update_table` stores rather than drops them. Size the
+    original capacity for your id space (as `from_history` does) and
+    the window is never reached."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = mesh.shape[axis]
+    cap = -(-table.capacity // n) * n
+
+    def put(x):
+        pad = [(0, cap - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+        spec = P(axis, *([None] * (x.ndim - 1)))
+        return jax.device_put(jnp.pad(x, pad), NamedSharding(mesh, spec))
+
+    return SubscriptionTable(*(put(a) for a in table))
 
 
 def p95_bucket_jnp(p95_util: jnp.ndarray) -> jnp.ndarray:

@@ -68,6 +68,9 @@ def _pack_one(forest: ObliviousForest) -> tuple[PackedForest, ForestMeta]:
 
 def pack_service(svc: PredictionService) \
         -> tuple[PackedService, ServiceMeta]:
+    """Pack all four of a service's forests into device operands +
+    static metadata — done once per (re)trained model; this is what
+    makes the pipeline's hot swap a buffer flip."""
     forests = (svc.criticality, svc.p95.stage1, svc.p95.low, svc.p95.high)
     packed, metas = zip(*(_pack_one(f) for f in forests))
     return (PackedService(*packed),
@@ -97,6 +100,8 @@ def _finish(summed, meta: ForestMeta):
 
 
 def resolve_kernel(kernel: str = "auto") -> str:
+    """Resolve 'auto' to the Pallas kernel on TPU and the jnp
+    reference math elsewhere; explicit names pass through."""
     if kernel == "auto":
         return "pallas" if jax.default_backend() == "tpu" else "ref"
     return kernel

@@ -15,6 +15,11 @@ buffer while the active one keeps serving, then an atomic flip routes
 the next batch to it — no arrival is dropped and no recompilation
 happens (retrained forests share shapes, so the serving jits are
 already specialized).
+
+`ShardedServePipeline` swaps the placement stage for the sharded
+consistent-placement protocol (`serve.sharding`) when the cluster is
+partitioned over a device mesh — everything upstream of placement is
+shard-agnostic and shared.
 """
 from __future__ import annotations
 
@@ -27,9 +32,9 @@ import numpy as np
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
-from repro.serve import admission, placement
+from repro.serve import admission, placement, sharding
 from repro.serve.featurizer import SubscriptionTable, featurize_batch, \
-    ingest_population, table_from_history
+    ingest_population, shard_table, table_from_history
 from repro.serve.inference import bucket_to_p95_jnp, pack_service, \
     resolve_kernel, served_query
 from repro.sim.telemetry import ArrivalBatch, Population
@@ -68,6 +73,13 @@ class ServeResult:
         return int((self.server == placement.FAIL_POWER).sum())
 
     @property
+    def n_token_rejected(self) -> int:
+        """Rejections by an exhausted shard power-token pool — only the
+        sharded pipeline under a `cluster_budget_w` produces these.
+        admitted + capacity + power + token == batch size."""
+        return int((self.server == placement.FAIL_TOKENS).sum())
+
+    @property
     def n_conservative(self) -> int:
         return int(self.conservative.sum())
 
@@ -84,8 +96,9 @@ def _concat_batches(parts: list) -> ArrivalBatch:
 
 
 class ServePipeline:
-    """Stateful serving endpoint. Not thread-safe; one instance per
-    serving shard (multi-host sharding is a ROADMAP open item)."""
+    """Stateful serving endpoint. Not thread-safe; one instance serves
+    one cluster from one host — `ShardedServePipeline` is the
+    multi-host/device path (DESIGN.md §10, docs/sharding.md)."""
 
     def __init__(self, service: PredictionService,
                  table: SubscriptionTable,
@@ -209,14 +222,23 @@ class ServePipeline:
         cores = jnp.zeros(pad_to, jnp.float32) \
             .at[:b].set(jnp.asarray(batch.cores))
         valid = jnp.arange(pad_to) < b
-        self.state, servers = placement.place_batch(
-            self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
-            policy, self.cores_per_server)
+        servers = self._place(cores, is_uf, p95_eff, valid)
         self.served += b
         host = jax.device_get((servers, q["workload_type_used"],
                                q["p95_bucket_used"], p95_eff,
                                q["conservative"]))
         return ServeResult(*(a[:b] for a in host))
+
+    def _place(self, cores, is_uf, p95_eff, valid):
+        """Placement stage of one padded micro-batch: run the batched
+        Algorithm-1 scan against the cluster state and return the (B,)
+        server decisions (FAIL_* codes on reject). The sharded pipeline
+        overrides this single hook — every other serving stage is
+        shard-agnostic."""
+        self.state, servers = placement.place_batch(
+            self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
+            self.config.policy, self.cores_per_server)
+        return servers
 
     def depart(self, servers, cores, p95_eff, is_uf) -> None:
         """Release departed VMs' aggregates (batched, order-free)."""
@@ -226,6 +248,115 @@ class ServePipeline:
 
     # -- diagnostics -------------------------------------------------------
     def chassis_headroom_w(self, budget_w) -> np.ndarray:
+        """(C,) watts of remaining per-chassis admission headroom."""
         return admission.headroom_w(self.state, budget_w,
                                     self.blades_per_chassis,
                                     self.power_model)
+
+
+@dataclass(frozen=True)
+class ShardedServeConfig(ServeConfig):
+    """`ServeConfig` plus the sharded-placement knobs (docs/sharding.md
+    discusses picking them). `batch_size` must be divisible by
+    `n_shards`; `use_shard_map='auto'` maps shards onto mesh devices
+    when the runtime has enough and falls back to the single-device
+    vmap twin otherwise."""
+    n_shards: int = 1
+    use_shard_map: bool | str = "auto"      # True | False | 'auto'
+    spill_rounds: int | None = None         # default: n_shards - 1
+    rebalance_tokens: bool = True
+    shard_table: bool = True                # partition SubscriptionTable
+
+
+class ShardedServePipeline(ServePipeline):
+    """`ServePipeline` with the cluster state partitioned across a
+    ``("shard",)`` device mesh (`serve.sharding`, DESIGN.md §10).
+
+    Featurization and forest inference are shard-agnostic (one batched
+    call; the subscription table is row-partitioned over the mesh when
+    `shard_table` is set); only the placement stage fans out: arrivals
+    are routed to their home shard, placed concurrently under the
+    reserve/commit token protocol, and spilled cross-shard when the
+    home shard rejects them. `cluster_budget_w` sets the global watt
+    budget the token pools enforce — the sum of admitted `p95*cores`
+    across all shards can never exceed its rho-unit conversion, no
+    matter how the shards race."""
+
+    def __init__(self, service, table, state, cores_per_server,
+                 config: ShardedServeConfig | None = None,
+                 cluster_budget_w=None, **kw):
+        config = config or ShardedServeConfig()
+        if config.batch_size % config.n_shards:
+            raise ValueError(
+                f"batch_size {config.batch_size} not divisible by "
+                f"n_shards {config.n_shards}")
+        super().__init__(service, table, state, cores_per_server,
+                         config=config, **kw)
+        if config.use_shard_map == "auto":
+            self.mesh = sharding.shard_mesh(config.n_shards) \
+                if config.n_shards > 1 else None
+        elif config.use_shard_map:
+            self.mesh = sharding.shard_mesh(config.n_shards)
+            if self.mesh is None:
+                raise RuntimeError(
+                    f"use_shard_map=True needs >= {config.n_shards} "
+                    f"devices, have {len(jax.devices())}")
+        else:
+            self.mesh = None
+        self.cluster_budget_w = cluster_budget_w
+        pool_total = sharding.rho_pool_from_budget(
+            cluster_budget_w, state.n_servers, self.power_model)
+        if np.isinf(pool_total):
+            pool_total = None
+        else:
+            # a warm-started cluster has rho already committed; the
+            # pool is the *remaining* allowance, so the budget
+            # invariant holds from the first batch (the sim backend
+            # nets identically)
+            pool_total = max(
+                pool_total - float(np.asarray(state.rho_peak).sum()),
+                0.0)
+        self.sharded = sharding.shard_state(
+            self.state, config.n_shards, rho_cap=self.rho_cap,
+            pool_total=pool_total)
+        if self.mesh is not None:
+            self.sharded = sharding.device_put_sharded_state(
+                self.sharded, self.mesh)
+            if config.shard_table:
+                self.table = shard_table(self.table, self.mesh)
+        self.state = None        # self.sharded is the source of truth
+        self.spill_info = {"rounds": 0, "spilled": 0,
+                           "spill_admitted": 0}
+
+    # -- sharded placement stage -------------------------------------------
+    def _place(self, cores, is_uf, p95_eff, valid):
+        cfg = self.config
+        self.sharded, servers, info = sharding.place_group_sharded(
+            self.sharded, np.asarray(cores), np.asarray(is_uf),
+            np.asarray(p95_eff), np.asarray(valid), cfg.policy,
+            self.cores_per_server, mesh=self.mesh,
+            spill_rounds=cfg.spill_rounds,
+            rebalance=cfg.rebalance_tokens)
+        self.spill_info = {k: self.spill_info[k] + info[k]
+                           for k in self.spill_info}
+        return servers.astype(np.int32)
+
+    def depart(self, servers, cores, p95_eff, is_uf) -> None:
+        """Route each departure to its owner shard and credit the freed
+        power tokens back to that shard's pool."""
+        self.sharded = sharding.remove_sharded(
+            self.sharded, servers, cores, p95_eff, is_uf)
+
+    # -- diagnostics -------------------------------------------------------
+    def global_state(self) -> placement.DeviceClusterState:
+        """Reassembled single-cluster view of the sharded aggregates."""
+        return sharding.unshard_state(self.sharded)
+
+    def chassis_headroom_w(self, budget_w) -> np.ndarray:
+        return admission.headroom_w(self.global_state(), budget_w,
+                                    self.blades_per_chassis,
+                                    self.power_model)
+
+    def pool_left(self) -> np.ndarray:
+        """(N,) remaining power tokens per shard (rho units)."""
+        return np.asarray(self.sharded.pool)

@@ -60,6 +60,7 @@ from repro.core.placement import ClusterState, SchedulerPolicy
 #: `place_batch` outcome codes (in the returned server array).
 FAIL_CAPACITY = -1      # no feasible server (deployment failure)
 FAIL_POWER = -2         # placed server's chassis lacks power headroom
+FAIL_TOKENS = -3        # shard's power-token pool exhausted (sharded serve)
 
 
 class DeviceClusterState(NamedTuple):
@@ -91,6 +92,9 @@ def _chassis_servers(chassis_of: np.ndarray) -> np.ndarray:
 
 def device_state(state: ClusterState,
                  dtype=jnp.float32) -> DeviceClusterState:
+    """Mirror a host `ClusterState`'s aggregates onto the device.
+    `dtype` selects the serving (f32) or equivalence-testing (f64,
+    under `jax.experimental.enable_x64`) arithmetic."""
     return DeviceClusterState(
         jnp.asarray(state.free_cores, dtype),
         jnp.asarray(state.gamma_uf, dtype),
@@ -103,6 +107,8 @@ def device_state(state: ClusterState,
 
 def fresh_state(n_servers: int, cores_per_server: int,
                 chassis_of: np.ndarray) -> DeviceClusterState:
+    """Device state of an empty cluster (every core free, nothing
+    committed) with the given server→chassis layout."""
     return device_state(ClusterState(
         n_servers=n_servers, cores_per_server=cores_per_server,
         chassis_of_server=np.asarray(chassis_of),
@@ -159,29 +165,35 @@ def _init_ranks(scores: jnp.ndarray) -> jnp.ndarray:
         jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (r, s)))
 
 
-def _commit(st: DeviceClusterState, srv, found, cores_i, uf_i, p95_i,
-            valid_i, rho_cap):
+def _commit(st: DeviceClusterState, pool, srv, found, cores_i, uf_i,
+            p95_i, valid_i, rho_cap):
     """Admission check + masked state update + outcome code — the
     shared tail of both scan bodies. `srv` is the winning server with
-    `found` indicating a feasible candidate existed."""
+    `found` indicating a feasible candidate existed. `pool` is the
+    scalar power-token balance (rho units) the placement draws from:
+    +inf outside the sharded protocol, where the compare is vacuous and
+    the arithmetic reduces to the unpooled rule."""
     dtype = st.free_cores.dtype
     srv = jnp.where(found, srv, 0).astype(jnp.int32)
     ch = st.chassis_of[srv]
     w = p95_i * cores_i
-    admit = st.rho_peak[ch] + w <= rho_cap[ch]
-    scale = (found & admit & valid_i).astype(dtype)
+    admit_ch = st.rho_peak[ch] + w <= rho_cap[ch]
+    admit_pool = w <= pool
+    scale = (found & admit_ch & admit_pool & valid_i).astype(dtype)
     uf_f = uf_i.astype(dtype)
     st2 = st._replace(
         free_cores=st.free_cores.at[srv].add(-cores_i * scale),
         gamma_uf=st.gamma_uf.at[srv].add(w * scale * uf_f),
         gamma_nuf=st.gamma_nuf.at[srv].add(w * scale * (1.0 - uf_f)),
         rho_peak=st.rho_peak.at[ch].add(w * scale))
+    pool2 = pool - w * scale
     out = jnp.where(~found, FAIL_CAPACITY,
-                    jnp.where(admit, srv, FAIL_POWER))
-    return st2, out, srv
+                    jnp.where(~admit_ch, FAIL_POWER,
+                              jnp.where(admit_pool, srv, FAIL_TOKENS)))
+    return st2, pool2, out, srv
 
 
-def _place_batch_single_rule(state, cores, is_uf, p95_eff, valid,
+def _place_batch_single_rule(state, pool, cores, is_uf, p95_eff, valid,
                              rho_cap, policy: SchedulerPolicy, cps):
     """Rank-free scan for single-rule policies: the winner is the
     stable argmax of the active rule's raw score over feasible servers
@@ -195,7 +207,8 @@ def _place_batch_single_rule(state, cores, is_uf, p95_eff, valid,
     no_rule = pack_only and policy.packing_weight == 0.0
     neg_inf = jnp.asarray(-jnp.inf, dtype)
 
-    def body(st, inp):
+    def body(carry, inp):
+        st, pl = carry
         cores_i, uf_i, p95_i, valid_i = inp
         feasible = (st.free_cores >= cores_i) & valid_i
         n_feas = feasible.sum()
@@ -208,33 +221,25 @@ def _place_batch_single_rule(state, cores, is_uf, p95_eff, valid,
             eta = score_server_batch(st, uf_i, cps)
             score = policy.alpha * kappa + (1.0 - policy.alpha) * eta
         srv = jnp.argmax(jnp.where(feasible, score, neg_inf))
-        st2, out, _ = _commit(st, srv, n_feas > 0, cores_i, uf_i,
-                              p95_i, valid_i, rho_cap)
-        return st2, out
+        st2, pl2, out, _ = _commit(st, pl, srv, n_feas > 0, cores_i,
+                                   uf_i, p95_i, valid_i, rho_cap)
+        return (st2, pl2), out
 
     inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
               jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
-    return jax.lax.scan(body, state, inputs)
+    (state, pool), servers = jax.lax.scan(body, (state, pool), inputs)
+    return state, servers, pool
 
 
-@partial(jax.jit, static_argnames=("policy", "cores_per_server"))
-def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
-                is_uf: jnp.ndarray, p95_eff: jnp.ndarray,
-                valid: jnp.ndarray, rho_cap: jnp.ndarray,
-                policy: SchedulerPolicy, cores_per_server: int):
-    """Place one arrival micro-batch. cores/is_uf/p95_eff/valid: (B,)
-    arrays (`valid=False` rows are padding and never touch state);
-    `rho_cap`: (C,) admission ceiling on chassis sum(p95*cores)
-    (+inf disables the check — see `serve.admission`). Returns
-    (new_state, servers (B,) i32) with FAIL_* codes for rejects.
-
-    Arithmetic follows the state dtype: f32 on the serving path, f64
-    (bit-equivalent to the numpy rule) when traced under
-    `jax.experimental.enable_x64` with an f64 state — that is how the
-    scheduler simulation's serve backend verifies decision
-    equivalence."""
-    cps = float(cores_per_server)
+def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
+                      p95_eff, valid, rho_cap, policy: SchedulerPolicy,
+                      cps: float):
+    """Shared scan implementation behind `place_batch` (pool forced to
+    +inf) and `place_batch_pooled`. Pure and transformation-friendly:
+    the sharded serve protocol vmaps/shard_maps it across per-shard
+    states (`serve.sharding`). Returns (state, servers, pool_left)."""
     dtype = state.free_cores.dtype
+    pool = jnp.asarray(pool, dtype)
     n_servers = state.n_servers
     idx = jnp.arange(n_servers, dtype=jnp.int32)
     use_power = policy.use_power_rule
@@ -247,7 +252,8 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
     single_rule = (not use_power) or pw == 0.0 or qw == 0.0
     if single_rule:
         return _place_batch_single_rule(
-            state, cores, is_uf, p95_eff, valid, rho_cap, policy, cps)
+            state, pool, cores, is_uf, p95_eff, valid, rho_cap, policy,
+            cps)
 
     def subset_rank(r, feasible):
         """Rank of each server among the feasible subset: prefix count
@@ -258,7 +264,7 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
         return (jnp.cumsum(by_rank) - by_rank)[r]
 
     def body(carry, inp):
-        st, scores, ranks = carry
+        st, pl, scores, ranks = carry
         cores_i, uf_i, p95_i, valid_i = inp
         raw_feas = st.free_cores >= cores_i
         feasible = raw_feas & valid_i
@@ -297,8 +303,8 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
             obj = obj + qw * rw(sr_pow)
         srv = jnp.argmax(jnp.where(feasible, obj,
                                    jnp.asarray(-jnp.inf, dtype)))
-        st2, out, srv = _commit(st, srv, n_feas > 0, cores_i, uf_i,
-                                p95_i, valid_i, rho_cap)
+        st2, pl2, out, srv = _commit(st, pl, srv, n_feas > 0, cores_i,
+                                     uf_i, p95_i, valid_i, rho_cap)
         ch = st.chassis_of[srv]
         # Incremental rank maintenance. Packing: only the placed
         # server's score moved. Power: the placed chassis' K servers
@@ -333,14 +339,50 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
             ranks2 = jnp.concatenate([ranks0[None], ranks_q], 0)
         else:
             ranks2 = ranks0[None]
-        return (st2, new_scores, ranks2), out
+        return (st2, pl2, new_scores, ranks2), out
 
     inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
               jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
     scores0 = _rule_scores(state, policy, cps)
-    (state, _, _), servers = jax.lax.scan(
-        body, (state, scores0, _init_ranks(scores0)), inputs)
+    (state, pool, _, _), servers = jax.lax.scan(
+        body, (state, pool, scores0, _init_ranks(scores0)), inputs)
+    return state, servers, pool
+
+
+@partial(jax.jit, static_argnames=("policy", "cores_per_server"))
+def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
+                is_uf: jnp.ndarray, p95_eff: jnp.ndarray,
+                valid: jnp.ndarray, rho_cap: jnp.ndarray,
+                policy: SchedulerPolicy, cores_per_server: int):
+    """Place one arrival micro-batch. cores/is_uf/p95_eff/valid: (B,)
+    arrays (`valid=False` rows are padding and never touch state);
+    `rho_cap`: (C,) admission ceiling on chassis sum(p95*cores)
+    (+inf disables the check — see `serve.admission`). Returns
+    (new_state, servers (B,) i32) with FAIL_* codes for rejects.
+
+    Arithmetic follows the state dtype: f32 on the serving path, f64
+    (bit-equivalent to the numpy rule) when traced under
+    `jax.experimental.enable_x64` with an f64 state — that is how the
+    scheduler simulation's serve backend verifies decision
+    equivalence."""
+    state, servers, _ = _place_batch_impl(
+        state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
+        float(cores_per_server))
     return state, servers
+
+
+@partial(jax.jit, static_argnames=("policy", "cores_per_server"))
+def place_batch_pooled(state: DeviceClusterState, pool, cores, is_uf,
+                       p95_eff, valid, rho_cap,
+                       policy: SchedulerPolicy, cores_per_server: int):
+    """`place_batch` with an explicit scalar power-token pool (rho
+    units — same currency as `rho_peak`): each admission additionally
+    requires `p95*cores <= pool_left` and draws the pool down, else
+    returns FAIL_TOKENS. This is the per-shard reserve primitive of the
+    sharded serve protocol (`serve.sharding`, docs/sharding.md).
+    Returns (new_state, servers, pool_left)."""
+    return _place_batch_impl(state, pool, cores, is_uf, p95_eff, valid,
+                             rho_cap, policy, float(cores_per_server))
 
 
 @jax.jit

@@ -1,0 +1,380 @@
+"""Sharded multi-host serve placement (DESIGN.md §10, docs/sharding.md).
+
+One `ServePipeline` serves one cluster from one host; this module is
+the fleet-scale path: the chassis state is partitioned over a device
+mesh and arrival micro-batches are placed by all shards concurrently
+under a consistent-placement protocol.
+
+Layout
+    Chassis are assigned to shards in contiguous equal blocks
+    (`chassis_to_shard`); servers follow their chassis. Each shard owns
+    a disjoint `DeviceClusterState` slice (local server/chassis ids,
+    stacked with a leading shard axis — `ShardedState`), so no two
+    shards can ever double-book a chassis: only the owner mutates it.
+
+Routing
+    Arrivals are dealt round-robin by arrival index (`route_shard` —
+    arrival i's home shard is ``i % n_shards``), which keeps per-shard
+    batches equal-sized and makes the whole protocol a deterministic
+    function of the batch. With one shard the routing is the identity
+    and the protocol degenerates to exactly `place_batch` — the
+    decision-identity the equivalence tests assert.
+
+Reserve/commit with power-headroom tokens
+    A global watt budget converts to a pool of rho-unit tokens
+    (`rho_pool_from_budget`) split across shards. Phase 1 (reserve):
+    every shard runs the placement scan against its local state,
+    drawing tokens from its own pool (`place_batch_pooled`); because
+    chassis ownership is exclusive and pools are disjoint, local
+    reservations commit immediately and the global budget cannot be
+    exceeded, whatever the shards do concurrently. Phase 2 (spillover
+    commit): arrivals their home shard rejected are re-offered to the
+    other shards in deterministic rounds — round r sends arrival i to
+    shard ``(i + r) % n_shards`` — after an all-gather of the shards'
+    leftover tokens (the only cross-shard communication; optionally
+    rebalanced equally). Token totals are conserved by rebalancing and
+    by departures crediting their shard's pool, so the invariant
+    ``sum(rho_peak) <= pool_total`` holds for the life of the cluster.
+
+Execution
+    Per-shard scans run under `jax.vmap` (single device — the
+    semantics oracle) or `jax.shard_map` over a 1-D ``("shard",)``
+    mesh (one scan per device — the scaling path benchmarked by
+    `benchmarks/serve_sharded.py` with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). Both
+    execute identical per-shard arithmetic and are asserted equal in
+    `tests/test_serve_sharded.py`.
+"""
+from __future__ import annotations
+
+from functools import lru_cache, partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.placement import SchedulerPolicy
+from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
+from repro.serve.placement import (DeviceClusterState, FAIL_CAPACITY,
+                                   _place_batch_impl, remove_batch)
+
+#: Mesh axis name the serve shards map over.
+SHARD_AXIS = "shard"
+
+
+class ShardedState(NamedTuple):
+    """Cluster state partitioned into N disjoint shard slices.
+
+    Every `shards` leaf carries a leading (N,) shard axis over *local*
+    server/chassis ids; the `global_*` tables translate local winners
+    back to cluster ids and `shard_of_server`/`local_of_server` invert
+    them for departures. `pool` is each shard's remaining power-token
+    balance in rho units (+inf when no cluster budget is set)."""
+    shards: DeviceClusterState      # leaves (N, S/N) / (N, C/N) / ...
+    global_server: jnp.ndarray      # (N, S/N) i32 — local -> global id
+    global_chassis: jnp.ndarray     # (N, C/N) i32
+    shard_of_server: jnp.ndarray    # (S,) i32 — global server -> shard
+    local_of_server: jnp.ndarray    # (S,) i32 — global server -> local id
+    rho_cap: jnp.ndarray            # (N, C/N) — per-chassis admission cap
+    pool: jnp.ndarray               # (N,) — power tokens left, rho units
+
+    @property
+    def n_shards(self) -> int:
+        return self.global_server.shape[0]
+
+    @property
+    def n_servers(self) -> int:
+        return self.shard_of_server.shape[0]
+
+
+def chassis_to_shard(n_chassis: int, n_shards: int) -> np.ndarray:
+    """(C,) shard owner of each chassis: contiguous equal blocks.
+
+    Shard counts must divide the chassis count (docs/sharding.md
+    discusses picking them); contiguity keeps a rack's chassis on one
+    shard under the standard ``chassis = server // blades`` layout."""
+    if n_chassis % n_shards:
+        raise ValueError(
+            f"n_shards={n_shards} must divide n_chassis={n_chassis}")
+    return np.repeat(np.arange(n_shards, dtype=np.int32),
+                     n_chassis // n_shards)
+
+
+def rho_pool_from_budget(cluster_budget_w, n_servers: int,
+                         model: ServerPowerModel | None = None) -> float:
+    """Cluster watt budget -> global power-token pool in rho units.
+
+    The cluster-level twin of `serve.admission.rho_cap_from_budget`:
+    tokens are the dynamic-power allowance
+    ``(budget - S * P_idle(f_max)) / p_dyn_per_core`` — the ceiling on
+    fleet-wide ``sum(p95 * cores)``. None/inf disables (+inf pool)."""
+    if cluster_budget_w is None or np.isinf(cluster_budget_w):
+        return float("inf")
+    model = model or ServerPowerModel()
+    static = n_servers * float(idle_power(F_MAX))
+    return max((float(cluster_budget_w) - static) / model.p_dyn_per_core,
+               0.0)
+
+
+def shard_state(state: DeviceClusterState, n_shards: int,
+                rho_cap=None, pool_total=None) -> ShardedState:
+    """Partition a `DeviceClusterState` into N shard slices.
+
+    Servers are regrouped chassis-major (the order of
+    `DeviceClusterState.chassis_servers`, which for the standard
+    ``chassis = server // blades`` layout is the server-id order, so
+    1-shard tie-breaking matches the unsharded scan exactly).
+    `rho_cap`: (C,) global per-chassis admission ceiling (None = +inf);
+    `pool_total`: global power-token pool (rho units, None = +inf),
+    split equally across shards."""
+    dtype = state.free_cores.dtype
+    n_chassis, k = state.chassis_servers.shape
+    n_servers = state.n_servers
+    chassis_to_shard(n_chassis, n_shards)       # validates divisibility
+    c_loc = n_chassis // n_shards
+    s_loc = c_loc * k
+    global_chassis = jnp.arange(n_chassis, dtype=jnp.int32) \
+        .reshape(n_shards, c_loc)
+    global_server = state.chassis_servers.reshape(n_shards, s_loc)
+    local_chassis_of = jnp.broadcast_to(
+        (jnp.arange(s_loc, dtype=jnp.int32) // k)[None],
+        (n_shards, s_loc))
+    local_chassis_servers = jnp.broadcast_to(
+        jnp.arange(s_loc, dtype=jnp.int32).reshape(c_loc, k)[None],
+        (n_shards, c_loc, k))
+    shards = DeviceClusterState(
+        free_cores=state.free_cores[global_server],
+        gamma_uf=state.gamma_uf[global_server],
+        gamma_nuf=state.gamma_nuf[global_server],
+        rho_peak=state.rho_peak[global_chassis],
+        rho_max=state.rho_max[global_chassis],
+        chassis_of=local_chassis_of,
+        chassis_servers=local_chassis_servers)
+    flat = global_server.reshape(-1)
+    shard_of = jnp.zeros(n_servers, jnp.int32).at[flat].set(
+        jnp.repeat(jnp.arange(n_shards, dtype=jnp.int32), s_loc))
+    local_of = jnp.zeros(n_servers, jnp.int32).at[flat].set(
+        jnp.tile(jnp.arange(s_loc, dtype=jnp.int32), n_shards))
+    if rho_cap is None:
+        cap = jnp.full((n_shards, c_loc), jnp.inf, dtype)
+    else:
+        cap = jnp.asarray(rho_cap, dtype)[global_chassis]
+    if pool_total is None:
+        pool = jnp.full(n_shards, jnp.inf, dtype)
+    else:
+        pool = jnp.full(n_shards, float(pool_total) / n_shards, dtype)
+    return ShardedState(shards, global_server, global_chassis, shard_of,
+                        local_of, cap, pool)
+
+
+def unshard_state(sharded: ShardedState) -> DeviceClusterState:
+    """Reassemble the global `DeviceClusterState` view (diagnostics,
+    headroom reporting — the serving path never needs it)."""
+    sh = sharded.shards
+    dtype = sh.free_cores.dtype
+    n, s_loc = sharded.global_server.shape
+    c_loc, k = sh.chassis_servers.shape[1:]
+    n_servers, n_chassis = n * s_loc, n * c_loc
+    srv = sharded.global_server.reshape(-1)
+    cha = sharded.global_chassis.reshape(-1)
+    chassis_of = jnp.zeros(n_servers, jnp.int32).at[srv].set(
+        jnp.take_along_axis(sharded.global_chassis, sh.chassis_of,
+                            axis=1).reshape(-1))
+    chassis_servers = jnp.zeros((n_chassis, k), jnp.int32).at[cha].set(
+        sharded.global_server.reshape(n * c_loc, k))
+    return DeviceClusterState(
+        free_cores=jnp.zeros(n_servers, dtype).at[srv].set(
+            sh.free_cores.reshape(-1)),
+        gamma_uf=jnp.zeros(n_servers, dtype).at[srv].set(
+            sh.gamma_uf.reshape(-1)),
+        gamma_nuf=jnp.zeros(n_servers, dtype).at[srv].set(
+            sh.gamma_nuf.reshape(-1)),
+        rho_peak=jnp.zeros(n_chassis, dtype).at[cha].set(
+            sh.rho_peak.reshape(-1)),
+        rho_max=jnp.zeros(n_chassis, dtype).at[cha].set(
+            sh.rho_max.reshape(-1)),
+        chassis_of=chassis_of, chassis_servers=chassis_servers)
+
+
+def shard_mesh(n_shards: int):
+    """1-D ``("shard",)`` mesh over the first N devices, or None when
+    the runtime has fewer devices than shards (the vmap path then runs
+    all shards on one device with identical semantics)."""
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        return None
+    return Mesh(np.asarray(devices[:n_shards]), (SHARD_AXIS,))
+
+
+def device_put_sharded_state(sharded: ShardedState,
+                             mesh: Mesh) -> ShardedState:
+    """Pin each shard's slice of the stacked state to its mesh device
+    (leading axis over SHARD_AXIS; the inverse-lookup tables are
+    replicated), so the per-round jit starts from resident operands
+    instead of resharding on entry."""
+    row = NamedSharding(mesh, P(SHARD_AXIS))
+    rep = NamedSharding(mesh, P())
+    stacked = jax.tree.map(lambda x: jax.device_put(x, row),
+                           (sharded.shards, sharded.global_server,
+                            sharded.global_chassis, sharded.rho_cap,
+                            sharded.pool))
+    inv = jax.tree.map(lambda x: jax.device_put(x, rep),
+                       (sharded.shard_of_server,
+                        sharded.local_of_server))
+    return ShardedState(stacked[0], stacked[1], stacked[2], inv[0],
+                        inv[1], stacked[3], stacked[4])
+
+
+def route_shard(n_arrivals: int, n_shards: int, rnd: int = 0) \
+        -> np.ndarray:
+    """(B,) target shard of each arrival in spillover round `rnd`.
+
+    Round 0 is the home assignment ``i % n_shards``; later rounds
+    rotate (``+ rnd``), a bijection on shards, so every round keeps at
+    most ``B / n_shards`` arrivals per shard — shapes never overflow
+    the phase-1 slots."""
+    return ((np.arange(n_arrivals) + rnd) % n_shards).astype(np.int32)
+
+
+def _pack_round(pending: np.ndarray, targets: np.ndarray, n_shards: int,
+                b_loc: int):
+    """Per-shard slot assignment for one protocol round: (N, B/N)
+    arrival-index and attempt-mask arrays, arrival order preserved
+    within each shard."""
+    idx = np.zeros((n_shards, b_loc), np.int32)
+    attempt = np.zeros((n_shards, b_loc), bool)
+    for s in range(n_shards):
+        mine = pending[targets[pending] == s]
+        idx[s, :len(mine)] = mine
+        attempt[s, :len(mine)] = True
+    return idx, attempt
+
+
+@lru_cache(maxsize=None)
+def _round_fn(policy: SchedulerPolicy, cps: float, mesh):
+    """Compiled one-round kernel: gather each shard's routed slice,
+    place it on the local state (vmap or shard_map over SHARD_AXIS),
+    translate winners to global server ids."""
+    place = partial(_place_batch_impl, policy=policy, cps=cps)
+
+    def one_shard(st, pool, cores, is_uf, p95, attempt, cap):
+        return place(st, pool, cores, is_uf, p95, attempt, cap)
+
+    def fn(shards, pool, global_server, rho_cap, idx, attempt, cores,
+           is_uf, p95):
+        c, u, p = cores[idx], is_uf[idx], p95[idx]
+        if mesh is None:
+            st2, srv, pool2 = jax.vmap(one_shard)(
+                shards, pool, c, u, p, attempt, rho_cap)
+        else:
+            def per(st, pl, c1, u1, p1, a1, rc):
+                sq = partial(jax.tree.map, lambda x: x[0])
+                s2, sv, pl2 = one_shard(sq(st), pl[0], c1[0], u1[0],
+                                        p1[0], a1[0], rc[0])
+                return (jax.tree.map(lambda x: x[None], s2), sv[None],
+                        pl2[None])
+            spec = P(SHARD_AXIS)
+            st2, srv, pool2 = shard_map(
+                per, mesh=mesh,
+                in_specs=(spec,) * 7, out_specs=(spec, spec, spec))(
+                shards, pool, c, u, p, attempt, rho_cap)
+        glob = jnp.take_along_axis(global_server, jnp.maximum(srv, 0),
+                                   axis=1)
+        return st2, pool2, jnp.where(srv >= 0, glob, srv)
+
+    return jax.jit(fn)
+
+
+def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
+                        valid, policy: SchedulerPolicy,
+                        cores_per_server: int, *, mesh=None,
+                        spill_rounds: int | None = None,
+                        rebalance: bool = True):
+    """Place one arrival batch through the full sharded protocol.
+
+    cores/is_uf/p95_eff/valid: (B,) host arrays with B divisible by
+    the shard count (`valid=False` rows are padding). Runs the home
+    round plus up to ``spill_rounds`` (default N-1) spillover rounds —
+    an arrival therefore fails only if *every* shard rejected it, so
+    sharding never invents capacity failures the single-shard oracle
+    would not have (the regret is in objective quality, not
+    feasibility; docs/sharding.md). `rebalance` equalizes leftover
+    tokens across shards between rounds (conserves the total).
+
+    Returns ``(sharded_state, servers, info)``: servers is (B,) global
+    ids with FAIL_* codes (a still-failed arrival reports the
+    most-severe code it saw across rounds), info counts
+    ``{"rounds", "spilled", "spill_admitted"}``."""
+    n = sharded.n_shards
+    cores = np.asarray(cores, np.float64)
+    is_uf = np.asarray(is_uf, bool)
+    p95_eff = np.asarray(p95_eff, np.float64)
+    valid = np.asarray(valid, bool)
+    b = len(cores)
+    if b % n:
+        raise ValueError(f"batch size {b} not divisible by {n} shards")
+    b_loc = b // n
+    if spill_rounds is None:
+        spill_rounds = n - 1
+    fn = _round_fn(policy, float(cores_per_server), mesh)
+    dtype = sharded.shards.free_cores.dtype
+    cores_d = jnp.asarray(cores, dtype)
+    uf_d = jnp.asarray(is_uf)
+    p95_d = jnp.asarray(p95_eff, dtype)
+
+    result = np.full(b, FAIL_CAPACITY, np.int64)
+    pending = np.arange(b)[valid]
+    shards, pool = sharded.shards, sharded.pool
+    info = {"rounds": 0, "spilled": 0, "spill_admitted": 0}
+    for rnd in range(spill_rounds + 1):
+        if not len(pending):
+            break
+        if rnd > 0:
+            info["spilled"] += len(pending)
+            if rebalance:
+                pool = jnp.full_like(pool, pool.mean())
+        targets = route_shard(b, n, rnd)
+        idx, attempt = _pack_round(pending, targets, n, b_loc)
+        shards, pool, glob = fn(shards, pool, sharded.global_server,
+                                sharded.rho_cap, jnp.asarray(idx),
+                                jnp.asarray(attempt), cores_d, uf_d,
+                                p95_d)
+        out = np.asarray(glob)[attempt]
+        arrivals = idx[attempt]
+        admitted = out >= 0
+        result[arrivals[admitted]] = out[admitted]
+        if rnd > 0:
+            info["spill_admitted"] += int(admitted.sum())
+        failed = arrivals[~admitted]
+        # keep the most severe failure reason seen across rounds
+        result[failed] = np.minimum(result[failed], out[~admitted])
+        pending = np.sort(failed)
+        info["rounds"] = rnd + 1
+    return (sharded._replace(shards=shards, pool=pool), result, info)
+
+
+def remove_sharded(sharded: ShardedState, servers, cores, p95_eff,
+                   is_uf) -> ShardedState:
+    """Sharded twin of `serve.placement.remove_batch`: route each
+    departure to its owner shard (negative server codes are ignored)
+    and credit the freed `p95*cores` tokens back to that shard's
+    pool."""
+    servers = jnp.asarray(servers, jnp.int32)
+    live = servers >= 0
+    safe = jnp.where(live, servers, 0)
+    owner = jnp.where(live, sharded.shard_of_server[safe], -1)
+    local = sharded.local_of_server[safe]
+    n = sharded.n_shards
+    mine = owner[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
+    srv_nb = jnp.where(mine, local[None, :], -1)            # (N, B)
+    tile = lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                      (n,) + np.shape(x))
+    shards = jax.vmap(remove_batch)(sharded.shards, srv_nb, tile(cores),
+                                    tile(p95_eff), tile(is_uf))
+    dtype = sharded.pool.dtype
+    w = (jnp.asarray(p95_eff, dtype) * jnp.asarray(cores, dtype))[None]
+    credit = (w * mine.astype(dtype)).sum(-1)
+    return sharded._replace(shards=shards, pool=sharded.pool + credit)

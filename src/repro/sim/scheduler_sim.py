@@ -187,6 +187,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              power_eval_backend: str = "jax",
              backend: str = "event",
              admission_budget_w: float | None = None,
+             serve_shards: int = 1,
+             cluster_budget_w: float | None = None,
              trace: list | None = None) -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
     UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
@@ -201,16 +203,28 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                 SERVE_GROUP_PAD), exercising the online path against
                 the same arrival stream. `admission_budget_w` adds the
                 serve path's per-chassis power-admission ceiling
-                (rejections count as failures).
+                (rejections count as failures);
+      'serve-sharded' —
+                each group runs the sharded consistent-placement
+                protocol (`repro.serve.sharding`, docs/sharding.md)
+                over `serve_shards` state partitions. With 1 shard it
+                is decision-identical to 'serve' (asserted in tests);
+                with N it bounds the objective regret of concurrent
+                placement while never exceeding `cluster_budget_w`
+                (the global watt budget the per-shard token pools
+                enforce — tracked net of departures across the run).
     `trace`, if given, collects the chosen server (or failure code)
     per placement attempt — the decision-equivalence probe."""
-    if backend not in ("event", "serve"):
+    if backend not in ("event", "serve", "serve-sharded"):
         raise ValueError(f"unknown backend {backend!r}")
-    if backend == "serve":
+    if backend in ("serve", "serve-sharded"):
         import jax
         import jax.numpy as jnp
         from repro.serve.admission import rho_cap_from_budget
         from repro.serve.placement import device_state, place_batch
+        from repro.serve.sharding import (place_group_sharded,
+                                          rho_pool_from_budget,
+                                          shard_state)
     rng = np.random.default_rng(seed)
     n_servers = RACKS * CHASSIS_PER_RACK * BLADES_PER_CHASSIS
     chassis_of = np.arange(n_servers) // BLADES_PER_CHASSIS
@@ -219,9 +233,11 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         chassis_of_server=chassis_of,
         n_chassis=n_servers // BLADES_PER_CHASSIS)
 
-    if backend == "serve":
+    if backend in ("serve", "serve-sharded"):
         serve_rho_cap = rho_cap_from_budget(
             admission_budget_w, BLADES_PER_CHASSIS, state.n_chassis)
+        serve_pool_total = rho_pool_from_budget(cluster_budget_w,
+                                                n_servers)
     departures: list = []        # heap of (time, vm_token)
     vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
     token = 0
@@ -258,7 +274,7 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
             group.append((cores, life_h, uf_pred,
                           policy.effective_p95(p95_pred)))
-        if backend == "serve":
+        if backend in ("serve", "serve-sharded"):
             n = len(group)
             assert n <= SERVE_GROUP_PAD, \
                 "deployment group exceeds SERVE_GROUP_PAD"
@@ -266,17 +282,33 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             cores_a, uf_a, p95_a = pad.copy(), pad.copy(), pad.copy()
             for i, (cores, _, ufp, p95e) in enumerate(group):
                 cores_a[i], uf_a[i], p95_a[i] = cores, ufp, p95e
+            valid = np.arange(SERVE_GROUP_PAD) < n
             # trace/run the scan in x64: bit-equivalent to the f64 host
             # rule, so 'serve' reproduces 'event' placements exactly
             # (the f32 serving path's divergence is bounded in
             # DESIGN.md §9)
             with jax.experimental.enable_x64():
-                _, srvs = place_batch(
-                    device_state(state, jnp.float64), cores_a,
-                    uf_a.astype(bool), p95_a,
-                    np.arange(SERVE_GROUP_PAD) < n, serve_rho_cap,
-                    policy, state.cores_per_server)
-                chosen = [int(s) for s in np.asarray(srvs)[:n]]
+                if backend == "serve":
+                    _, srvs = place_batch(
+                        device_state(state, jnp.float64), cores_a,
+                        uf_a.astype(bool), p95_a, valid, serve_rho_cap,
+                        policy, state.cores_per_server)
+                    chosen = [int(s) for s in np.asarray(srvs)[:n]]
+                else:
+                    # the token pool is the global allowance net of
+                    # everything currently committed, so the watt
+                    # invariant holds across the whole run, not just
+                    # within one group
+                    pool = None if np.isinf(serve_pool_total) else \
+                        max(serve_pool_total - float(state.rho_peak.sum()),
+                            0.0)
+                    sharded = shard_state(
+                        device_state(state, jnp.float64), serve_shards,
+                        rho_cap=serve_rho_cap, pool_total=pool)
+                    _, srvs, _ = place_group_sharded(
+                        sharded, cores_a, uf_a.astype(bool), p95_a,
+                        valid, policy, state.cores_per_server)
+                    chosen = [int(s) for s in srvs[:n]]
         else:
             chosen = None
         for i, (cores, life_h, uf_pred, p95_eff) in enumerate(group):

@@ -1,8 +1,15 @@
 import os
+import re
 
 # tests must see exactly ONE device (the dry-run sets 512 in its own
-# process); keep any user XLA_FLAGS out of the way.
-os.environ.pop("XLA_FLAGS", None)
+# process); keep any user XLA_FLAGS out of the way — except an explicit
+# host-device-count request, which the sharded-serve smoke tests use to
+# exercise the shard_map execution path on a multi-device CPU runtime.
+_flags = os.environ.pop("XLA_FLAGS", "")
+_keep = re.findall(r"--xla_force_host_platform_device_count=\d+",
+                   _flags)
+if _keep:
+    os.environ["XLA_FLAGS"] = " ".join(_keep)
 
 # The suite must collect and run on a bare interpreter (jax + numpy +
 # pytest). If hypothesis is missing, install the deterministic stub so
