@@ -1,6 +1,7 @@
 """Shared helpers for the per-table benchmarks."""
 from __future__ import annotations
 
+import os
 import time
 
 
@@ -17,3 +18,35 @@ def timed(fn, *args, repeat: int = 3, **kw):
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def subproc_env(sentinel: str | None = None) -> dict:
+    """Environment for a benchmark subprocess: PYTHONPATH includes
+    `src` (the drivers import `repro.*` from the source tree), and
+    `sentinel`, when given, marks the child as already re-executed so
+    the device-count re-exec guards cannot loop."""
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        p for p in ("src", os.environ.get("PYTHONPATH")) if p))
+    if sentinel:
+        env[sentinel] = "1"
+    return env
+
+
+#: `benchmarks.run --regress` fails a driver whose re-measured
+#: throughput drops below this fraction of its committed baseline.
+REGRESS_THRESHOLD = 0.7
+
+
+def regress_gate(name: str, measured: float, baseline: float,
+                 threshold: float = REGRESS_THRESHOLD) -> list:
+    """One benchmark-regression check: `measured` (higher is better)
+    must reach `threshold` x the committed `baseline`. Prints the
+    comparison; returns [] on pass or a one-line failure message."""
+    ok = measured >= threshold * baseline
+    print(f"regress,{name},measured={measured:.1f},"
+          f"baseline={baseline:.1f},floor={threshold * baseline:.1f},"
+          f"{'ok' if ok else 'FAIL'}", flush=True)
+    if ok:
+        return []
+    return [f"{name}: measured {measured:.1f} < "
+            f"{threshold:.0%} of baseline {baseline:.1f}"]

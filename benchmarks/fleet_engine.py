@@ -78,5 +78,28 @@ def run(duration_s: float = 30.0, seed: int = 0,
     return out
 
 
+def regress(baseline: dict) -> list:
+    """Benchmark-regression gate (``benchmarks.run --regress``):
+    re-time the 64-chassis jax engine (the quick mid-size row) and
+    fail on a >30% steps/s drop vs BENCH_fleet_engine.json."""
+    from benchmarks.common import regress_gate
+    want = next(r for r in baseline["results"] if r["n_chassis"] == 64)
+    specs = paper_chassis_specs(balanced=True)
+    layout = build_layout(specs)
+    duration_s = baseline["duration_s"]
+    n = 64
+    t_jax = _time(lambda: run_fleet(
+        specs, np.full(n, BUDGET), "per_vm", duration_s,
+        np.arange(n), backend="jax", layout=layout))
+    measured = n * int(duration_s / 0.2) / t_jax
+    return regress_gate("fleet_engine/64chassis/jax_steps_per_s",
+                        measured, want["jax_steps_per_s"])
+
+
 if __name__ == "__main__":
+    import sys
+
+    if "--regress" in sys.argv:
+        with open(OUT_PATH) as f:
+            sys.exit(1 if regress(json.load(f)) else 0)
     run()

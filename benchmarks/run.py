@@ -4,15 +4,26 @@ Prints ``name,us_per_call,derived`` CSV rows.
   PYTHONPATH=src python -m benchmarks.run             # all
   PYTHONPATH=src python -m benchmarks.run table4 fig7 # subset
   PYTHONPATH=src python -m benchmarks.run --check     # artifacts only
+  PYTHONPATH=src python -m benchmarks.run --regress   # CI perf gate
 
 Each driver row pins the JSON artifact it writes (None = stdout only),
 so callers and CI can locate outputs without running anything. A
 driver that declares an artifact must actually produce it — asserted
 after every run, and checkable without running via ``--check``.
+
+``--regress`` is the benchmark-regression gate: every artifact driver
+exposes a ``--regress`` probe that re-measures a quick representative
+configuration and fails (exit 1) if its throughput drops more than
+30% below the committed BENCH_*.json baseline
+(`benchmarks.common.REGRESS_THRESHOLD`). Each probe runs in a fresh
+interpreter — the probes are noise-sensitive on small CI boxes, and a
+parent process full of jitted executables and training state taxes
+them measurably.
 """
 from __future__ import annotations
 
 import os
+import subprocess
 import sys
 
 #: (name, import path, JSON output path or None) — run order.
@@ -28,6 +39,8 @@ DRIVERS = (
     ("serve", "benchmarks.serve_online", "BENCH_serve.json"),
     ("serve_sharded", "benchmarks.serve_sharded",
      "BENCH_serve_sharded.json"),
+    ("serve_ingest", "benchmarks.serve_ingest",
+     "BENCH_serve_ingest.json"),
     ("roofline", "benchmarks.roofline_report", None),
 )
 
@@ -42,12 +55,36 @@ def check_artifacts(ran: set | None = None) -> list:
     return [out for _, _, out in DRIVERS if out]
 
 
+def regress() -> int:
+    """Run every artifact driver's ``--regress`` probe against its
+    committed baseline (see module docstring), one fresh interpreter
+    each. Returns the number of failed gates."""
+    from benchmarks.common import subproc_env
+    check_artifacts()
+    failed = []
+    for name, module, out in DRIVERS:
+        if not out:
+            continue
+        rc = subprocess.run(
+            [sys.executable, "-m", module, "--regress"],
+            env=subproc_env()).returncode
+        print(f"regress,{name},{'ok' if rc == 0 else 'FAIL'}",
+              flush=True)
+        if rc:
+            failed.append(name)
+    for name in failed:
+        print(f"REGRESS FAIL: {name}", file=sys.stderr)
+    return len(failed)
+
+
 def main() -> None:
     args = set(sys.argv[1:])
     if "--check" in args:
         for p in check_artifacts():
             print(f"artifact,{p},ok")
         return
+    if "--regress" in args:
+        sys.exit(1 if regress() else 0)
     want = args
     names = {name for name, _, _ in DRIVERS}
 

@@ -159,5 +159,33 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:
     return out
 
 
+def regress(baseline: dict) -> list:
+    """Benchmark-regression gate (``benchmarks.run --regress``):
+    re-serve a short stream at the committed batch-256 configs (same
+    forest size and cluster, fewer batches) and fail on a >30%
+    arrivals/s drop vs BENCH_serve.json."""
+    from benchmarks.common import regress_gate
+    hist, arrivals, labels, _aggs, svc = _train(n_trees=48)
+    arrivals = F.Population(vms=arrivals.vms[:1024])
+    failures = []
+    for mode, policy in POLICIES.items():
+        want = next(r for r in baseline["modes"][mode]["serve"]
+                    if r["batch_size"] == 256)
+        batches = [arrival_batch(arrivals, np.arange(i, i + 256))
+                   for i in range(0, 1024, 256)]
+        pipe = _make_pipe(svc, hist, labels, 256, policy)
+        _serve_batches(pipe, batches[:1])          # jit trace, untimed
+        times = np.array(_serve_batches(pipe, batches[1:]))
+        # best-of: regression noise on a small CI box is one-sided
+        measured = 256 / float(times.min())
+        failures += regress_gate(
+            f"serve_online/{mode}/batch256/arrivals_per_s", measured,
+            want["arrivals_per_s"])
+    return failures
+
+
 if __name__ == "__main__":
+    if "--regress" in sys.argv:
+        with open(OUT_PATH) as f:
+            sys.exit(1 if regress(json.load(f)) else 0)
     run(smoke="--smoke" in sys.argv)

@@ -34,7 +34,7 @@ if "xla_force_host_platform_device_count" not in \
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, subproc_env
 from repro.core import features as F
 from repro.core.placement import SchedulerPolicy
 from repro.core.predictor import train_service
@@ -87,11 +87,8 @@ def _reexec(out_path: str, smoke: bool) -> dict:
     cmd = [sys.executable, "-m", "benchmarks.serve_sharded"]
     if smoke:
         cmd.append("--smoke")
-    env = dict(os.environ, REPRO_SERVE_SHARDED_SUBPROC="1",
-               PYTHONPATH=os.pathsep.join(
-                   p for p in ("src", os.environ.get("PYTHONPATH"))
-                   if p))
-    subprocess.run(cmd, env=env, check=True)
+    subprocess.run(cmd, env=subproc_env("REPRO_SERVE_SHARDED_SUBPROC"),
+                   check=True)
     if smoke:
         return {}
     with open(out_path) as f:
@@ -160,5 +157,59 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:
     return out
 
 
-if __name__ == "__main__":
+def regress(baseline: dict) -> list:
+    """Benchmark-regression gate (``benchmarks.run --regress``):
+    re-measure the rank_rule 4-shard row (the headline speedup config,
+    same batch size and forest, fewer arrivals) and fail on a >30%
+    arrivals/s drop vs BENCH_serve_sharded.json. Re-execs itself when
+    the parent already initialized a small-device JAX (same trap as
+    `run`)."""
+    from benchmarks.common import regress_gate
+    import jax
+    if len(jax.devices()) < 4:
+        if "REPRO_SERVE_SHARDED_SUBPROC" in os.environ:
+            return [f"serve_sharded: {len(jax.devices())} devices in "
+                    "subprocess, need 4"]
+        rc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.serve_sharded",
+             "--regress"],
+            env=subproc_env("REPRO_SERVE_SHARDED_SUBPROC")).returncode
+        return [] if rc == 0 else \
+            [f"serve_sharded: regress subprocess exited {rc}"]
+    want = next(r for r in baseline["modes"]["rank_rule"]["shards"]
+                if r["n_shards"] == 4)
+    bs = baseline["batch_size"]
+    hist, arrivals, labels, svc = _train(n_trees=48)
+    # as many timed batches as the baseline run: the 4-shard config
+    # under forced host devices schedules noisily on small boxes, and
+    # best-of needs samples to shed that one-sided noise
+    arrivals = F.Population(vms=arrivals.vms[:8 * bs])
+    batches = [arrival_batch(arrivals, np.arange(i, i + bs))
+               for i in range(0, len(arrivals.vms), bs)]
+    pipe = _make_pipe(svc, hist, labels, 4, POLICIES["rank_rule"], bs)
+    pipe.serve(batches[0])                         # jit trace, untimed
+    times = []
+    for b in batches[1:]:
+        t0 = time.perf_counter()
+        pipe.serve(b)
+        times.append(time.perf_counter() - t0)
+    # best-of: regression noise on a small CI box is one-sided
+    measured = bs / float(min(times))
+    return regress_gate("serve_sharded/rank_rule/shards4/arrivals_per_s",
+                        measured, want["arrivals_per_s"])
+
+
+def _main() -> int:
+    if "--regress" in sys.argv:
+        with open(OUT_PATH) as f:
+            baseline = json.load(f)
+        failures = regress(baseline)
+        for msg in failures:
+            print(f"REGRESS FAIL: {msg}", file=sys.stderr)
+        return 1 if failures else 0
     run(smoke="--smoke" in sys.argv)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(_main())

@@ -3,7 +3,6 @@ approaches (1440 chassis x 3 months of telemetry, 128 MW campus,
 $10/W)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, timed
 from repro.core.oversubscription import FleetProfile, scenario_table

@@ -22,7 +22,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.power_model import F_MAX, ServerPowerModel, dyn_scale
+from repro.core.power_model import F_MAX, ServerPowerModel
 
 
 @dataclass(frozen=True)

@@ -18,7 +18,6 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core import features as F
 from repro.core.forest import ObliviousForest, evaluate, \
     train_gradient_boosting, train_random_forest
 

@@ -21,7 +21,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from enum import IntEnum
 
-import numpy as np
 
 from repro.core.power_model import (F_MAX, F_MIN, N_PSTATES,
                                     ServerPowerModel, pstate_frequencies)

@@ -6,7 +6,6 @@ Series layout: (..., T) where T = days * slots_per_day (default 5 * 48 =
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 SLOTS_PER_DAY = 48          # 30-minute intervals

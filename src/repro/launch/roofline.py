@@ -272,9 +272,6 @@ def roofline_row(rec: dict, cfg, shape, chips: int = 256,
                  hlo_text: str | None = None) -> dict:
     est = analytic_cost(cfg, shape)
     flops_dev, hbm_dev = est.per_device(chips)
-    mem = rec.get("memory", {})
-    # prefer exact live-bytes from memory_analysis for the memory term
-    # denominator when available (argument+temp approximates working set)
     coll_dev = rec.get("collectives", {}).get("total_bytes", 0)
     if hlo_text is not None:
         coll_dev = collective_bytes_with_trips(hlo_text)["total"]

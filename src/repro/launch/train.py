@@ -22,7 +22,7 @@ from repro.configs import get_config
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
 from repro.launch.steps import make_train_step
 from repro.models import transformer as T
-from repro.optim import cosine_schedule, get_optimizer
+from repro.optim import get_optimizer
 from repro.runtime.fault_tolerance import (FaultToleranceConfig,
                                            FaultTolerantLoop)
 from repro.runtime.power_control import (ChassisPowerSim, JobSpec,
@@ -57,8 +57,6 @@ def main(argv=None):
     params = T.init_params(cfg, rng)
     opt = get_optimizer(cfg.optimizer)
     opt_state = opt.init(params)
-    lr_fn = cosine_schedule(args.lr, warmup_steps=20,
-                            total_steps=args.steps)
 
     step_fn_inner = make_train_step(cfg, impl="naive", lr=args.lr)
     jitted = jax.jit(step_fn_inner, donate_argnums=(0, 1))

@@ -56,8 +56,6 @@ def moe_apply(params, x, cfg, capacity_factor: float | None = 1.25,
     are hoisted out of the loop.
     """
     b, l, d = x.shape
-    e = cfg.n_experts
-    k = cfg.experts_per_token
     t = b * l
     chunk_l = max(dispatch_chunk // max(b, 1), 1)
     if t > dispatch_chunk and l % chunk_l == 0 and l // chunk_l > 1:

@@ -17,7 +17,6 @@ shared attention block between groups; whisper is enc-dec.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,6 +12,9 @@ from repro.serve.featurizer import SubscriptionTable, empty_table, \
     table_from_history, update_table
 from repro.serve.inference import PackedService, ServiceMeta, \
     bucket_to_p95_jnp, pack_service, resolve_kernel, served_query
+from repro.serve.ingest import ARRIVAL, DEPARTURE, DepartureBatch, \
+    HostQueue, IngestMux, MergedEvents, empty_arrivals, \
+    empty_departures, kway_merge, slice_soa
 from repro.serve.pipeline import ServeConfig, ServePipeline, \
     ServeResult, ShardedServeConfig, ShardedServePipeline
 from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
@@ -21,12 +24,12 @@ from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    remove_batch, score_chassis_batch,
                                    score_server_batch)
 from repro.serve.sharding import (SHARD_AXIS, ShardedState,
-                                  chassis_to_shard,
+                                  chassis_to_shard, consume_departures,
                                   device_put_sharded_state,
                                   place_group_sharded, remove_sharded,
                                   rho_pool_from_budget, route_shard,
                                   shard_mesh, shard_state,
-                                  unshard_state)
+                                  split_departures, unshard_state)
 
 __all__ = [
     "SubscriptionTable", "empty_table", "featurize", "featurize_batch",
@@ -34,6 +37,9 @@ __all__ = [
     "update_table",
     "PackedService", "ServiceMeta", "pack_service", "served_query",
     "bucket_to_p95_jnp", "resolve_kernel",
+    "ARRIVAL", "DEPARTURE", "DepartureBatch", "HostQueue", "IngestMux",
+    "MergedEvents", "empty_arrivals", "empty_departures", "kway_merge",
+    "slice_soa",
     "DeviceClusterState", "device_state", "fresh_state", "place_batch",
     "place_batch_pooled", "remove_batch", "score_chassis_batch",
     "score_server_batch",
@@ -42,7 +48,8 @@ __all__ = [
     "ServeConfig", "ServePipeline", "ServeResult",
     "ShardedServeConfig", "ShardedServePipeline",
     "SHARD_AXIS", "ShardedState", "chassis_to_shard",
-    "device_put_sharded_state", "place_group_sharded", "remove_sharded",
-    "rho_pool_from_budget", "route_shard", "shard_mesh", "shard_state",
+    "consume_departures", "device_put_sharded_state",
+    "place_group_sharded", "remove_sharded", "rho_pool_from_budget",
+    "route_shard", "shard_mesh", "shard_state", "split_departures",
     "unshard_state",
 ]

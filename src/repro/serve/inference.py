@@ -20,7 +20,6 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.forest import ObliviousForest
 from repro.core.predictor import CONFIDENCE_GATE, UF, PredictionService

@@ -20,6 +20,12 @@ already specialized).
 consistent-placement protocol (`serve.sharding`) when the cluster is
 partitioned over a device mesh — everything upstream of placement is
 shard-agnostic and shared.
+
+Arrivals and departures enter through the cross-host ingest subsystem
+(`serve.ingest`, DESIGN.md §11): each ingest host owns its own stamped
+queue and a deterministic watermark-based timestamp merge produces the
+micro-batches. `submit`/`depart` are the 1-host special case;
+`submit_to`/`depart_to` are the per-host path.
 """
 from __future__ import annotations
 
@@ -37,6 +43,8 @@ from repro.serve.featurizer import SubscriptionTable, featurize_batch, \
     ingest_population, shard_table, table_from_history
 from repro.serve.inference import bucket_to_p95_jnp, pack_service, \
     resolve_kernel, served_query
+from repro.serve.ingest import ARRIVAL, DepartureBatch, IngestMux, \
+    MergedEvents, slice_soa
 from repro.sim.telemetry import ArrivalBatch, Population
 
 
@@ -45,6 +53,7 @@ class ServeConfig:
     batch_size: int = 256
     kernel: str = "auto"            # 'pallas' | 'ref' | 'auto'
     policy: SchedulerPolicy = field(default_factory=SchedulerPolicy)
+    n_ingest_hosts: int = 1         # per-host queues (serve.ingest)
 
 
 @dataclass
@@ -124,7 +133,12 @@ class ServePipeline:
         self.rho_cap = jnp.asarray(admission.rho_cap_from_budget(
             chassis_budget_w, blades_per_chassis, n_chassis,
             self.power_model))
-        self._queue: list[ArrivalBatch] = []
+        if self.config.n_ingest_hosts < 1:
+            raise ValueError(
+                f"n_ingest_hosts must be >= 1, "
+                f"got {self.config.n_ingest_hosts}")
+        self.ingest = IngestMux(self.config.n_ingest_hosts)
+        self._pending: list[ArrivalBatch] = []   # merged, awaiting batch
         self._queued = 0
         self.swaps = 0
         self.served = 0
@@ -166,35 +180,91 @@ class ServePipeline:
 
     # -- serving -----------------------------------------------------------
     def submit(self, batch: ArrivalBatch) -> list[ServeResult]:
-        """Ingest arrivals; serve every full micro-batch. Returns the
-        results that became ready (possibly empty — call `flush` to
-        drain a partial tail batch)."""
-        self._queue.append(batch)
-        self._queued += len(batch)
-        if self._queued < self.config.batch_size:
-            return []
-        merged = _concat_batches(self._queue)       # one copy, then slice
-        bs = self.config.batch_size
-        out = []
-        start = 0
-        while self._queued - start >= bs:
-            out.append(self._serve_padded(ArrivalBatch(
-                *(getattr(merged, f)[start:start + bs]
-                  for f in ArrivalBatch.__dataclass_fields__))))
-            start += bs
-        tail = ArrivalBatch(*(getattr(merged, f)[start:]
-                              for f in ArrivalBatch.__dataclass_fields__))
-        self._queue = [tail]
-        self._queued = len(tail)
-        return out
+        """Ingest arrivals through the single queue; serve every full
+        micro-batch. Returns the results that became ready (possibly
+        empty — call `flush` to drain a partial tail batch). This is
+        the 1-host special case of `submit_to` — pipelines configured
+        with ``n_ingest_hosts > 1`` must say which host queue an
+        arrival belongs to."""
+        if self.config.n_ingest_hosts != 1:
+            raise ValueError(
+                "submit() is the single-queue (1-host) path; with "
+                f"n_ingest_hosts={self.config.n_ingest_hosts} use "
+                "submit_to(host, batch, t=...)")
+        return self.submit_to(0, batch)
+
+    def submit_to(self, host: int, batch: ArrivalBatch,
+                  t=None) -> list[ServeResult]:
+        """Push a stamped arrival chunk into `host`'s ingest queue and
+        serve whatever the fleet watermark releases. `t`: per-arrival
+        strictly increasing stamps ((B,) array; None = the host-local
+        unit clock). Micro-batches form over the *merged* stream, so
+        with several hosts a batch is only served once every host's
+        clock has passed it — push (or `flush`) regularly from all
+        hosts to keep the watermark moving."""
+        self.ingest.submit_to(host, batch, t)
+        return self._drain_events(self.ingest.poll())
+
+    def depart_to(self, host: int, servers, cores, p95_eff, is_uf,
+                  t=None) -> list[ServeResult]:
+        """Push a stamped departure batch into `host`'s ingest queue.
+        The departure takes effect at its merged-stream position, at
+        micro-batch granularity: it is applied before any micro-batch
+        served after it, so every arrival merged later sees the freed
+        capacity (and, sharded, power tokens) — and so do arrivals
+        merged earlier that are still pending in the current unfilled
+        micro-batch window (batching trades exact stream position for
+        batch efficiency; the order stays deterministic and the watt
+        budget is never exceeded either way). Advancing this host's
+        clock can release queued micro-batches — any results are
+        returned."""
+        self.ingest.depart_to(host, DepartureBatch(
+            np.asarray(servers, np.int32),
+            np.asarray(cores, np.float32),
+            np.asarray(p95_eff, np.float32),
+            np.asarray(is_uf, bool)), t)
+        return self._drain_events(self.ingest.poll())
 
     def flush(self) -> ServeResult | None:
-        """Serve whatever is queued (padded up to the batch size)."""
-        if not self._queued:
+        """Serve everything still queued, watermark ignored (padded up
+        to the batch size; chunked if the drain releases more than one
+        micro-batch). Returns one concatenated result, or None."""
+        out = self._drain_events(self.ingest.drain())
+        if self._queued:
+            merged = _concat_batches(self._pending)
+            self._pending, self._queued = [], 0
+            out.append(self._serve_padded(merged))
+        if not out:
             return None
-        merged = _concat_batches(self._queue)
-        self._queue, self._queued = [], 0
-        return self._serve_padded(merged)
+        return out[0] if len(out) == 1 else _concat_results(out)
+
+    def _drain_events(self, events: MergedEvents) -> list[ServeResult]:
+        """Apply one released merged-event window in stream order:
+        arrival runs accumulate toward (and serve) full micro-batches,
+        departure runs apply at their merged position (before any
+        micro-batch served after them — see `depart_to` for the
+        batch-granularity caveat)."""
+        bs = self.config.batch_size
+        out: list[ServeResult] = []
+        for kind, lo, hi in events.runs():
+            if kind != ARRIVAL:
+                d = slice_soa(events.departures, lo, hi)
+                self._apply_departures(d.server, d.cores, d.p95_eff,
+                                       d.is_uf)
+                continue
+            self._pending.append(slice_soa(events.arrivals, lo, hi))
+            self._queued += hi - lo
+            if self._queued < bs:
+                continue
+            merged = _concat_batches(self._pending)  # one copy, slice
+            start = 0
+            while self._queued - start >= bs:
+                out.append(self._serve_padded(
+                    slice_soa(merged, start, start + bs)))
+                start += bs
+            self._pending = [slice_soa(merged, start, len(merged))]
+            self._queued = self._queued - start
+        return out
 
     def serve(self, batch: ArrivalBatch) -> ServeResult:
         """Serve one batch synchronously, bypassing the queue (chunks
@@ -241,7 +311,23 @@ class ServePipeline:
         return servers
 
     def depart(self, servers, cores, p95_eff, is_uf) -> None:
-        """Release departed VMs' aggregates (batched, order-free)."""
+        """Release departed VMs' aggregates immediately (batched,
+        order-free) — the 1-host special case. `depart_to` is the
+        stream-ordered per-host path, and like `submit` this refuses
+        multi-host pipelines: applying a departure out of merged-
+        stream order would silently break the deterministic order the
+        merge promises."""
+        if self.config.n_ingest_hosts != 1:
+            raise ValueError(
+                "depart() is the single-queue (1-host) path; with "
+                f"n_ingest_hosts={self.config.n_ingest_hosts} use "
+                "depart_to(host, ..., t=...)")
+        self._apply_departures(servers, cores, p95_eff, is_uf)
+
+    def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
+        """Apply a departure batch to the cluster state (the merged-
+        stream consumer; `ShardedServePipeline` overrides with the
+        per-shard route + in-scan pool credit)."""
         self.state = placement.remove_batch(
             self.state, jnp.asarray(servers), jnp.asarray(cores),
             jnp.asarray(p95_eff), jnp.asarray(is_uf))
@@ -341,9 +427,11 @@ class ShardedServePipeline(ServePipeline):
                            for k in self.spill_info}
         return servers.astype(np.int32)
 
-    def depart(self, servers, cores, p95_eff, is_uf) -> None:
-        """Route each departure to its owner shard and credit the freed
-        power tokens back to that shard's pool."""
+    def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
+        """Route each departure to its owner shard (per-shard
+        batches, `sharding.split_departures`) and credit the freed
+        power tokens back to that shard's pool in the consuming scan
+        (`sharding.consume_departures`)."""
         self.sharded = sharding.remove_sharded(
             self.sharded, servers, cores, p95_eff, is_uf)
 

@@ -356,25 +356,75 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     return (sharded._replace(shards=shards, pool=pool), result, info)
 
 
+def split_departures(sharded: ShardedState, servers, cores, p95_eff,
+                     is_uf):
+    """Host-side routing of a global departure batch into per-shard
+    local batches — the pre-merge step the ingest subsystem
+    (`serve.ingest`, DESIGN.md §11) hands each shard.
+
+    servers: (B,) global ids (negative codes dropped). Returns
+    ``(local_srv, cores, p95_eff, is_uf)`` stacked (N, B) arrays,
+    padded with ``local_srv = -1`` rows; each shard's rows keep the
+    input (merged-stream) order. Shapes stay (N, B) so the consuming
+    jit never re-specializes on per-shard counts."""
+    servers = np.asarray(servers)
+    b = len(servers)
+    n = sharded.n_shards
+    live = servers >= 0
+    safe = np.where(live, servers, 0).astype(np.int64)
+    owner = np.where(live, np.asarray(sharded.shard_of_server)[safe], -1)
+    local = np.asarray(sharded.local_of_server)[safe]
+    srv_out = np.full((n, b), -1, np.int32)
+    cores_out = np.zeros((n, b), np.float64)
+    p95_out = np.zeros((n, b), np.float64)
+    uf_out = np.zeros((n, b), bool)
+    cores = np.asarray(cores, np.float64)
+    p95_eff = np.asarray(p95_eff, np.float64)
+    is_uf = np.asarray(is_uf, bool)
+    for s in range(n):
+        mine = owner == s
+        k = int(mine.sum())
+        srv_out[s, :k] = local[mine]
+        cores_out[s, :k] = cores[mine]
+        p95_out[s, :k] = p95_eff[mine]
+        uf_out[s, :k] = is_uf[mine]
+    return srv_out, cores_out, p95_out, uf_out
+
+
+@jax.jit
+def _consume_departures(shards, pool, srv, cores, p95_eff, is_uf):
+    def per_shard(st, pl, s, c, p, u):
+        dtype = st.free_cores.dtype
+        live = (s >= 0).astype(dtype)
+        credit = (p.astype(dtype) * c.astype(dtype) * live).sum()
+        return remove_batch(st, s, c, p, u), pl + credit
+    return jax.vmap(per_shard)(shards, pool, srv, cores, p95_eff, is_uf)
+
+
+def consume_departures(sharded: ShardedState, local_srv, cores,
+                       p95_eff, is_uf) -> ShardedState:
+    """Consume per-shard departure batches (the `split_departures` /
+    ingest-merge format): one vmapped kernel per shard applies
+    `remove_batch` to its own rows and credits the freed ``p95*cores``
+    power tokens back to its own pool *in the same scan* — no shard
+    ever sees another shard's departures, and no (N, B) broadcast of
+    the full global batch is materialized on device."""
+    dtype = sharded.shards.free_cores.dtype
+    shards, pool = _consume_departures(
+        sharded.shards, sharded.pool, jnp.asarray(local_srv, jnp.int32),
+        jnp.asarray(cores, dtype), jnp.asarray(p95_eff, dtype),
+        jnp.asarray(is_uf))
+    return sharded._replace(shards=shards, pool=pool)
+
+
 def remove_sharded(sharded: ShardedState, servers, cores, p95_eff,
                    is_uf) -> ShardedState:
     """Sharded twin of `serve.placement.remove_batch`: route each
     departure to its owner shard (negative server codes are ignored)
     and credit the freed `p95*cores` tokens back to that shard's
-    pool."""
-    servers = jnp.asarray(servers, jnp.int32)
-    live = servers >= 0
-    safe = jnp.where(live, servers, 0)
-    owner = jnp.where(live, sharded.shard_of_server[safe], -1)
-    local = sharded.local_of_server[safe]
-    n = sharded.n_shards
-    mine = owner[None, :] == jnp.arange(n, dtype=jnp.int32)[:, None]
-    srv_nb = jnp.where(mine, local[None, :], -1)            # (N, B)
-    tile = lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
-                                      (n,) + np.shape(x))
-    shards = jax.vmap(remove_batch)(sharded.shards, srv_nb, tile(cores),
-                                    tile(p95_eff), tile(is_uf))
-    dtype = sharded.pool.dtype
-    w = (jnp.asarray(p95_eff, dtype) * jnp.asarray(cores, dtype))[None]
-    credit = (w * mine.astype(dtype)).sum(-1)
-    return sharded._replace(shards=shards, pool=sharded.pool + credit)
+    pool. Composition of `split_departures` + `consume_departures` —
+    the per-shard batches the cross-host ingest merge produces
+    directly skip the split."""
+    return consume_departures(
+        sharded, *split_departures(sharded, servers, cores, p95_eff,
+                                   is_uf))

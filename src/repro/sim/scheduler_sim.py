@@ -188,6 +188,7 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              backend: str = "event",
              admission_budget_w: float | None = None,
              serve_shards: int = 1,
+             n_ingest_hosts: int = 1,
              cluster_budget_w: float | None = None,
              trace: list | None = None) -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
@@ -213,14 +214,33 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                 placement while never exceeding `cluster_budget_w`
                 (the global watt budget the per-shard token pools
                 enforce — tracked net of departures across the run).
+                Arrivals reach the protocol through the cross-host
+                ingest merge (`repro.serve.ingest`, docs/ingest.md):
+                the group is dealt round-robin over `n_ingest_hosts`
+                per-host queues with strictly increasing stamps and
+                timestamp-merged back, so the merged order — and
+                every placement decision — is identical for any host
+                count (1 host == today's single-queue path, asserted
+                in tests).
     `trace`, if given, collects the chosen server (or failure code)
     per placement attempt — the decision-equivalence probe."""
     if backend not in ("event", "serve", "serve-sharded"):
         raise ValueError(f"unknown backend {backend!r}")
+    if n_ingest_hosts < 1:
+        raise ValueError(f"n_ingest_hosts must be >= 1, "
+                         f"got {n_ingest_hosts}")
+    if n_ingest_hosts != 1 and backend != "serve-sharded":
+        # only the sharded backend routes groups through the ingest
+        # merge; silently ignoring the knob would make an invariance
+        # assertion on another backend a vacuous pass
+        raise ValueError(
+            f"n_ingest_hosts={n_ingest_hosts} requires "
+            f"backend='serve-sharded', got {backend!r}")
     if backend in ("serve", "serve-sharded"):
         import jax
         import jax.numpy as jnp
         from repro.serve.admission import rho_cap_from_budget
+        from repro.serve.ingest import kway_merge
         from repro.serve.placement import device_state, place_batch
         from repro.serve.sharding import (place_group_sharded,
                                           rho_pool_from_budget,
@@ -278,10 +298,27 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             n = len(group)
             assert n <= SERVE_GROUP_PAD, \
                 "deployment group exceeds SERVE_GROUP_PAD"
+            if backend == "serve-sharded":
+                # cross-host ingest: deal the group round-robin over
+                # per-host queues with strictly increasing stamps and
+                # timestamp-merge it back (the serve.ingest merge).
+                # Unique stamps make the merged order the arrival
+                # order for ANY host count — 1 host is exactly the
+                # single-queue path, asserted in tests.
+                host_of = np.arange(n) % n_ingest_hosts
+                stamps = t + np.arange(1, n + 1) * 1e-7
+                rows = [np.flatnonzero(host_of == h)
+                        for h in range(n_ingest_hosts)]
+                mh, mi = kway_merge([stamps[r] for r in rows])
+                order = np.array([rows[h][i]
+                                  for h, i in zip(mh, mi)], np.int64)
+            else:
+                order = np.arange(n, dtype=np.int64)
             pad = np.zeros(SERVE_GROUP_PAD, np.float64)
             cores_a, uf_a, p95_a = pad.copy(), pad.copy(), pad.copy()
-            for i, (cores, _, ufp, p95e) in enumerate(group):
-                cores_a[i], uf_a[i], p95_a[i] = cores, ufp, p95e
+            for k, j in enumerate(order):
+                cores, _, ufp, p95e = group[j]
+                cores_a[k], uf_a[k], p95_a[k] = cores, ufp, p95e
             valid = np.arange(SERVE_GROUP_PAD) < n
             # trace/run the scan in x64: bit-equivalent to the f64 host
             # rule, so 'serve' reproduces 'event' placements exactly
@@ -308,7 +345,9 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                     _, srvs, _ = place_group_sharded(
                         sharded, cores_a, uf_a.astype(bool), p95_a,
                         valid, policy, state.cores_per_server)
-                    chosen = [int(s) for s in srvs[:n]]
+                    chosen = [None] * n        # un-permute the merge
+                    for k, j in enumerate(order):
+                        chosen[j] = int(srvs[k])
         else:
             chosen = None
         for i, (cores, life_h, uf_pred, p95_eff) in enumerate(group):

@@ -277,6 +277,77 @@ def stream_arrivals(pop: Population, batch_size: int,
         yield t, arrival_batch(pop, idx)
 
 
+def arrival_stamps(n: int, arrival_rate_per_s: float | None = None,
+                   seed: int = 0) -> np.ndarray:
+    """(n,) strictly increasing per-arrival timestamps: a Poisson
+    process at `arrival_rate_per_s`, or the unit clock (1, 2, ...)
+    when None. Strict monotonicity (required by the per-host ingest
+    queues, `repro.serve.ingest`) is enforced even if float cumsum
+    ties a pair of Poisson gaps."""
+    if n == 0:
+        return np.empty(0, np.float64)
+    if arrival_rate_per_s is None:
+        return np.arange(1, n + 1, dtype=np.float64)
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / arrival_rate_per_s, n)
+    return np.cumsum(np.maximum(gaps, 1e-9))
+
+
+def split_streams(pop: Population, n_hosts: int, batch_size: int,
+                  arrival_rate_per_s: float | None = None,
+                  seed: int = 0) -> list:
+    """Deal a population into per-host stamped arrival streams — the
+    trace format the cross-host ingest subsystem consumes
+    (`repro.serve.ingest`, docs/ingest.md).
+
+    One shared strictly-increasing clock stamps VM *i* with
+    `arrival_stamps(...)[i]`; VM *i* lands on host ``i % n_hosts``;
+    each host's stream is chunked into `batch_size` micro-batches.
+    Returns a list over hosts of ``[(stamps, ArrivalBatch), ...]``
+    chunk lists. Because the stamps are globally unique, the merged
+    order is invariant to which host a VM was dealt to."""
+    stamps = arrival_stamps(len(pop.vms), arrival_rate_per_s, seed)
+    streams = []
+    for h in range(n_hosts):
+        rows = np.arange(h, len(pop.vms), n_hosts)
+        chunks = []
+        for lo in range(0, len(rows), batch_size):
+            idx = rows[lo:lo + batch_size]
+            chunks.append((stamps[idx], arrival_batch(pop, idx)))
+        streams.append(chunks)
+    return streams
+
+
+def merge_streams(streams: list) -> tuple:
+    """Reference merge oracle for per-host stamped streams (the
+    `split_streams` format): returns ``(stamps, host_of, batch)`` in
+    global ``(t, host, seq)`` order. Implemented as one lexsort of the
+    concatenated keys — the streaming k-way merge the serve ingest
+    runs (`repro.serve.ingest.kway_merge`) must agree with it exactly
+    (asserted in tests), while never materializing this global
+    sort."""
+    ts, hosts, seqs, parts = [], [], [], []
+    for h, chunks in enumerate(streams):
+        seq = 0
+        for stamps, batch in chunks:
+            ts.append(np.asarray(stamps, np.float64))
+            hosts.append(np.full(len(batch), h, np.int32))
+            seqs.append(seq + np.arange(len(batch)))
+            parts.append(batch)
+            seq += len(batch)
+    if not ts:
+        return (np.empty(0, np.float64), np.empty(0, np.int32),
+                arrival_batch(Population()))
+    t = np.concatenate(ts)
+    host = np.concatenate(hosts)
+    seq = np.concatenate(seqs)
+    order = np.lexsort((seq, host, t))
+    merged = ArrivalBatch(
+        *(np.concatenate([getattr(p, f) for p in parts])[order]
+          for f in ArrivalBatch.__dataclass_fields__))
+    return t[order], host[order], merged
+
+
 def generate_chassis_telemetry(n_chassis: int, n_days: int,
                                provisioned_w: float, seed: int = 0,
                                slots_per_day: int = 48) -> np.ndarray:

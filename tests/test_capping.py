@@ -2,7 +2,7 @@ import numpy as np
 import pytest
 from hypothesis import given, strategies as st
 
-from repro.core.capping import (ALERT_MARGIN_W, LIFT_AFTER_S,
+from repro.core.capping import (LIFT_AFTER_S,
                                 POLL_INTERVAL_S, ChassisManager,
                                 PerVMController, RaplController,
                                 ServerCapState)

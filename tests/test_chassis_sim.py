@@ -1,4 +1,3 @@
-import numpy as np
 import pytest
 
 from repro.sim.chassis_sim import (paper_chassis_specs,

@@ -4,7 +4,7 @@ from hypothesis import given, strategies as st
 
 from repro.core.placement import (ALPHA_DEFAULT, ClusterState,
                                   SchedulerPolicy, _score_chassis_scalar,
-                                  _score_server_scalar, packing_score)
+                                  _score_server_scalar)
 
 
 def make_state(n_servers=12, per_chassis=4, cores=40):

@@ -1,7 +1,4 @@
 """Paper §V production lessons: prioritized throttling list + VM kill."""
-import numpy as np
-import pytest
-
 from repro.core.power_model import F_MAX, F_MIN, ServerPowerModel
 from repro.core.priority import PrioritizedVM, Tier, TieredController
 

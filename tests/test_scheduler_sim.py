@@ -1,8 +1,7 @@
-import numpy as np
 import pytest
 
 from repro.core.placement import SchedulerPolicy
-from repro.sim.scheduler_sim import PredictionChannel, SimMetrics, simulate
+from repro.sim.scheduler_sim import PredictionChannel, simulate
 
 DAYS = 4.0      # short CI runs; the Fig 7 benchmark uses 30 days
 

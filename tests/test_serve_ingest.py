@@ -1,0 +1,341 @@
+"""Cross-host ingest (`repro.serve.ingest`) — merge determinism,
+watermark gating, and decision equivalence through the serve layers.
+
+The contract under test (docs/ingest.md):
+
+  * the k-way merge is *exactly* the (t, host_id, seq) order an
+    oracle lexsort of the concatenated streams produces — but built
+    from per-host sorted windows, never a global sort;
+  * with globally unique stamps the merged order (and every placement
+    decision downstream) is invariant to how events were dealt across
+    host queues;
+  * `poll` releases only events no host can still get in front of
+    (the fleet watermark); `drain` releases everything;
+  * a 1-host pipeline is decision-identical to the single-queue path
+    it replaced, and `simulate(backend='serve-sharded',
+    n_ingest_hosts=1)` is decision-identical to the pre-ingest
+    backend — for any host count, in fact, because the sim stamps
+    arrivals uniquely.
+"""
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core.placement import SchedulerPolicy
+from repro.core.predictor import train_service
+from repro.serve import (ARRIVAL, DEPARTURE, DepartureBatch, HostQueue,
+                         IngestMux, ServeConfig, ServePipeline,
+                         ShardedServeConfig, ShardedServePipeline,
+                         consume_departures, device_state, kway_merge,
+                         remove_batch, shard_state, split_departures,
+                         unshard_state)
+from repro.sim.telemetry import (arrival_batch, generate_population,
+                                 merge_streams, split_streams)
+from tests.test_serve_sharded import _batch, _loaded_state
+
+
+def _oracle_order(stamps_by_host):
+    t = np.concatenate([np.asarray(s, float) for s in stamps_by_host])
+    host = np.concatenate([np.full(len(s), h, np.int32)
+                           for h, s in enumerate(stamps_by_host)])
+    seq = np.concatenate([np.arange(len(s)) for s in stamps_by_host])
+    order = np.lexsort((seq, host, t))
+    return host[order], seq[order]
+
+
+# --- k-way merge ----------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kway_merge_matches_lexsort_oracle(seed):
+    rng = np.random.default_rng(seed)
+    # integer stamps force plenty of cross-host ties -> (host, seq)
+    # tie-breaking is actually exercised
+    stamps = [np.sort(rng.integers(0, 30, rng.integers(0, 50)))
+              .astype(float) for _ in range(5)]
+    got_h, got_i = kway_merge(stamps)
+    want_h, want_i = _oracle_order(stamps)
+    np.testing.assert_array_equal(got_h, want_h)
+    np.testing.assert_array_equal(got_i, want_i)
+
+
+def test_kway_merge_empty_and_single():
+    h, i = kway_merge([])
+    assert len(h) == 0 and len(i) == 0
+    h, i = kway_merge([np.array([1.0, 2.0]), np.empty(0)])
+    np.testing.assert_array_equal(h, [0, 0])
+    np.testing.assert_array_equal(i, [0, 1])
+
+
+def test_merged_order_invariant_to_host_dealing():
+    """Unique stamps: however arrivals are dealt across hosts, the
+    merged stream is the same."""
+    rng = np.random.default_rng(3)
+    t = np.sort(rng.uniform(0, 100, 64))
+    for n_hosts in (2, 4):
+        for perm_seed in range(3):
+            deal = np.random.default_rng(perm_seed) \
+                .integers(0, n_hosts, len(t))
+            rows = [np.flatnonzero(deal == h) for h in range(n_hosts)]
+            mh, mi = kway_merge([t[r] for r in rows])
+            merged_global = np.array(
+                [rows[h][i] for h, i in zip(mh, mi)])
+            np.testing.assert_array_equal(merged_global,
+                                          np.arange(len(t)))
+
+
+# --- host queues + watermark ----------------------------------------------
+
+def _dep(n):
+    return DepartureBatch(np.arange(n, dtype=np.int32),
+                          np.full(n, 2.0, np.float32),
+                          np.full(n, 0.5, np.float32),
+                          np.ones(n, bool))
+
+
+def test_host_queue_rejects_non_monotonic_stamps():
+    pop = generate_population(8, seed=0)
+    q = HostQueue(0)
+    q.push_arrivals(arrival_batch(pop, np.arange(4)),
+                    t=np.array([1.0, 2.0, 2.0, 3.0]))   # ties ok
+    with pytest.raises(ValueError):                     # not after last
+        q.push_arrivals(arrival_batch(pop, np.arange(4, 8)),
+                        t=np.array([3.0, 4.0, 5.0, 6.0]))
+    with pytest.raises(ValueError):                     # decreasing
+        q.push_arrivals(arrival_batch(pop, np.arange(4, 8)),
+                        t=np.array([9.0, 8.0, 10.0, 11.0]))
+    with pytest.raises(ValueError):                     # wrong length
+        q.push_arrivals(arrival_batch(pop, np.arange(4, 8)),
+                        t=np.array([9.0, 10.0]))
+
+
+def test_watermark_gates_poll_and_close_releases():
+    pop = generate_population(24, seed=1)
+    mux = IngestMux(3)
+    mux.submit_to(0, arrival_batch(pop, np.arange(8)),
+                  t=np.arange(1.0, 9.0))
+    assert len(mux.poll()) == 0          # hosts 1,2 never pushed
+    mux.submit_to(1, arrival_batch(pop, np.arange(8, 16)),
+                  t=np.arange(0.5, 8.5))
+    assert len(mux.poll()) == 0          # host 2 still at -inf
+    mux.submit_to(2, arrival_batch(pop, np.arange(16, 20)),
+                  t=np.array([3.0, 3.5, 4.0, 4.5]))
+    ev = mux.poll()                      # watermark = min(8, 7.5, 4.5)
+    assert len(ev) > 0
+    assert ev.t.max() <= 4.5
+    assert (np.diff(ev.t) >= 0).all()
+    assert mux.n_pending > 0
+    mux.close(2)                         # watermark -> min(8, 7.5)
+    ev2 = mux.poll()
+    assert ev2.t.max() <= 7.5
+    rest = mux.drain()                   # everything, watermark ignored
+    assert mux.n_pending == 0
+    assert len(ev) + len(ev2) + len(rest) == 20
+
+
+def test_heartbeat_unblocks_idle_host():
+    """An idle host stalls the watermark; a heartbeat (explicit, or an
+    empty stamped push) advances its clock without events."""
+    pop = generate_population(8, seed=5)
+    mux = IngestMux(2)
+    mux.submit_to(0, arrival_batch(pop, np.arange(4)),
+                  t=np.arange(1.0, 5.0))
+    assert len(mux.poll()) == 0              # host 1 idle at -inf
+    mux.heartbeat(1, 3.0)
+    ev = mux.poll()
+    assert list(ev.t) == [1.0, 2.0, 3.0]
+    mux.submit_to(1, arrival_batch(pop, np.arange(4, 4)), t=10.0)
+    assert len(mux.poll()) == 1              # empty push == heartbeat
+    with pytest.raises(ValueError):          # clocks only move forward
+        mux.heartbeat(1, 5.0)
+
+
+def test_departures_merge_at_their_stamped_position():
+    pop = generate_population(8, seed=2)
+    mux = IngestMux(2)
+    mux.submit_to(0, arrival_batch(pop, np.arange(4)),
+                  t=np.array([1.0, 2.0, 5.0, 6.0]))
+    mux.depart_to(1, _dep(2), t=np.array([3.0, 4.0]))
+    ev = mux.drain()
+    assert list(ev.kind) == [ARRIVAL, ARRIVAL, DEPARTURE, DEPARTURE,
+                             ARRIVAL, ARRIVAL]
+    runs = list(ev.runs())
+    assert runs == [(ARRIVAL, 0, 2), (DEPARTURE, 0, 2), (ARRIVAL, 2, 4)]
+    np.testing.assert_array_equal(ev.departures.server, [0, 1])
+
+
+def test_merged_column_dtypes_survive_any_host_mix():
+    """Column dtypes are contractual (jitted kernels + integer
+    indexing downstream): they must survive even when the
+    first-contributing host has zero rows of a kind."""
+    pop = generate_population(8, seed=4)
+    mux = IngestMux(2)
+    mux.depart_to(0, _dep(3), t=np.array([1.0, 2.0, 3.0]))   # deps only
+    mux.submit_to(1, arrival_batch(pop, np.arange(4)),
+                  t=np.array([1.5, 2.5, 3.5, 4.5]))
+    ev = mux.drain()
+    assert ev.arrivals.subscription.dtype == np.int32
+    assert ev.arrivals.vm_type_idx.dtype == np.int32
+    assert ev.arrivals.user_facing.dtype == bool
+    assert ev.arrivals.cores.dtype == np.float32
+    assert ev.departures.server.dtype == np.int32
+    assert ev.departures.is_uf.dtype == bool
+    # empty polls keep typed columns too
+    empty = IngestMux(2).poll()
+    assert empty.arrivals.subscription.dtype == np.int32
+    assert empty.departures.server.dtype == np.int32
+
+
+def test_mux_agrees_with_merge_streams_oracle():
+    pop = generate_population(120, seed=3)
+    streams = split_streams(pop, 4, 16, arrival_rate_per_s=50.0, seed=7)
+    mux = IngestMux(4)
+    for h, chunks in enumerate(streams):
+        for stamps, batch in chunks:
+            mux.submit_to(h, batch, t=stamps)
+    ev = mux.drain()
+    t, host, merged = merge_streams(streams)
+    np.testing.assert_array_equal(ev.t, t)
+    np.testing.assert_array_equal(ev.host, host)
+    for f in ("subscription", "cores", "p95_util"):
+        np.testing.assert_array_equal(getattr(ev.arrivals, f),
+                                      getattr(merged, f))
+
+
+# --- pipeline integration -------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    pop = generate_population(400, seed=0)
+    hist, arrivals = F.split_history_arrivals(pop)
+    labels = hist.labels.astype(np.float64)
+    aggs = F.subscription_aggregates(hist, labels)
+    svc = train_service(F.build_features(hist, aggs),
+                        labels.astype(np.int64),
+                        F.p95_bucket([v.p95_util for v in hist.vms]),
+                        n_trees=8)
+    return {"svc": svc, "hist": hist, "labels": labels,
+            "arrivals": arrivals}
+
+
+_KW = dict(n_servers=48, cores_per_server=40, blades_per_chassis=12)
+
+
+def _pipe(world, **cfg):
+    return ServePipeline.from_history(
+        world["svc"], world["hist"], world["labels"],
+        config=ServeConfig(batch_size=16, **cfg), **_KW)
+
+
+def test_one_host_submit_is_single_queue_special_case(world):
+    a, b = _pipe(world), _pipe(world)
+    batch = arrival_batch(world["arrivals"], np.arange(40))
+    ra = a.submit(batch) + [a.flush()]
+    rb = b.submit_to(0, batch) + [b.flush()]
+    assert len(ra) == len(rb)
+    for x, y in zip(ra, rb):
+        np.testing.assert_array_equal(x.server, y.server)
+    # multi-host pipelines must refuse the ambiguous single-queue API
+    multi = _pipe(world, n_ingest_hosts=2)
+    with pytest.raises(ValueError):
+        multi.submit(batch)
+    with pytest.raises(ValueError):          # same for immediate depart
+        multi.depart(np.array([0]), np.array([2.0]), np.array([0.5]),
+                     np.array([True]))
+
+
+def test_multi_host_decisions_match_merged_single_host(world):
+    """Feed N per-host streams; decisions must equal a 1-host pipeline
+    fed the timestamp-merged stream — and be invariant to permuting
+    which queue got which stream."""
+    pop = F.Population(vms=world["arrivals"].vms[:96])
+    streams = split_streams(pop, 4, 8, arrival_rate_per_s=20.0, seed=5)
+    _, _, merged = merge_streams(streams)
+    single = _pipe(world)
+    want = [r.server for r in single.submit(merged)]
+    tail = single.flush()
+    if tail is not None:
+        want.append(tail.server)
+    want = np.concatenate(want)
+    for host_perm in (np.arange(4), np.array([2, 0, 3, 1])):
+        multi = _pipe(world, n_ingest_hosts=4)
+        results = []
+        chunk_iters = [list(streams[h]) for h in range(4)]
+        for j in range(max(map(len, chunk_iters))):
+            for h in range(4):
+                if j < len(chunk_iters[h]):
+                    stamps, batch = chunk_iters[h][j]
+                    results += multi.submit_to(int(host_perm[h]),
+                                               batch, t=stamps)
+        tail = multi.flush()
+        if tail is not None:
+            results.append(tail)
+        got = np.concatenate([r.server for r in results])
+        np.testing.assert_array_equal(got, want)
+
+
+def test_sharded_departure_stream_credits_pool(world):
+    pipe = ShardedServePipeline.from_history(
+        world["svc"], world["hist"], world["labels"],
+        config=ShardedServeConfig(batch_size=16, n_shards=4),
+        cluster_budget_w=48 * 112.0 + 800.0, **_KW)
+    res = pipe.submit_to(0, arrival_batch(world["arrivals"],
+                                          np.arange(32)),
+                         t=np.arange(1.0, 33.0))
+    srv = np.concatenate([r.server for r in res])
+    adm = srv[srv >= 0][:4]
+    assert len(adm) == 4
+    cores = np.full(4, 2.0)
+    p95 = np.full(4, 0.5)
+    pool0 = pipe.pool_left().sum()
+    out = pipe.depart_to(0, adm, cores, p95, np.ones(4, bool), t=40.0)
+    assert out == []                     # no arrivals released
+    np.testing.assert_allclose(pipe.pool_left().sum() - pool0,
+                               (cores * p95).sum(), rtol=1e-5)
+
+
+# --- sharded departure batches (in-scan credit) ---------------------------
+
+def test_split_consume_departures_match_unsharded_remove():
+    st = _loaded_state(4)
+    cores, uf, p95, _ = _batch(8, 24)
+    servers = np.random.default_rng(0).integers(-2, 48, 24)
+    sharded = shard_state(device_state(st), 4, pool_total=100.0)
+    parts = split_departures(sharded, servers, cores, p95, uf)
+    # every live departure lands on exactly one shard
+    assert (parts[0] >= 0).sum() == (servers >= 0).sum()
+    out = consume_departures(sharded, *parts)
+    want = remove_batch(device_state(st), servers, cores, p95, uf)
+    back = unshard_state(out)
+    np.testing.assert_allclose(np.asarray(back.free_cores),
+                               np.asarray(want.free_cores), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(back.rho_peak),
+                               np.asarray(want.rho_peak), atol=1e-4)
+    live = servers >= 0
+    credit = (p95[live] * cores[live]).sum()
+    np.testing.assert_allclose(np.asarray(out.pool).sum(),
+                               100.0 + credit, rtol=1e-5)
+
+
+# --- scheduler-sim backend ------------------------------------------------
+
+def test_sim_ingest_one_host_identical_and_host_count_invariant():
+    """backend='serve-sharded' with n_ingest_hosts=1 reproduces the
+    pre-ingest path trace-for-trace; the sim's unique stamps make any
+    host count identical too."""
+    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    traces = []
+    for kw in ({}, {"n_ingest_hosts": 1}, {"n_ingest_hosts": 4}):
+        tr = []
+        m = simulate(SchedulerPolicy(alpha=0.8),
+                     PredictionChannel("ml"), days=0.3, seed=0,
+                     backend="serve-sharded", serve_shards=2,
+                     trace=tr, **kw)
+        traces.append((tr, m.failure_rate))
+    assert traces[0] == traces[1] == traces[2]
+    with pytest.raises(ValueError):
+        simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+                 days=0.1, seed=0, backend="serve-sharded",
+                 n_ingest_hosts=0)
+    with pytest.raises(ValueError):      # knob is serve-sharded-only;
+        simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+                 days=0.1, seed=0, backend="serve", n_ingest_hosts=4)

@@ -183,8 +183,7 @@ def test_budget_invariant_across_groups_and_departures():
     """The sim's serve-sharded backend recomputes the pool net of
     live commitments each group; across a multi-group run with
     departures the fleet never exceeds the cluster budget."""
-    from repro.sim.scheduler_sim import (BLADES_PER_CHASSIS,
-                                         PredictionChannel, simulate)
+    from repro.sim.scheduler_sim import PredictionChannel, simulate
     from repro.core.power_model import F_MAX, ServerPowerModel, \
         idle_power
     n_servers = 720

@@ -6,7 +6,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
 
 from repro.checkpoint import Checkpointer
 from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
@@ -16,8 +15,7 @@ from repro.optim.grad_compress import (compress_decompress,
                                        make_error_feedback)
 from repro.runtime.fault_tolerance import (FaultToleranceConfig,
                                            FaultTolerantLoop)
-from repro.runtime.power_control import (ChassisPowerSim, JobSpec,
-                                         ThrottledLoop)
+from repro.runtime.power_control import ChassisPowerSim, JobSpec
 
 
 # --- loss ------------------------------------------------------------------

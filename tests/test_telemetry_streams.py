@@ -1,0 +1,90 @@
+"""`repro.sim.telemetry` arrival-stream generators — edge cases and
+per-host split/merge properties (the trace format the cross-host
+ingest subsystem consumes, docs/ingest.md)."""
+import numpy as np
+import pytest
+
+from repro.sim.telemetry import (Population, arrival_stamps,
+                                 generate_population, merge_streams,
+                                 split_streams, stream_arrivals)
+
+
+# --- stream_arrivals edge cases -------------------------------------------
+
+def test_stream_arrivals_empty_population_yields_nothing():
+    assert list(stream_arrivals(Population(), batch_size=8)) == []
+
+
+def test_stream_arrivals_batch_larger_than_population():
+    pop = generate_population(5, seed=0)
+    out = list(stream_arrivals(pop, batch_size=64))
+    assert len(out) == 1
+    t, batch = out[0]
+    assert len(batch) == 5
+    assert t > 0.0
+
+
+def test_stream_arrivals_final_ragged_batch():
+    pop = generate_population(10, seed=1)
+    out = list(stream_arrivals(pop, batch_size=4))
+    assert [len(b) for _, b in out] == [4, 4, 2]
+    times = [t for t, _ in out]
+    assert all(b > a for a, b in zip(times, times[1:]))
+    # the streamed rows cover the population exactly, in order
+    subs = np.concatenate([b.subscription for _, b in out])
+    np.testing.assert_array_equal(
+        subs, [v.subscription for v in pop.vms])
+
+
+def test_stream_arrivals_poisson_times_increase():
+    pop = generate_population(12, seed=2)
+    out = list(stream_arrivals(pop, batch_size=4,
+                               arrival_rate_per_s=10.0, seed=3))
+    times = [t for t, _ in out]
+    assert all(b > a for a, b in zip(times, times[1:]))
+
+
+# --- arrival stamps -------------------------------------------------------
+
+def test_arrival_stamps_strictly_increasing_and_empty():
+    assert len(arrival_stamps(0)) == 0
+    s = arrival_stamps(32)
+    np.testing.assert_array_equal(s, np.arange(1, 33))
+    p = arrival_stamps(500, arrival_rate_per_s=1000.0, seed=0)
+    assert (np.diff(p) > 0).all()
+
+
+# --- split/merge ----------------------------------------------------------
+
+@pytest.mark.parametrize("n_hosts,batch_size", [(1, 8), (3, 4), (4, 64)])
+def test_split_streams_partitions_population(n_hosts, batch_size):
+    pop = generate_population(30, seed=4)
+    streams = split_streams(pop, n_hosts, batch_size)
+    assert len(streams) == n_hosts
+    sizes = [sum(len(b) for _, b in chunks) for chunks in streams]
+    assert sum(sizes) == 30
+    for chunks in streams:
+        for stamps, batch in chunks:
+            assert len(stamps) == len(batch) <= batch_size
+            assert (np.diff(stamps) > 0).all()
+
+
+def test_merge_streams_recovers_global_order():
+    """The shared clock stamps VM i before VM i+1, so however many
+    hosts the population is dealt across, the merged stream is the
+    original VM order."""
+    pop = generate_population(40, seed=5)
+    for n_hosts in (1, 2, 5):
+        t, host, merged = merge_streams(
+            split_streams(pop, n_hosts, 7, arrival_rate_per_s=100.0,
+                          seed=6))
+        assert (np.diff(t) > 0).all()
+        np.testing.assert_array_equal(
+            merged.subscription, [v.subscription for v in pop.vms])
+        np.testing.assert_array_equal(
+            host, np.arange(40) % n_hosts)
+
+
+def test_merge_streams_empty():
+    t, host, merged = merge_streams([[], []])
+    assert len(t) == len(host) == len(merged) == 0

@@ -1,6 +1,5 @@
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, strategies as st
 from hypothesis.extra import numpy as hnp
 
