@@ -41,6 +41,8 @@ DRIVERS = (
      "BENCH_serve_sharded.json"),
     ("serve_ingest", "benchmarks.serve_ingest",
      "BENCH_serve_ingest.json"),
+    ("serve_emergency", "benchmarks.serve_emergency",
+     "BENCH_serve_emergency.json"),
     ("roofline", "benchmarks.roofline_report", None),
 )
 

@@ -37,8 +37,7 @@ from benchmarks.common import emit, regress_gate, subproc_env
 from repro.core import features as F
 from repro.core.placement import SchedulerPolicy
 from repro.core.predictor import train_service
-from repro.serve import IngestMux, ShardedServeConfig, \
-    ShardedServePipeline
+from repro.serve import (IngestMux, ShardedServeConfig, ShardedServePipeline)
 from repro.sim.telemetry import generate_population, split_streams
 
 OUT_PATH = "BENCH_serve_ingest.json"

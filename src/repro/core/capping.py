@@ -31,18 +31,84 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from repro.core.fleet_dynamics import (ALERT_FRACTION, ALERT_MARGIN_W,
-                                       LIFT_AFTER_S, N_RAISE,
+                                       FREQ_TABLE, LIFT_AFTER_S, N_RAISE,
                                        POLL_INTERVAL_S, PSU_TRIP_MARGIN_W,
                                        RAISE_HEADROOM_W, RAPL_STEP_FRAC,
                                        ControlParams, FleetState,
                                        RunParams, inband_step, rapl_step)
 from repro.core.power_model import (F_MAX, N_PSTATES, ServerPowerModel,
-                                    pstate_frequencies)
+                                    dyn_scale, pstate_frequencies)
 
 __all__ = ["POLL_INTERVAL_S", "ALERT_MARGIN_W", "LIFT_AFTER_S", "N_RAISE",
            "RAPL_STEP_FRAC", "RAISE_HEADROOM_W", "PSU_TRIP_MARGIN_W",
            "ServerCapState", "PerVMController", "RaplController",
-           "ChassisManager"]
+           "ChassisManager", "reducible_fracs", "apportion_watts"]
+
+
+def reducible_fracs() -> np.ndarray:
+    """(P,) fraction of a class's full-frequency *dynamic* power shaved
+    by capping its cores uniformly to p-state p: ``1 - g(FREQ_TABLE[p])``,
+    ascending from 0 (p-state 0 = f_max) to ``1 - g(f_min)`` (~0.707
+    under the calibrated model). The lookup table every watt-cut
+    apportionment below inverts."""
+    return 1.0 - dyn_scale(FREQ_TABLE)
+
+
+def apportion_watts(cut_w, dyn_w, floors, xp=np, blind: bool = False):
+    """Apportion a required watt cut across criticality levels,
+    lowest-criticality-first (paper §III-D: non-user-facing cores are
+    capped before user-facing ones).
+
+    cut_w:  (...,) required reduction of dynamic draw, watts.
+    dyn_w:  (..., L) full-frequency dynamic draw per criticality level,
+            in apportionment priority order (level 0 is cut first).
+    floors: (L,) int — deepest p-state each level may be capped to by
+            the criticality-aware stage (the per-level frequency floor).
+    blind:  apportion the cut proportionally to each level's draw
+            instead (the criticality-blind baseline the benchmarks
+            compare against).
+
+    Returns ``(pstate, take_w, leftover_w)``: the per-level uniform
+    p-state ((..., L) int32, smallest index whose reducible fraction
+    covers the level's share), the watt share assigned to each level,
+    and the cut that no level could absorb within its floor —
+    ``leftover_w > 0`` is the RAPL-backstop trigger.
+
+    Branchless and xp-generic (identical under numpy and jnp), so the
+    serve emergency plane vmaps/shard_maps it while the numpy call is
+    its own oracle. Two edge cases are handled explicitly:
+
+      * **zero-util levels** — a level with no dynamic draw takes no
+        share and stays at p-state 0 instead of dividing the cut by
+        its zero draw (NaN-free for idle/empty classes);
+      * **all-critical chassis** — when the low-criticality levels
+        cannot absorb the cut, the cascade caps the *critical* levels
+        down to their own floor before any leftover falls through to
+        the RAPL backstop (critical VMs are throttled politely first,
+        not handed straight to the blunt all-core throttle).
+    """
+    dyn_w = xp.asarray(dyn_w)
+    dtype = dyn_w.dtype
+    fracs = xp.asarray(reducible_fracs(), dtype)
+    floors = np.asarray(floors, np.int32)
+    cut = xp.maximum(xp.asarray(cut_w, dtype), 0)
+    red_max = dyn_w * fracs[floors]                     # (..., L)
+    if blind:
+        total = xp.sum(dyn_w, axis=-1, keepdims=True)
+        share = xp.where(total > 0,
+                         dyn_w / xp.where(total > 0, total, 1), 0)
+        take = xp.minimum(cut[..., None] * share, red_max)
+    else:
+        cum = xp.cumsum(red_max, axis=-1) - red_max     # exclusive
+        take = xp.clip(cut[..., None] - cum, 0, red_max)
+    leftover = xp.maximum(cut - xp.sum(take, axis=-1), 0)
+    # invert the reduction table per level: smallest p-state whose
+    # reducible fraction covers the level's share (zero-draw guard)
+    ratio = xp.where(dyn_w > 0, take / xp.where(dyn_w > 0, dyn_w, 1), 0)
+    pstate = xp.sum((fracs < ratio[..., None]).astype(np.int32),
+                    axis=-1)
+    pstate = xp.minimum(pstate, xp.asarray(floors))
+    return pstate, take, leftover
 
 
 @dataclass
@@ -112,6 +178,24 @@ class PerVMController:
         st._unpack(fs)
         return float(p[0])
 
+    def apportion(self, cut_w, dyn_w, floors=None, blind: bool = False):
+        """Apportion a required watt cut across criticality classes —
+        the model-predictive twin of the feedback loop in `step`, used
+        when the controller *knows* each class's committed dynamic draw
+        (the serve plane's emergency path, `repro.serve.emergency`,
+        knows it exactly from the placement aggregates).
+
+        `dyn_w`: (..., L) full-frequency dynamic watts per class in
+        priority order (non-user-facing first); `floors`: per-class
+        p-state floors (defaults to this controller's `min_pstate` for
+        every class). Delegates to `apportion_watts` — including its
+        zero-util-class guard and the critical-before-RAPL cascade —
+        and returns the same ``(pstate, take_w, leftover_w)``."""
+        dyn_w = np.asarray(dyn_w)
+        if floors is None:
+            floors = np.full(dyn_w.shape[-1], self.min_pstate, np.int32)
+        return apportion_watts(cut_w, dyn_w, floors, np, blind=blind)
+
 
 class RaplController:
     """Out-of-band full-server capping (existing mechanism, and the
@@ -132,18 +216,46 @@ class RaplController:
         st._unpack(fs)
         return float(p[0])
 
+    @staticmethod
+    def backstop_pstate() -> int:
+        """P-state RAPL converges to when it must shed maximum power:
+        every core at f_min, criticality-blind (paper §II-B). The serve
+        emergency plane forces all classes here when the apportionment
+        reports a leftover no floor could absorb."""
+        return N_PSTATES - 1
+
 
 @dataclass(frozen=True)
 class ChassisManager:
     """Polls PSUs and raises alerts (paper Fig. 2 step 4). The alert
     threshold sits just below the chassis budget so the in-band
-    controller can act before the PSU->BMC hardware path must."""
+    controller can act before the PSU->BMC hardware path must.
+
+    Batched-friendly: `poll` accepts scalar or array draws (the serve
+    emergency plane polls every chassis of a shard at once), and the
+    `alert_w`/`target_w` properties expose the thresholds the batched
+    kernels need as plain floats."""
     chassis_budget_w: float
     alert_fraction: float = ALERT_FRACTION
+    target_margin_w: float = ALERT_MARGIN_W
 
     @property
     def alert_threshold_w(self) -> float:
         return self.chassis_budget_w * self.alert_fraction
 
-    def poll(self, chassis_power_w: float) -> bool:
+    @property
+    def alert_w(self) -> float:
+        """Alias of `alert_threshold_w` (the batched kernels' name)."""
+        return self.alert_threshold_w
+
+    @property
+    def target_w(self) -> float:
+        """Power level capping steers to once alerted: the budget minus
+        the controller margin (the paper's 225 W target for a 230 W
+        cap)."""
+        return self.chassis_budget_w - self.target_margin_w
+
+    def poll(self, chassis_power_w):
+        """Alert mask: draw at/above the alert threshold. Scalar in,
+        bool out; array in, bool-array out (one poll per chassis)."""
         return chassis_power_w >= self.alert_threshold_w

@@ -18,8 +18,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.forest import ObliviousForest, evaluate, \
-    train_gradient_boosting, train_random_forest
+from repro.core.forest import (
+    ObliviousForest, evaluate, train_gradient_boosting, train_random_forest)
 
 CONFIDENCE_GATE = 0.6
 UF, NUF = 1, 0          # workload-type encoding (bucket 2 in Table III = UF)

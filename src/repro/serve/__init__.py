@@ -5,18 +5,30 @@ decision: micro-batched featurization, batched two-stage forest
 inference with confidence gating, vectorized Algorithm-1 scoring, and
 power-headroom admission — one compiled flow per micro-batch, with
 double-buffered model hot-swap for the paper's daily retrain."""
-from repro.serve.admission import headroom_w, projected_chassis_power, \
-    rho_cap_from_budget
-from repro.serve.featurizer import SubscriptionTable, empty_table, \
-    featurize, featurize_batch, ingest_population, shard_table, \
-    table_from_history, update_table
-from repro.serve.inference import PackedService, ServiceMeta, \
-    bucket_to_p95_jnp, pack_service, resolve_kernel, served_query
-from repro.serve.ingest import ARRIVAL, DEPARTURE, DepartureBatch, \
-    HostQueue, IngestMux, MergedEvents, empty_arrivals, \
-    empty_departures, kway_merge, slice_soa
-from repro.serve.pipeline import ServeConfig, ServePipeline, \
-    ServeResult, ShardedServeConfig, ShardedServePipeline
+from repro.serve.admission import (
+    headroom_w, projected_chassis_power, rho_cap_from_budget)
+from repro.serve.emergency import (CRIT_NUF, CRIT_UF, N_LEVELS,
+                                   EmergencyConfig, EmergencyOutputs,
+                                   EmergencyState, chassis_rho_levels,
+                                   emergency_step, init_emergency,
+                                   masked_step, mitigation_due,
+                                   reset_dwell, sampled_power,
+                                   scatter_samples, throttled_by_level,
+                                   util_from_power)
+from repro.serve.featurizer import (
+    SubscriptionTable, empty_table, featurize, featurize_batch,
+    ingest_population, shard_table, table_from_history, update_table)
+from repro.serve.inference import (
+    PackedService, ServiceMeta, bucket_to_p95_jnp, pack_service,
+    resolve_kernel, served_query)
+from repro.serve.ingest import (
+    ARRIVAL, CAPPING, DEPARTURE, CapBatch, DepartureBatch, HostQueue,
+    IngestMux, MergedEvents, empty_arrivals, empty_caps, empty_departures,
+    kway_merge, slice_soa)
+from repro.serve.mitigation import (LiveVMs, MigrationPlan, plan_migrations)
+from repro.serve.pipeline import (
+    ServeConfig, ServePipeline, ServeResult, ShardedServeConfig,
+    ShardedServePipeline)
 from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    FAIL_TOKENS, DeviceClusterState,
                                    device_state, fresh_state,
@@ -24,11 +36,13 @@ from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    remove_batch, score_chassis_batch,
                                    score_server_batch)
 from repro.serve.sharding import (SHARD_AXIS, ShardedState,
-                                  chassis_to_shard, consume_departures,
+                                  apply_caps_sharded, chassis_to_shard,
+                                  consume_departures,
                                   device_put_sharded_state,
+                                  init_emergency_sharded,
                                   place_group_sharded, remove_sharded,
                                   rho_pool_from_budget, route_shard,
-                                  shard_mesh, shard_state,
+                                  shard_mesh, shard_state, split_caps,
                                   split_departures, unshard_state)
 
 __all__ = [
@@ -37,9 +51,15 @@ __all__ = [
     "update_table",
     "PackedService", "ServiceMeta", "pack_service", "served_query",
     "bucket_to_p95_jnp", "resolve_kernel",
-    "ARRIVAL", "DEPARTURE", "DepartureBatch", "HostQueue", "IngestMux",
-    "MergedEvents", "empty_arrivals", "empty_departures", "kway_merge",
-    "slice_soa",
+    "ARRIVAL", "DEPARTURE", "CAPPING", "CapBatch", "DepartureBatch",
+    "HostQueue", "IngestMux", "MergedEvents", "empty_arrivals",
+    "empty_caps", "empty_departures", "kway_merge", "slice_soa",
+    "CRIT_NUF", "CRIT_UF", "N_LEVELS", "EmergencyConfig",
+    "EmergencyOutputs", "EmergencyState", "chassis_rho_levels",
+    "emergency_step", "init_emergency", "masked_step",
+    "mitigation_due", "reset_dwell", "sampled_power",
+    "scatter_samples", "throttled_by_level", "util_from_power",
+    "LiveVMs", "MigrationPlan", "plan_migrations",
     "DeviceClusterState", "device_state", "fresh_state", "place_batch",
     "place_batch_pooled", "remove_batch", "score_chassis_batch",
     "score_server_batch",
@@ -47,9 +67,10 @@ __all__ = [
     "rho_cap_from_budget", "projected_chassis_power", "headroom_w",
     "ServeConfig", "ServePipeline", "ServeResult",
     "ShardedServeConfig", "ShardedServePipeline",
-    "SHARD_AXIS", "ShardedState", "chassis_to_shard",
-    "consume_departures", "device_put_sharded_state",
+    "SHARD_AXIS", "ShardedState", "apply_caps_sharded",
+    "chassis_to_shard", "consume_departures",
+    "device_put_sharded_state", "init_emergency_sharded",
     "place_group_sharded", "remove_sharded", "rho_pool_from_budget",
-    "route_shard", "shard_mesh", "shard_state", "split_departures",
-    "unshard_state",
+    "route_shard", "shard_mesh", "shard_state", "split_caps",
+    "split_departures", "unshard_state",
 ]

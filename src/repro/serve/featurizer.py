@@ -19,8 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import features as F
-from repro.sim.telemetry import VM_TYPES, ArrivalBatch, Population, \
-    arrival_batch
+from repro.sim.telemetry import (
+    VM_TYPES, ArrivalBatch, Population, arrival_batch)
 
 N_FEATURES = len(F.FEATURE_NAMES)
 N_VM_TYPES = len(VM_TYPES)

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 
 from repro.core.forest import ObliviousForest
 from repro.core.predictor import CONFIDENCE_GATE, UF, PredictionService
-from repro.kernels.forest.ops import normalize_forest_output, \
-    pack_forest, predict_packed
+from repro.kernels.forest.ops import (
+    normalize_forest_output, pack_forest, predict_packed)
 
 
 class PackedForest(NamedTuple):

@@ -49,13 +49,18 @@ from repro.sim.telemetry import ArrivalBatch
 #: Event kinds in a merged stream (`MergedEvents.kind`).
 ARRIVAL = 0
 DEPARTURE = 1
+CAPPING = 2
 
 
 @dataclass
 class DepartureBatch:
     """Struct-of-arrays batch of VM departures — the departure twin of
     `repro.sim.telemetry.ArrivalBatch` (global server ids; negative
-    ids are ignored by every consumer)."""
+    ids are ignored by every consumer). Rows with ``cores < 0`` are
+    *pinned arrivals* (an exact placement onto `server` — the encoding
+    `serve.mitigation` uses for the arrive leg of a migration pair):
+    `remove_batch` and the sharded pool credit are sign-symmetric, so
+    the same consumers handle both directions."""
     server: np.ndarray              # (B,) int32 — global server id
     cores: np.ndarray               # (B,) float32
     p95_eff: np.ndarray             # (B,) float32 — p95 recorded at placement
@@ -63,6 +68,26 @@ class DepartureBatch:
 
     def __len__(self) -> int:
         return len(self.server)
+
+
+@dataclass
+class CapBatch:
+    """Struct-of-arrays batch of per-chassis power samples — the third
+    stream-event kind (`CAPPING`), feeding the online power-emergency
+    plane (`repro.serve.emergency`, DESIGN.md §12).
+
+    A sample at/above the alarm threshold is a *cap* event (the
+    emergency controller apportions a cut at the event's merged
+    position); a sample below it is an *uncap* event (it starts or
+    advances the lift clock). Routing raw samples instead of
+    pre-chewed cap/uncap verdicts keeps every host stateless — the
+    hysteresis lives in one place, the emergency state, and applies in
+    deterministic merged order."""
+    chassis: np.ndarray             # (B,) int32 — global chassis id
+    power_w: np.ndarray             # (B,) float32 — sampled chassis draw
+
+    def __len__(self) -> int:
+        return len(self.chassis)
 
 
 def slice_soa(batch, lo: int, hi: int):
@@ -79,8 +104,7 @@ def _concat_soa(cls, parts: list):
     (downstream indexing and the jitted serve kernels depend on
     them)."""
     if not parts:
-        return empty_arrivals() if cls is ArrivalBatch \
-            else empty_departures()
+        return _empty_of(cls)
     return cls(*(np.concatenate([getattr(p, f.name) for p in parts])
                  for f in dataclasses.fields(cls)))
 
@@ -97,6 +121,22 @@ def empty_arrivals() -> ArrivalBatch:
                         np.empty(0, np.float32), np.empty(0, np.int32),
                         np.empty(0, bool), np.empty(0, np.float32),
                         np.empty(0, np.float32))
+
+
+def empty_caps() -> CapBatch:
+    """A zero-length `CapBatch` (typed empty columns)."""
+    return CapBatch(np.empty(0, np.int32), np.empty(0, np.float32))
+
+
+#: Payload batch type / empty-batch factory of each event kind,
+#: indexed by kind code.
+_KIND_CLS = (ArrivalBatch, DepartureBatch, CapBatch)
+_KIND_EMPTY = (empty_arrivals, empty_departures, empty_caps)
+_N_KINDS = len(_KIND_CLS)
+
+
+def _empty_of(cls):
+    return _KIND_EMPTY[_KIND_CLS.index(cls)]()
 
 
 class HostQueue:
@@ -164,32 +204,36 @@ class HostQueue:
                 f"after the last stamp ({self._last_t})")
         self._last_t = t
 
+    def _push(self, kind: int, batch, t) -> None:
+        """Shared append of one stamped chunk of any event kind (an
+        empty batch with a scalar `t` degrades to a `heartbeat`)."""
+        if not len(batch):
+            if t is not None and np.ndim(t) == 0:
+                self.heartbeat(t)
+            return
+        stamps = self._stamp(t, len(batch))
+        self._chunks.append([stamps, kind, batch, 0])
+        self._last_t = float(stamps[-1])
+        self._n += len(batch)
+
     def push_arrivals(self, batch: ArrivalBatch, t=None) -> None:
         """Append a stamped arrival chunk. `t`: per-row stamps ((B,)
         array, non-decreasing, first strictly after the host's last
         push), a scalar stamping the whole chunk, or None for the
         host-local unit clock (last + 1, +2, ...). An empty batch with
         a scalar `t` is a `heartbeat`."""
-        if not len(batch):
-            if t is not None and np.ndim(t) == 0:
-                self.heartbeat(t)
-            return
-        stamps = self._stamp(t, len(batch))
-        self._chunks.append([stamps, ARRIVAL, batch, 0])
-        self._last_t = float(stamps[-1])
-        self._n += len(batch)
+        self._push(ARRIVAL, batch, t)
 
     def push_departures(self, batch: DepartureBatch, t=None) -> None:
         """Append a stamped departure chunk (same stamping contract as
-        `push_arrivals` — the two kinds share the host's clock)."""
-        if not len(batch):
-            if t is not None and np.ndim(t) == 0:
-                self.heartbeat(t)
-            return
-        stamps = self._stamp(t, len(batch))
-        self._chunks.append([stamps, DEPARTURE, batch, 0])
-        self._last_t = float(stamps[-1])
-        self._n += len(batch)
+        `push_arrivals` — all kinds share the host's clock)."""
+        self._push(DEPARTURE, batch, t)
+
+    def push_caps(self, batch: CapBatch, t=None) -> None:
+        """Append a stamped chassis power-sample chunk (`CAPPING` — the
+        emergency plane's cap/uncap events; same stamping contract as
+        `push_arrivals`, all three kinds share the host's clock)."""
+        self._push(CAPPING, batch, t)
 
     def close(self) -> None:
         """Mark the stream ended: the host's watermark becomes +inf so
@@ -198,12 +242,12 @@ class HostQueue:
 
     def _take(self, up_to: float):
         """Consume this host's window of events with ``t <= up_to``:
-        returns (stamps, kind, arrivals, departures, kind-local index)
-        in push order. Chunks are internally sorted, so the cut is one
-        searchsorted per touched chunk."""
+        returns (stamps, kind, per-kind payload batches, kind-local
+        index) in push order. Chunks are internally sorted, so the cut
+        is one searchsorted per touched chunk."""
         ts, kinds, kidx = [], [], []
-        arr_parts, dep_parts = [], []
-        n_arr = n_dep = 0
+        parts = [[] for _ in range(_N_KINDS)]
+        counts = [0] * _N_KINDS
         keep = 0
         for chunk in self._chunks:
             stamps, kind, payload, off = chunk
@@ -212,14 +256,9 @@ class HostQueue:
             if hi > off:
                 ts.append(stamps[off:hi])
                 kinds.append(np.full(hi - off, kind, np.int8))
-                if kind == ARRIVAL:
-                    kidx.append(n_arr + np.arange(hi - off))
-                    arr_parts.append(slice_soa(payload, off, hi))
-                    n_arr += hi - off
-                else:
-                    kidx.append(n_dep + np.arange(hi - off))
-                    dep_parts.append(slice_soa(payload, off, hi))
-                    n_dep += hi - off
+                kidx.append(counts[kind] + np.arange(hi - off))
+                parts[kind].append(slice_soa(payload, off, hi))
+                counts[kind] += hi - off
                 self._n -= hi - off
                 chunk[3] = hi
             if hi < len(stamps):
@@ -229,23 +268,25 @@ class HostQueue:
         if not ts:
             return None
         return (np.concatenate(ts), np.concatenate(kinds),
-                _concat_soa(ArrivalBatch, arr_parts),
-                _concat_soa(DepartureBatch, dep_parts),
+                tuple(_concat_soa(cls, p)
+                      for cls, p in zip(_KIND_CLS, parts)),
                 np.concatenate(kidx).astype(np.int64))
 
 
 class MergedEvents(NamedTuple):
     """One poll's released events in merged ``(t, host, seq)`` order.
 
-    `kind[e]` says whether event *e* is an arrival or a departure; the
-    payload rows live packed (in merged order, per kind) in `arrivals`
-    / `departures`, so consecutive same-kind events form contiguous
-    row runs — `runs()` walks them."""
+    `kind[e]` says whether event *e* is an arrival, a departure, or a
+    chassis power sample; the payload rows live packed (in merged
+    order, per kind) in `arrivals` / `departures` / `caps`, so
+    consecutive same-kind events form contiguous row runs — `runs()`
+    walks them."""
     t: np.ndarray                   # (E,) f64 — merged stamps
     host: np.ndarray                # (E,) i32 — source host
-    kind: np.ndarray                # (E,) i8  — ARRIVAL | DEPARTURE
+    kind: np.ndarray                # (E,) i8  — ARRIVAL|DEPARTURE|CAPPING
     arrivals: ArrivalBatch          # arrival-event rows, merged order
     departures: DepartureBatch      # departure-event rows, merged order
+    caps: CapBatch                  # power-sample rows, merged order
 
     def __len__(self) -> int:
         return len(self.t)
@@ -253,12 +294,13 @@ class MergedEvents(NamedTuple):
     def runs(self):
         """Yield ``(kind, lo, hi)`` maximal same-kind runs; (lo, hi)
         index into the kind's packed batch (`arrivals` for ARRIVAL
-        runs, `departures` for DEPARTURE runs)."""
+        runs, `departures` for DEPARTURE runs, `caps` for CAPPING
+        runs)."""
         if not len(self.kind):
             return
         bounds = np.flatnonzero(np.diff(self.kind)) + 1
         starts = np.concatenate([[0], bounds, [len(self.kind)]])
-        cursors = [0, 0]
+        cursors = [0] * _N_KINDS
         for s, e in zip(starts[:-1], starts[1:]):
             k, n = int(self.kind[s]), int(e - s)
             yield k, cursors[k], cursors[k] + n
@@ -361,6 +403,11 @@ class IngestMux:
         """Push a stamped departure chunk into `host`'s queue."""
         self.hosts[host].push_departures(batch, t)
 
+    def cap_to(self, host: int, batch: CapBatch, t=None) -> None:
+        """Push a stamped chassis power-sample chunk into `host`'s
+        queue (the emergency plane's cap/uncap events)."""
+        self.hosts[host].push_caps(batch, t)
+
     def heartbeat(self, host: int, t) -> None:
         """Advance `host`'s clock to `t` without events (see
         `HostQueue.heartbeat`) — the idle-host escape hatch."""
@@ -373,23 +420,23 @@ class IngestMux:
     def _emit(self, up_to: float) -> MergedEvents:
         taken = [(h.host_id, h._take(up_to)) for h in self.hosts]
         windows = []
-        arr_by_host, dep_by_host = {}, {}
+        by_host = [{} for _ in range(_N_KINDS)]
         for hid, w in taken:
             if w is None:
                 continue
-            ts, kinds, arrs, deps, kidx = w
+            ts, kinds, batches, kidx = w
             windows.append({"t": ts,
                             "host": np.full(len(ts), hid, np.int32),
                             "kind": kinds, "kidx": kidx})
-            arr_by_host[hid] = arrs
-            dep_by_host[hid] = deps
+            for k in range(_N_KINDS):
+                by_host[k][hid] = batches[k]
         merged = _merge_windows(windows)
         if merged is None:
             return MergedEvents(np.empty(0), np.empty(0, np.int32),
                                 np.empty(0, np.int8), empty_arrivals(),
-                                empty_departures())
+                                empty_departures(), empty_caps())
 
-        def pack(empty, kind, by_host):
+        def pack(empty, kind):
             # the typed empty batch is the dtype authority: a host
             # window may hold zero rows of this kind, and its columns
             # must not leak a default dtype into the merged batch
@@ -401,7 +448,7 @@ class IngestMux:
             cols = []
             for f in dataclasses.fields(type(empty)):
                 col = np.empty(n, getattr(empty, f.name).dtype)
-                for hid, b in by_host.items():
+                for hid, b in by_host[kind].items():
                     mine = src_host == hid
                     if mine.any():
                         col[mine] = getattr(b, f.name)[src_idx[mine]]
@@ -410,8 +457,9 @@ class IngestMux:
 
         return MergedEvents(
             merged["t"], merged["host"], merged["kind"],
-            pack(empty_arrivals(), ARRIVAL, arr_by_host),
-            pack(empty_departures(), DEPARTURE, dep_by_host))
+            pack(empty_arrivals(), ARRIVAL),
+            pack(empty_departures(), DEPARTURE),
+            pack(empty_caps(), CAPPING))
 
     def poll(self) -> MergedEvents:
         """Release every event at or below the fleet watermark, in

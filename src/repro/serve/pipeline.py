@@ -30,6 +30,7 @@ micro-batches. `submit`/`depart` are the 1-host special case;
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 
 import jax
 import jax.numpy as jnp
@@ -38,13 +39,15 @@ import numpy as np
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
-from repro.serve import admission, placement, sharding
-from repro.serve.featurizer import SubscriptionTable, featurize_batch, \
-    ingest_population, shard_table, table_from_history
-from repro.serve.inference import bucket_to_p95_jnp, pack_service, \
-    resolve_kernel, served_query
-from repro.serve.ingest import ARRIVAL, DepartureBatch, IngestMux, \
-    MergedEvents, slice_soa
+from repro.serve import admission, emergency, placement, sharding
+from repro.serve.featurizer import (
+    SubscriptionTable, featurize_batch, ingest_population, shard_table,
+    table_from_history)
+from repro.serve.inference import (
+    bucket_to_p95_jnp, pack_service, resolve_kernel, served_query)
+from repro.serve.ingest import (
+    ARRIVAL, CAPPING, CapBatch, DepartureBatch, IngestMux, MergedEvents,
+    slice_soa)
 from repro.sim.telemetry import ArrivalBatch, Population
 
 
@@ -104,6 +107,38 @@ def _concat_batches(parts: list) -> ArrivalBatch:
                           for f in ArrivalBatch.__dataclass_fields__))
 
 
+@lru_cache(maxsize=None)
+def _cap_step_fn(cfg: emergency.EmergencyConfig):
+    """Compiled unsharded emergency scan: per-chassis criticality
+    aggregates from the cluster state, then the masked alarm +
+    apportionment step (`serve.emergency.masked_step`)."""
+
+    def fn(gamma_nuf, gamma_uf, chassis_servers, emer, pw, mask, ts):
+        rho_lv = emergency.chassis_rho_levels(gamma_nuf, gamma_uf,
+                                              chassis_servers, jnp)
+        return emergency.masked_step(cfg, emer, rho_lv, pw, mask, ts,
+                                     jnp)
+
+    return jax.jit(fn)
+
+
+def _unique_chassis_windows(chassis: np.ndarray):
+    """Split one merged CAPPING run into maximal prefixes with unique
+    chassis ids, preserving order: the dense masked kernel applies one
+    sample per chassis per call, so a window that samples a chassis
+    twice becomes two sequential windows (hysteresis clocks see both,
+    in merged order)."""
+    lo, seen = 0, set()
+    for i, c in enumerate(chassis):
+        c = int(c)
+        if c in seen:
+            yield lo, i
+            lo, seen = i, set()
+        seen.add(c)
+    if lo < len(chassis):
+        yield lo, len(chassis)
+
+
 class ServePipeline:
     """Stateful serving endpoint. Not thread-safe; one instance serves
     one cluster from one host — `ShardedServePipeline` is the
@@ -116,7 +151,8 @@ class ServePipeline:
                  config: ServeConfig | None = None,
                  chassis_budget_w=None,
                  power_model: ServerPowerModel | None = None,
-                 blades_per_chassis: int | None = None):
+                 blades_per_chassis: int | None = None,
+                 emergency_cfg: emergency.EmergencyConfig | None = None):
         self.config = config or ServeConfig()
         self.table = table
         self.state = state
@@ -126,6 +162,7 @@ class ServePipeline:
         self._buffers = [pack_service(service), None]
         self._active = 0
         n_chassis = state.rho_max.shape[0]
+        self.n_chassis = n_chassis
         if blades_per_chassis is None:
             blades_per_chassis = state.n_servers // n_chassis
         self.blades_per_chassis = blades_per_chassis
@@ -142,6 +179,26 @@ class ServePipeline:
         self._queued = 0
         self.swaps = 0
         self.served = 0
+        # power-emergency plane (serve.emergency, DESIGN.md §12)
+        self.emergency_cfg = emergency_cfg
+        self.emergency = None
+        self.alarms = 0
+        self._cap_epoch = None      # first cap stamp; rebases clocks
+        if emergency_cfg is not None:
+            if emergency_cfg.blades_per_chassis != self.blades_per_chassis:
+                raise ValueError(
+                    f"emergency_cfg.blades_per_chassis="
+                    f"{emergency_cfg.blades_per_chassis} does not match "
+                    f"the pipeline's {self.blades_per_chassis} — the "
+                    "static chassis floor (and every alarm and cut) "
+                    "would be miscalibrated")
+            self.emergency = self._init_emergency()
+
+    def _init_emergency(self):
+        """Fresh per-chassis emergency state (unsharded layout)."""
+        return emergency.init_emergency(
+            self.n_chassis, xp=jnp,
+            dtype=self.state.free_cores.dtype)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -225,6 +282,24 @@ class ServePipeline:
             np.asarray(is_uf, bool)), t)
         return self._drain_events(self.ingest.poll())
 
+    def cap_to(self, host: int, chassis, power_w,
+               t=None) -> list[ServeResult]:
+        """Push a stamped chassis power-sample batch into `host`'s
+        ingest queue — the cap/uncap events of the power-emergency
+        plane (`serve.emergency`, third stream-event kind). Samples
+        apply at their merged-stream position, so alarms, lifts, and
+        the capacity/token effects of any mitigation traffic stay
+        deterministic across host counts. Requires the pipeline to be
+        built with `emergency_cfg`. Advancing this host's clock can
+        release queued micro-batches — any results are returned."""
+        if self.emergency_cfg is None:
+            raise ValueError(
+                "cap_to() needs a pipeline built with emergency_cfg")
+        self.ingest.cap_to(host, CapBatch(
+            np.asarray(chassis, np.int32),
+            np.asarray(power_w, np.float32)), t)
+        return self._drain_events(self.ingest.poll())
+
     def flush(self) -> ServeResult | None:
         """Serve everything still queued, watermark ignored (padded up
         to the batch size; chunked if the drain releases more than one
@@ -246,7 +321,13 @@ class ServePipeline:
         batch-granularity caveat)."""
         bs = self.config.batch_size
         out: list[ServeResult] = []
+        pos = 0
         for kind, lo, hi in events.runs():
+            t_run = events.t[pos:pos + (hi - lo)]
+            pos += hi - lo
+            if kind == CAPPING:
+                self._apply_caps(slice_soa(events.caps, lo, hi), t_run)
+                continue
             if kind != ARRIVAL:
                 d = slice_soa(events.departures, lo, hi)
                 self._apply_departures(d.server, d.cores, d.p95_eff,
@@ -331,6 +412,74 @@ class ServePipeline:
         self.state = placement.remove_batch(
             self.state, jnp.asarray(servers), jnp.asarray(cores),
             jnp.asarray(p95_eff), jnp.asarray(is_uf))
+
+    # -- power-emergency plane (serve.emergency) ---------------------------
+    def _apply_caps(self, batch: CapBatch, t: np.ndarray) -> None:
+        """Consume one merged CAPPING run: split it into unique-chassis
+        sub-windows and step the emergency state through each in merged
+        order (`ShardedServePipeline` overrides the per-window kernel
+        with the per-shard route). Stamps are rebased to the first cap
+        stamp this pipeline ever saw: the f32 serving path stores the
+        emergency clocks in the state dtype, and epoch-second stamps
+        (~1e9) would otherwise quantize the 30 s lift/dwell windows
+        away — relative session time keeps sub-second resolution for
+        years of stream."""
+        if self.emergency_cfg is None:
+            raise ValueError(
+                "received CAPPING events but the pipeline was built "
+                "without emergency_cfg")
+        if self._cap_epoch is None:
+            self._cap_epoch = float(t[0])
+        t = np.asarray(t, np.float64) - self._cap_epoch
+        for lo, hi in _unique_chassis_windows(batch.chassis):
+            out = self._cap_window(batch.chassis[lo:hi],
+                                   batch.power_w[lo:hi], t[lo:hi])
+            self.alarms += int(np.asarray(out.alarm).sum())
+
+    def _cap_window(self, chassis, power_w, t):
+        """Apply one unique-chassis sample window (unsharded path)."""
+        dtype = self.state.free_cores.dtype
+        pw, mask, ts = emergency.scatter_samples(
+            self.n_chassis, chassis, power_w, t, jnp, dtype)
+        fn = _cap_step_fn(self.emergency_cfg)
+        self.emergency, out = fn(self.state.gamma_nuf,
+                                 self.state.gamma_uf,
+                                 self.state.chassis_servers,
+                                 self.emergency, pw, mask, ts)
+        return out
+
+    def throttled_by_level(self) -> np.ndarray:
+        """(L,) cumulative throttled-seconds per criticality level
+        (index `emergency.CRIT_UF` = critical) — the Table-4-style
+        impact counter the emergency plane maintains."""
+        if self.emergency is None:
+            return np.zeros(emergency.N_LEVELS)
+        return emergency.throttled_by_level(self.emergency)
+
+    def mitigation_due_chassis(self) -> np.ndarray:
+        """Global ids of chassis whose cap has dwelled past
+        `emergency_cfg.dwell_s` with the critical level throttled —
+        feed these (with a VM registry) to
+        `serve.mitigation.plan_migrations` and push the plan's paired
+        events through `depart_to`."""
+        if self.emergency is None:
+            return np.empty(0, np.int64)
+        due = np.asarray(emergency.mitigation_due(self.emergency_cfg,
+                                                  self.emergency))
+        return np.flatnonzero(due.reshape(-1))
+
+    def reset_dwell(self, chassis) -> None:
+        """Zero the dwell clock of the given global chassis ids (call
+        after emitting a migration plan for them)."""
+        mask = np.zeros(self.n_chassis, bool)
+        mask[np.asarray(chassis, np.int64)] = True
+        self.emergency = emergency.reset_dwell(
+            self.emergency, jnp.asarray(self._dwell_mask(mask)), jnp)
+
+    def _dwell_mask(self, mask: np.ndarray) -> np.ndarray:
+        """Reshape a (C,) global chassis mask to the emergency state's
+        chassis layout (identity unsharded)."""
+        return mask
 
     # -- diagnostics -------------------------------------------------------
     def chassis_headroom_w(self, budget_w) -> np.ndarray:
@@ -434,6 +583,26 @@ class ShardedServePipeline(ServePipeline):
         (`sharding.consume_departures`)."""
         self.sharded = sharding.remove_sharded(
             self.sharded, servers, cores, p95_eff, is_uf)
+
+    # -- sharded power-emergency plane -------------------------------------
+    def _init_emergency(self):
+        """Emergency state partitioned like the cluster (leading shard
+        axis over the same contiguous chassis blocks)."""
+        return sharding.init_emergency_sharded(
+            self.n_chassis, self.config.n_shards,
+            dtype=self.state.free_cores.dtype)
+
+    def _cap_window(self, chassis, power_w, t):
+        """Apply one unique-chassis sample window: route samples to
+        their owner shards and run every shard's alarm + apportionment
+        kernel concurrently (vmap, or shard_map on the mesh)."""
+        self.emergency, out = sharding.apply_caps_sharded(
+            self.emergency_cfg, self.sharded, self.emergency, chassis,
+            power_w, t, mesh=self.mesh)
+        return out
+
+    def _dwell_mask(self, mask: np.ndarray) -> np.ndarray:
+        return mask.reshape(self.config.n_shards, -1)
 
     # -- diagnostics -------------------------------------------------------
     def global_state(self) -> placement.DeviceClusterState:

@@ -58,6 +58,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
+from repro.serve import emergency
 from repro.serve.placement import (DeviceClusterState, FAIL_CAPACITY,
                                    _place_batch_impl, remove_batch)
 
@@ -428,3 +429,82 @@ def remove_sharded(sharded: ShardedState, servers, cores, p95_eff,
     return consume_departures(
         sharded, *split_departures(sharded, servers, cores, p95_eff,
                                    is_uf))
+
+
+# --- sharded power-emergency plane (DESIGN.md §12) ------------------------
+
+def init_emergency_sharded(n_chassis: int, n_shards: int,
+                           dtype=jnp.float32):
+    """Emergency state partitioned like the cluster: one
+    `serve.emergency.EmergencyState` slice per shard, leading (N,)
+    axis over the same contiguous chassis blocks as `shard_state`."""
+    chassis_to_shard(n_chassis, n_shards)       # validates divisibility
+    return emergency.init_emergency(
+        n_chassis // n_shards, batch_shape=(n_shards,), xp=jnp,
+        dtype=dtype)
+
+
+def split_caps(sharded: ShardedState, chassis, power_w, t):
+    """Host-side routing of a global power-sample batch into the dense
+    per-shard `masked_step` operands: ``(power (N, C/N), mask
+    (N, C/N), t (N, C/N))``. Chassis within the batch must be unique
+    (the pipeline splits duplicate-bearing windows into sub-windows
+    first); ownership is the contiguous-block layout of
+    `chassis_to_shard`."""
+    n = sharded.n_shards
+    c_loc = sharded.global_chassis.shape[1]
+    chassis = np.asarray(chassis, np.int64)
+    pw = np.zeros((n, c_loc), np.float64)
+    mask = np.zeros((n, c_loc), bool)
+    ts = np.zeros((n, c_loc), np.float64)
+    owner, local = chassis // c_loc, chassis % c_loc
+    pw[owner, local] = np.asarray(power_w, np.float64)
+    mask[owner, local] = True
+    ts[owner, local] = np.asarray(t, np.float64)
+    return pw, mask, ts
+
+
+@lru_cache(maxsize=None)
+def _caps_fn(cfg: emergency.EmergencyConfig, mesh):
+    """Compiled sharded emergency scan: derive each shard's per-chassis
+    per-criticality commitments from its own aggregates and run the
+    masked emergency step — vmap on one device (the semantics oracle),
+    shard_map over the mesh (identical per-shard arithmetic)."""
+
+    def one_shard(st, emer, pw, mask, ts):
+        rho_lv = emergency.chassis_rho_levels(
+            st.gamma_nuf, st.gamma_uf, st.chassis_servers, jnp)
+        return emergency.masked_step(cfg, emer, rho_lv, pw, mask, ts,
+                                     jnp)
+
+    def fn(shards, emer, pw, mask, ts):
+        if mesh is None:
+            return jax.vmap(one_shard)(shards, emer, pw, mask, ts)
+
+        def per(st, em, p1, m1, t1):
+            sq = partial(jax.tree.map, lambda x: x[0])
+            e2, o2 = one_shard(sq(st), sq(em), p1[0], m1[0], t1[0])
+            return jax.tree.map(lambda x: x[None], (e2, o2))
+        spec = P(SHARD_AXIS)
+        return shard_map(per, mesh=mesh, in_specs=(spec,) * 5,
+                         out_specs=(spec, spec))(shards, emer, pw, mask,
+                                                 ts)
+
+    return jax.jit(fn)
+
+
+def apply_caps_sharded(cfg: emergency.EmergencyConfig,
+                       sharded: ShardedState, emer, chassis, power_w,
+                       t, *, mesh=None):
+    """Apply one unique-chassis power-sample window to the sharded
+    emergency state: route samples to their owner shards
+    (`split_caps`) and run every shard's alarm + apportionment kernel
+    concurrently — no cross-shard communication, because chassis
+    ownership is exclusive and each shard's criticality aggregates are
+    local. Returns ``(new_emergency_state, EmergencyOutputs)`` with
+    the per-shard leading axis."""
+    dtype = sharded.shards.free_cores.dtype
+    pw, mask, ts = split_caps(sharded, chassis, power_w, t)
+    fn = _caps_fn(cfg, mesh)
+    return fn(sharded.shards, emer, jnp.asarray(pw, dtype),
+              jnp.asarray(mask), jnp.asarray(ts, dtype))

@@ -103,6 +103,122 @@ class SimMetrics:
     placements: int
     failures: int
     power: PowerEval | None = None
+    #: power-emergency plane counters (`emergency_cfg` runs only):
+    #: per-criticality throttled-seconds — the paper's Table-4-style
+    #: impact axis (critical should stay near zero under
+    #: criticality-aware apportionment) — plus alarm and migration
+    #: counts.
+    uf_throttled_s: float = 0.0
+    nuf_throttled_s: float = 0.0
+    alarms: int = 0
+    migrations: int = 0
+
+
+class _EmergencySim:
+    """Power-emergency plane driven inside `simulate` (DESIGN.md §12).
+
+    Holds one fleet-wide `serve.emergency.EmergencyState` (f64) and
+    steps it at every deployment event: the committed per-criticality
+    aggregates are scaled by the deterministic diurnal utilization
+    sample (`sim.telemetry.diurnal_util`) into per-chassis power
+    samples, the alarm + apportionment kernel consumes them, and
+    chassis whose critical level dwells capped past the threshold get
+    a migration plan (`serve.mitigation`) applied to the cluster
+    state as paired depart/arrive moves.
+
+    The numpy execution is the oracle; with `use_jax` (the serve
+    backends) every scan ALSO runs the compiled jnp kernel in x64 and
+    asserts it bit-identical — the acceptance invariant, checked on
+    every scan rather than trusted to a test fixture. The sample set
+    is a pure function of simulation time, so the emergency trace is
+    identical for every backend and ingest-host count."""
+
+    def __init__(self, cfg, n_chassis: int, chassis_of: np.ndarray,
+                 use_jax: bool):
+        from repro.serve import emergency, mitigation
+        self.emg, self.mit = emergency, mitigation
+        self.cfg = cfg
+        self.n_chassis = n_chassis
+        self.chassis_of = chassis_of
+        self.use_jax = use_jax
+        self.st = emergency.init_emergency(n_chassis, xp=np,
+                                           dtype=np.float64)
+        self.alarms = 0
+        self.migrations = 0
+
+    def _rho_lv(self, state) -> np.ndarray:
+        c = self.n_chassis
+        return np.stack(
+            [np.bincount(self.chassis_of, weights=state.gamma_nuf,
+                         minlength=c),
+             np.bincount(self.chassis_of, weights=state.gamma_uf,
+                         minlength=c)], axis=-1)
+
+    def scan(self, t_h: float, state, vm_live: dict) -> None:
+        """One emergency scan at simulation time `t_h` (hours)."""
+        emg = self.emg
+        u = float(tel.diurnal_util(t_h))
+        rho_lv = self._rho_lv(state)
+        idx = np.arange(self.n_chassis)
+        stamps = t_h * 3600.0 + (idx + 1) * 1e-7
+        power = np.asarray(emg.sampled_power(
+            self.cfg, rho_lv, u, np.zeros((self.n_chassis, 2), np.int32),
+            np.zeros(self.n_chassis, bool), np))
+        pw, mask, ts = emg.scatter_samples(self.n_chassis, idx, power,
+                                           stamps, np, np.float64)
+        st2, out = emg.masked_step(self.cfg, self.st, rho_lv, pw, mask,
+                                   ts, np)
+        if self.use_jax:
+            import jax
+            import jax.numpy as jnp
+            with jax.experimental.enable_x64():
+                stj, outj = emg.masked_step(
+                    self.cfg, jax.tree.map(jnp.asarray, self.st),
+                    jnp.asarray(rho_lv), jnp.asarray(pw),
+                    jnp.asarray(mask), jnp.asarray(ts), jnp)
+            for a, b in zip(st2, stj):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    "serve emergency kernel diverged from numpy oracle"
+        self.st = st2
+        self.alarms += int(out.alarm.sum())
+        # no chassis past the alarm window may exceed its budget when
+        # the cut was achievable within the floors (the RAPL-leftover
+        # rows are physically pinned at the all-core frequency floor)
+        achievable = out.alarm & (out.leftover_w <= 1e-6)
+        assert (np.asarray(out.power_after_w)[achievable]
+                <= self.cfg.chassis_budget_w + 1e-6).all(), \
+            "chassis exceeded its budget past the alarm window"
+        self._mitigate(u, state, vm_live)
+
+    def _mitigate(self, u: float, state, vm_live: dict) -> None:
+        emg, mit = self.emg, self.mit
+        due = np.asarray(emg.mitigation_due(self.cfg, self.st, np))
+        if not due.any() or not vm_live:
+            return
+        tokens = np.fromiter(vm_live.keys(), np.int64, len(vm_live))
+        tokens.sort()                       # deterministic registry order
+        rows = [vm_live[int(k)] for k in tokens]
+        live = mit.LiveVMs(
+            server=np.array([r[0] for r in rows], np.int32),
+            cores=np.array([r[1] for r in rows], np.float64),
+            p95_eff=np.array([r[2] for r in rows], np.float64),
+            is_uf=np.array([r[3] for r in rows], bool),
+            token=tokens)
+        plan = mit.plan_migrations(
+            self.cfg, live, self.chassis_of, state.free_cores,
+            self._rho_lv(state), u, due)
+        # paired depart/arrive application; pairs touch disjoint VMs,
+        # so plan order == any merged event order (the pipeline path
+        # routes the same pairs through the ingest merge)
+        for m in range(len(plan)):
+            cores = float(plan.cores[m])
+            p95, uf = float(plan.p95_eff[m]), bool(plan.is_uf[m])
+            state.remove(int(plan.src_server[m]), cores, p95, uf)
+            state.place(int(plan.dst_server[m]), cores, p95, uf)
+            vm_live[int(plan.token[m])] = (int(plan.dst_server[m]),
+                                           cores, p95, uf)
+        self.migrations += len(plan)
+        self.st = emg.reset_dwell(self.st, due, np)
 
 
 def evaluate_power_dynamics(vm_live: dict, chassis_of: np.ndarray,
@@ -190,6 +306,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              serve_shards: int = 1,
              n_ingest_hosts: int = 1,
              cluster_budget_w: float | None = None,
+             emergency_cfg=None,
+             prefill_core_ratio: float = 0.0,
              trace: list | None = None) -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
     UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
@@ -222,6 +340,29 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                 every placement decision — is identical for any host
                 count (1 host == today's single-queue path, asserted
                 in tests).
+    `prefill_core_ratio` warm-starts the cluster before the event loop:
+    VMs are sampled and placed by the event-path rule (identically for
+    every backend — the stream draws from the same rng prefix) until
+    that fraction of the fleet's cores is committed, with normal
+    lifetimes feeding the departure heap. Short runs can then exercise
+    occupancy regimes — like a 2x-oversubscribed fleet near its alarm
+    threshold — that an empty 720-server cluster would need weeks of
+    simulated arrivals to reach.
+
+    `emergency_cfg`, a `serve.emergency.EmergencyConfig`, turns on the
+    online power-emergency plane (DESIGN.md §12, docs/emergency.md):
+    every deployment event also scans all chassis — committed
+    aggregates scaled by the deterministic diurnal utilization sample
+    (`sim.telemetry.diurnal_util`) become power samples, alarms
+    apportion cuts lowest-criticality-first, per-criticality
+    throttled-seconds accrue into the metrics, and chassis whose
+    critical level stays capped past the dwell threshold get their
+    cheapest critical VMs migrated to headroom chassis
+    (`serve.mitigation`). The scan asserts that no alarmed chassis
+    with an achievable cut exceeds its budget, and under the serve
+    backends additionally asserts the compiled jnp kernel
+    bit-identical to the numpy oracle on every scan.
+
     `trace`, if given, collects the chosen server (or failure code)
     per placement attempt — the decision-equivalence probe."""
     if backend not in ("event", "serve", "serve-sharded"):
@@ -258,10 +399,42 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             admission_budget_w, BLADES_PER_CHASSIS, state.n_chassis)
         serve_pool_total = rho_pool_from_budget(cluster_budget_w,
                                                 n_servers)
+    emer = None
+    if emergency_cfg is not None:
+        emer = _EmergencySim(emergency_cfg, state.n_chassis, chassis_of,
+                             use_jax=backend != "event")
     departures: list = []        # heap of (time, vm_token)
     vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
     token = 0
     placements = failures = 0
+    # warm start (identical for every backend: one rng prefix, the
+    # event-path placement rule). A snapshot of a running fleet is
+    # length-biased — long-lived VMs dominate the standing population —
+    # so prefill lifetimes sample the duration-weighted buckets with a
+    # uniform residual, keeping the occupancy roughly stationary
+    # instead of draining at the short-life rate.
+    target_cores = prefill_core_ratio * n_servers * CORES_PER_BLADE
+    mids = np.array([(lo + hi) / 2 for lo, hi in tel.LIFETIME_BUCKETS])
+    standing_probs = tel.LIFETIME_PROBS * mids
+    standing_probs = standing_probs / standing_probs.sum()
+    filled = 0.0
+    while filled < target_cores:
+        cores = int(rng.choice(tel.CORE_SIZES, p=tel.CORE_PROBS))
+        life_h = rng.random() * tel._sample_bucket(
+            rng, tel.LIFETIME_BUCKETS, standing_probs)
+        true_uf = rng.random() < target_uf_core_ratio
+        true_p95 = float(np.clip(
+            rng.normal(0.65 if true_uf else 0.44, 0.12), 0.05, 1.0))
+        uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
+        p95_eff = policy.effective_p95(p95_pred)
+        srv = policy.choose(state, cores, uf_pred)
+        if srv is None:
+            break
+        state.place(srv, cores, p95_eff, uf_pred)
+        vm_live[token] = (srv, cores, p95_eff, uf_pred)
+        heapq.heappush(departures, (life_h, token))
+        token += 1
+        filled += cores
     t = 0.0
     next_sample = 0.0
     empty_samples, chassis_stds, server_stds = [], [], []
@@ -282,6 +455,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             next_sample += sample_every_h
         if t >= horizon:
             break
+        if emer is not None:
+            emer.scan(t, state, vm_live)
         # sample the whole deployment group first (placement consumes
         # no randomness, so both backends see the same stream), then
         # place per-VM (event) or via one batched scan (serve)
@@ -371,12 +546,20 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             sample_chassis=power_eval_chassis,
             duration_s=power_eval_duration_s, seed=seed,
             backend=power_eval_backend)
+    throttled = np.zeros(2)
+    if emer is not None:
+        from repro.serve.emergency import throttled_by_level
+        throttled = throttled_by_level(emer.st)
     return SimMetrics(
         failure_rate=failures / max(placements, 1),
         empty_server_ratio=float(np.mean(empty_samples)),
         chassis_score_std=float(np.mean(chassis_stds)),
         server_score_std=float(np.mean(server_stds)),
-        placements=placements, failures=failures, power=power)
+        placements=placements, failures=failures, power=power,
+        nuf_throttled_s=float(throttled[0]),
+        uf_throttled_s=float(throttled[1]),
+        alarms=0 if emer is None else emer.alarms,
+        migrations=0 if emer is None else emer.migrations)
 
 
 def fig7_sweep(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), days: float = 30.0,

@@ -348,6 +348,24 @@ def merge_streams(streams: list) -> tuple:
     return t[order], host[order], merged
 
 
+def diurnal_util(t_hours) -> np.ndarray:
+    """Deterministic fleet-utilization sample at simulation time
+    `t_hours` (hours; scalar or array) — the fraction of the committed
+    P95 the fleet is actually drawing, driving the power-emergency
+    scans of the scheduler simulation (`repro.sim.scheduler_sim`,
+    ``emergency_cfg``).
+
+    A business-hours diurnal hump with a harmonic ripple, clipped to
+    [0.15, 0.95]: peaks push oversubscribed chassis past their alarm
+    threshold once per simulated day, troughs let caps lift — and
+    because it is a pure function of `t` (no rng), every backend and
+    ingest-host count sees the identical emergency trace."""
+    tod = (np.asarray(t_hours, np.float64) % 24.0) / 24.0
+    x = 0.55 + 0.32 * np.sin((tod - 0.25) * 2 * np.pi) \
+        + 0.08 * np.sin((tod - 0.10) * 4 * np.pi)
+    return np.clip(x, 0.15, 0.95)
+
+
 def generate_chassis_telemetry(n_chassis: int, n_days: int,
                                provisioned_w: float, seed: int = 0,
                                slots_per_day: int = 48) -> np.ndarray:

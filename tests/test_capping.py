@@ -112,3 +112,45 @@ def test_dyn_scale_calibration_point():
     # paper: dynamic power at f/2 is (169-111)/(310-112) of max
     assert float(dyn_scale(0.5)) == pytest.approx(
         (169.0 - 111.0) / (310.0 - 112.0), abs=1e-9)
+
+
+def test_chassis_manager_batched_poll_and_params():
+    """The serve emergency plane polls every chassis at once and reads
+    the thresholds as plain floats (batched-friendly params)."""
+    mgr = ChassisManager(1860.0)
+    np.testing.assert_array_equal(
+        mgr.poll(np.array([1700.0, 1804.2, 1900.0])),
+        [False, True, True])
+    assert mgr.alert_w == mgr.alert_threshold_w
+    assert mgr.target_w == pytest.approx(1855.0)
+
+
+def test_reducible_fracs_monotone_and_calibrated():
+    from repro.core.capping import reducible_fracs
+    fr = reducible_fracs()
+    assert fr[0] == 0.0
+    assert (np.diff(fr) > 0).all()
+    assert fr[-1] == pytest.approx(1.0 - float(dyn_scale(0.5)))
+
+
+def test_apportion_watts_priority_cascade():
+    """Lowest-criticality-first: level 0 absorbs the whole cut up to
+    its floor before level 1 loses anything; a zero-draw level is
+    skipped NaN-free; an unabsorbable remainder reports as leftover
+    (the RAPL trigger), never silently vanishes."""
+    from repro.core.capping import apportion_watts, reducible_fracs
+    fr = reducible_fracs()
+    floors = np.array([10, 5], np.int32)
+    dyn = np.array([[100.0, 200.0]])
+    small = 0.5 * 100.0 * fr[10]
+    ps, take, left = apportion_watts(np.array([small]), dyn, floors, np)
+    assert take[0, 1] == 0.0 and ps[0, 1] == 0 and left[0] == 0.0
+    assert 0 < ps[0, 0] <= 10
+    huge = 100.0 * fr[10] + 200.0 * fr[5] + 50.0
+    ps, take, left = apportion_watts(np.array([huge]), dyn, floors, np)
+    assert ps[0, 0] == 10 and ps[0, 1] == 5
+    assert left[0] == pytest.approx(50.0)
+    ps, take, left = apportion_watts(
+        np.array([30.0]), np.array([[0.0, 0.0]]), floors, np)
+    assert np.isfinite(take).all() and (ps == 0).all()
+    assert left[0] == pytest.approx(30.0)

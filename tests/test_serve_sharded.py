@@ -184,8 +184,7 @@ def test_budget_invariant_across_groups_and_departures():
     live commitments each group; across a multi-group run with
     departures the fleet never exceeds the cluster budget."""
     from repro.sim.scheduler_sim import PredictionChannel, simulate
-    from repro.core.power_model import F_MAX, ServerPowerModel, \
-        idle_power
+    from repro.core.power_model import (F_MAX, ServerPowerModel, idle_power)
     n_servers = 720
     budget = n_servers * float(idle_power(F_MAX)) \
         + ServerPowerModel().p_dyn_per_core * 400.0
