@@ -10,11 +10,24 @@ MXU as two matmuls:
   4. leaf lookup     -> one-hot leaf (B, T*L) built by iota-compare,
                         then (B, T*L) @ (T*L, K) = summed leaf values
 
-The ops.py wrapper precomputes the (F, T*D) one-hot gather matrix and the
-(T*L, K) flattened leaf table from a trained `ObliviousForest`, so the
-kernel itself is shape-static. Block layout: (BLOCK_B, ·) tiles in VMEM;
-with T = 48 trees, D = 6, K <= 4: gather matrix ~36 KiB, leaf table
-~49 KiB, one-hot scratch (BLOCK_B x 3072) ~1.5 MiB at BLOCK_B = 128.
+Tiling (DESIGN.md §13): the kernel runs on a 2-D ``(batch, trees)``
+grid. Each program instance evaluates one (BLOCK_B, BLOCK_T) tile in
+two stages — stage 1 is the gather matmul + bit-pack for its tree
+slice, stage 2 the one-hot leaf matmul — and accumulates its partial
+(BLOCK_B, K) sum into the output block. The tree axis is the innermost
+grid dimension, so the output block for a batch tile is revisited on
+consecutive iterations: ``@pl.when(j == 0)`` zero-initializes it, every
+tree tile adds its partial sum. Tiling over trees bounds the one-hot
+scratch at (BLOCK_B x BLOCK_T*L) regardless of ensemble size — the
+whole-forest scratch (BLOCK_B x T*L, ~1.5 MiB at T = 48, D = 6,
+BLOCK_B = 128) is what previously capped BLOCK_B well below the MXU
+sweet spot for deep ensembles.
+
+The ops.py wrapper precomputes the (F, T*D) one-hot gather matrix and
+the (T*L, K) flattened leaf table from a trained `ObliviousForest`, so
+the kernel itself is shape-static. All tile shapes are parity-tested
+against ref.py (tests/test_kernels.py) and measured by
+benchmarks/forest_kernel.py.
 """
 from __future__ import annotations
 
@@ -25,57 +38,87 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_B = 128
+#: Default tree-tile width (trees per program instance). None = all
+#: trees in one tile (the pre-tiling layout, still optimal for the
+#: small four-forest serving ensembles).
+BLOCK_T = None
 
 
-def _forest_kernel(x_ref, gather_ref, thr_ref, leaf_ref, out_ref, *,
-                   n_trees: int, depth: int):
+def _forest_kernel_tiled(x_ref, gather_ref, thr_ref, leaf_ref, out_ref,
+                         *, block_t: int, depth: int):
+    """One (batch-tile, tree-tile) program instance: partial leaf sums
+    for `block_t` trees, accumulated into the batch tile's output."""
     x = x_ref[...]                                # (B, F)
-    gather = gather_ref[...]                      # (F, T*D)
-    thr = thr_ref[...]                            # (1, T*D)
-    leaf_tab = leaf_ref[...]                      # (T*L, K)
+    gather = gather_ref[...]                      # (F, Tb*D)
+    thr = thr_ref[...]                            # (1, Tb*D)
+    leaf_tab = leaf_ref[...]                      # (Tb*L, K)
     b = x.shape[0]
     n_leaves = 1 << depth
 
+    # stage 1: feature gather + level compare + leaf-index bit-pack
     levels = jnp.dot(x, gather,
-                     preferred_element_type=jnp.float32)      # (B, T*D)
+                     preferred_element_type=jnp.float32)     # (B, Tb*D)
     bits = (levels > thr).astype(jnp.float32)
-    bits = bits.reshape(b, n_trees, depth)
+    bits = bits.reshape(b, block_t, depth)
     # 2^(D-1-l) weights, built with iota to avoid captured constants
     lvl = jax.lax.broadcasted_iota(jnp.float32, (1, 1, depth), 2)
     weights = jnp.exp2((depth - 1) - lvl)
-    leaf_idx = jnp.sum(bits * weights, axis=-1)                 # (B, T)
+    leaf_idx = jnp.sum(bits * weights, axis=-1)              # (B, Tb)
 
+    # stage 2: one-hot leaf lookup matmul for this tree slice
     iota = jax.lax.broadcasted_iota(jnp.float32, (1, 1, n_leaves), 2)
     onehot = (jnp.abs(leaf_idx[:, :, None] - iota) < 0.5) \
-        .astype(jnp.float32)                       # (B, T, L)
-    onehot = onehot.reshape(b, n_trees * n_leaves)
-    out_ref[...] = jnp.dot(onehot, leaf_tab,
-                           preferred_element_type=jnp.float32)  # (B, K)
+        .astype(jnp.float32)                     # (B, Tb, L)
+    onehot = onehot.reshape(b, block_t * n_leaves)
+    partial = jnp.dot(onehot, leaf_tab,
+                      preferred_element_type=jnp.float32)    # (B, K)
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+def resolve_block_t(n_trees: int, block_t: int | None) -> int:
+    """Clamp a requested tree-tile width to a divisor of the ensemble:
+    the largest divisor of `n_trees` that is <= the request (so odd
+    ensemble sizes degrade to a coarser tile instead of failing)."""
+    if block_t is None or block_t >= n_trees:
+        return n_trees
+    block_t = max(int(block_t), 1)
+    while n_trees % block_t:
+        block_t -= 1
+    return block_t
 
 
 def forest_predict_pallas(x: jnp.ndarray, gather: jnp.ndarray,
                           thresholds_flat: jnp.ndarray,
                           leaf_table: jnp.ndarray, n_trees: int,
                           depth: int, block_b: int = BLOCK_B,
+                          block_t: int | None = BLOCK_T,
                           interpret: bool = False) -> jnp.ndarray:
     """Summed leaf values over trees: (B, K). Caller scales (RF mean) or
-    softmaxes (GB)."""
+    softmaxes (GB). `block_b`/`block_t` pick the (batch, trees) tile;
+    `block_t=None` puts the whole ensemble in one tile."""
     b, f = x.shape
     td = gather.shape[1]
     tl, k = leaf_table.shape
     assert b % block_b == 0
-    kernel = functools.partial(_forest_kernel, n_trees=n_trees,
+    block_t = resolve_block_t(n_trees, block_t)
+    n_leaves = 1 << depth
+    kernel = functools.partial(_forest_kernel_tiled, block_t=block_t,
                                depth=depth)
     return pl.pallas_call(
         kernel,
-        grid=(b // block_b,),
+        grid=(b // block_b, n_trees // block_t),
         in_specs=[
-            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
-            pl.BlockSpec((f, td), lambda i: (0, 0)),
-            pl.BlockSpec((1, td), lambda i: (0, 0)),
-            pl.BlockSpec((tl, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_b, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((f, block_t * depth), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_t * depth), lambda i, j: (0, j)),
+            pl.BlockSpec((block_t * n_leaves, k), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((block_b, k), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_b, k), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(x, gather, thresholds_flat, leaf_table)

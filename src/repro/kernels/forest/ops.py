@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.forest import ObliviousForest
-from repro.kernels.forest.forest import BLOCK_B, forest_predict_pallas
+from repro.kernels.forest.forest import (BLOCK_B, BLOCK_T,
+                                         forest_predict_pallas)
 
 
 def pack_forest(forest: ObliviousForest):
@@ -40,23 +41,26 @@ def normalize_forest_output(summed, kind: str, n_trees: int):
 
 
 def predict_packed(x, gather, thr, leaf_tab, n_trees, depth, kind,
-                   interpret):
-    """Pad the batch to BLOCK_B, run the kernel on packed operands, and
-    normalize. Traceable — shared by `_predict` and the serving path
-    (`repro.serve.inference`)."""
+                   interpret, block_b: int = BLOCK_B,
+                   block_t: int | None = BLOCK_T):
+    """Pad the batch to `block_b`, run the tiled kernel on packed
+    operands, and normalize. Traceable — shared by `_predict` and the
+    serving path (`repro.serve.inference`)."""
     b = x.shape[0]
-    pad = (-b) % BLOCK_B
+    pad = (-b) % block_b
     if pad:
         x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)], 0)
     summed = forest_predict_pallas(x.astype(jnp.float32), gather, thr,
                                    leaf_tab, n_trees, depth,
+                                   block_b=block_b, block_t=block_t,
                                    interpret=interpret)[:b]
     return normalize_forest_output(summed, kind, n_trees)
 
 
 _predict = partial(jax.jit,
                    static_argnames=("n_trees", "depth", "kind",
-                                    "interpret"))(predict_packed)
+                                    "interpret", "block_b",
+                                    "block_t"))(predict_packed)
 
 
 def forest_predict(forest: ObliviousForest, x, interpret: bool | None = None):

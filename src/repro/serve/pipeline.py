@@ -181,8 +181,9 @@ class ServePipeline:
         self.served = 0
         # power-emergency plane (serve.emergency, DESIGN.md §12)
         self.emergency_cfg = emergency_cfg
+        self._pending_caps: list[tuple] = []    # queued (chassis, pw, t)
         self.emergency = None
-        self.alarms = 0
+        self._alarms = 0
         self._cap_epoch = None      # first cap stamp; rebases clocks
         if emergency_cfg is not None:
             if emergency_cfg.blades_per_chassis != self.blades_per_chassis:
@@ -199,6 +200,26 @@ class ServePipeline:
         return emergency.init_emergency(
             self.n_chassis, xp=jnp,
             dtype=self.state.free_cores.dtype)
+
+    @property
+    def emergency(self):
+        """Current emergency-plane state. Reading it flushes any cap
+        sub-windows still queued for fusion, so observers always see
+        the state as of the last event pushed — queueing is a pure
+        dispatch-count optimization, never a semantic lag."""
+        self._flush_caps()
+        return self._emergency
+
+    @emergency.setter
+    def emergency(self, value):
+        self._emergency = value
+
+    @property
+    def alarms(self) -> int:
+        """Cumulative alarm count across all applied sample windows
+        (flushes queued windows first, like `emergency`)."""
+        self._flush_caps()
+        return self._alarms
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -309,6 +330,7 @@ class ServePipeline:
             merged = _concat_batches(self._pending)
             self._pending, self._queued = [], 0
             out.append(self._serve_padded(merged))
+        self._flush_caps()          # trailing caps with no batch to ride
         if not out:
             return None
         return out[0] if len(out) == 1 else _concat_results(out)
@@ -383,13 +405,39 @@ class ServePipeline:
     def _place(self, cores, is_uf, p95_eff, valid):
         """Placement stage of one padded micro-batch: run the batched
         Algorithm-1 scan against the cluster state and return the (B,)
-        server decisions (FAIL_* codes on reject). The sharded pipeline
-        overrides this single hook — every other serving stage is
-        shard-agnostic."""
+        server decisions (FAIL_* codes on reject). Cap sub-windows
+        queued since the last batch ride along fused in front of the
+        scan (`placement.place_batch_caps`) — the batch plus a full
+        emergency sweep is still one compiled dispatch. The sharded
+        pipeline overrides this single hook — every other serving
+        stage is shard-agnostic."""
+        if self._pending_caps:
+            pw, mask, ts = self._stacked_caps()
+            self._pending_caps = []
+            (self.state, servers, self._emergency,
+             alarms) = placement.place_batch_caps(
+                self.state, self._emergency, pw, mask, ts, cores,
+                is_uf, p95_eff, valid, self.rho_cap,
+                self.config.policy, self.cores_per_server,
+                self.emergency_cfg)
+            self._alarms += int(alarms)
+            return servers
         self.state, servers = placement.place_batch(
             self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
             self.config.policy, self.cores_per_server)
         return servers
+
+    def _stacked_caps(self):
+        """Densify the queued unique-chassis sub-windows into stacked
+        (W, C) `masked_step` operands, merged order preserved."""
+        dtype = self.state.free_cores.dtype
+        rows = [emergency.scatter_samples(self.n_chassis, c, p, t, np,
+                                          np.float64)
+                for c, p, t in self._pending_caps]
+        pw = jnp.asarray(np.stack([r[0] for r in rows]), dtype)
+        mask = jnp.asarray(np.stack([r[1] for r in rows]))
+        ts = jnp.asarray(np.stack([r[2] for r in rows]), dtype)
+        return pw, mask, ts
 
     def depart(self, servers, cores, p95_eff, is_uf) -> None:
         """Release departed VMs' aggregates immediately (batched,
@@ -408,7 +456,10 @@ class ServePipeline:
     def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
         """Apply a departure batch to the cluster state (the merged-
         stream consumer; `ShardedServePipeline` overrides with the
-        per-shard route + in-scan pool credit)."""
+        per-shard route + in-scan pool credit). Queued cap windows
+        flush first: they were merged earlier and must read the
+        pre-departure aggregates."""
+        self._flush_caps()
         self.state = placement.remove_batch(
             self.state, jnp.asarray(servers), jnp.asarray(cores),
             jnp.asarray(p95_eff), jnp.asarray(is_uf))
@@ -416,14 +467,18 @@ class ServePipeline:
     # -- power-emergency plane (serve.emergency) ---------------------------
     def _apply_caps(self, batch: CapBatch, t: np.ndarray) -> None:
         """Consume one merged CAPPING run: split it into unique-chassis
-        sub-windows and step the emergency state through each in merged
-        order (`ShardedServePipeline` overrides the per-window kernel
-        with the per-shard route). Stamps are rebased to the first cap
-        stamp this pipeline ever saw: the f32 serving path stores the
-        emergency clocks in the state dtype, and epoch-second stamps
-        (~1e9) would otherwise quantize the 30 s lift/dwell windows
-        away — relative session time keeps sub-second resolution for
-        years of stream."""
+        sub-windows and *queue* them in merged order for fusion into
+        the next placement dispatch (`_place`). A cap touches only the
+        emergency state, and every mutation of the aggregates it reads
+        flushes the queue first (departures) or applies it ahead of
+        the mutation in the same dispatch (arrival batches), so the
+        deferred windows see exactly the aggregates they would have
+        seen dispatched standalone at their merged position. Stamps
+        are rebased to the first cap stamp this pipeline ever saw: the
+        f32 serving path stores the emergency clocks in the state
+        dtype, and epoch-second stamps (~1e9) would otherwise quantize
+        the 30 s lift/dwell windows away — relative session time keeps
+        sub-second resolution for years of stream."""
         if self.emergency_cfg is None:
             raise ValueError(
                 "received CAPPING events but the pipeline was built "
@@ -432,9 +487,17 @@ class ServePipeline:
             self._cap_epoch = float(t[0])
         t = np.asarray(t, np.float64) - self._cap_epoch
         for lo, hi in _unique_chassis_windows(batch.chassis):
-            out = self._cap_window(batch.chassis[lo:hi],
-                                   batch.power_w[lo:hi], t[lo:hi])
-            self.alarms += int(np.asarray(out.alarm).sum())
+            self._pending_caps.append(
+                (batch.chassis[lo:hi], batch.power_w[lo:hi], t[lo:hi]))
+
+    def _flush_caps(self) -> None:
+        """Apply queued cap sub-windows through the standalone kernel —
+        the path for windows no placement batch will carry (reads of
+        `emergency`/`alarms`, departures, end-of-stream `flush`)."""
+        pending, self._pending_caps = self._pending_caps, []
+        for chassis, power_w, t in pending:
+            out = self._cap_window(chassis, power_w, t)
+            self._alarms += int(np.asarray(out.alarm).sum())
 
     def _cap_window(self, chassis, power_w, t):
         """Apply one unique-chassis sample window (unsharded path)."""
@@ -442,10 +505,10 @@ class ServePipeline:
         pw, mask, ts = emergency.scatter_samples(
             self.n_chassis, chassis, power_w, t, jnp, dtype)
         fn = _cap_step_fn(self.emergency_cfg)
-        self.emergency, out = fn(self.state.gamma_nuf,
-                                 self.state.gamma_uf,
-                                 self.state.chassis_servers,
-                                 self.emergency, pw, mask, ts)
+        self._emergency, out = fn(self.state.gamma_nuf,
+                                  self.state.gamma_uf,
+                                  self.state.chassis_servers,
+                                  self._emergency, pw, mask, ts)
         return out
 
     def throttled_by_level(self) -> np.ndarray:
@@ -566,21 +629,45 @@ class ShardedServePipeline(ServePipeline):
     # -- sharded placement stage -------------------------------------------
     def _place(self, cores, is_uf, p95_eff, valid):
         cfg = self.config
-        self.sharded, servers, info = sharding.place_group_sharded(
+        kw = {}
+        if self._pending_caps:
+            kw = dict(emer=self._emergency, caps=self._sharded_caps(),
+                      ecfg=self.emergency_cfg)
+            self._pending_caps = []
+        out = sharding.place_group_sharded(
             self.sharded, np.asarray(cores), np.asarray(is_uf),
             np.asarray(p95_eff), np.asarray(valid), cfg.policy,
             self.cores_per_server, mesh=self.mesh,
             spill_rounds=cfg.spill_rounds,
-            rebalance=cfg.rebalance_tokens)
+            rebalance=cfg.rebalance_tokens, **kw)
+        if kw:
+            (self.sharded, servers, info, self._emergency,
+             alarms) = out
+            self._alarms += alarms
+        else:
+            self.sharded, servers, info = out
         self.spill_info = {k: self.spill_info[k] + info[k]
                            for k in self.spill_info}
         return servers.astype(np.int32)
+
+    def _sharded_caps(self):
+        """Densify queued sub-windows into the stacked (N, W, C/N)
+        per-shard operands of the fused home-round kernel."""
+        dtype = self.sharded.shards.free_cores.dtype
+        rows = [sharding.split_caps(self.sharded, c, p, t)
+                for c, p, t in self._pending_caps]
+        pw = jnp.asarray(np.stack([r[0] for r in rows], axis=1), dtype)
+        mask = jnp.asarray(np.stack([r[1] for r in rows], axis=1))
+        ts = jnp.asarray(np.stack([r[2] for r in rows], axis=1), dtype)
+        return pw, mask, ts
 
     def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
         """Route each departure to its owner shard (per-shard
         batches, `sharding.split_departures`) and credit the freed
         power tokens back to that shard's pool in the consuming scan
-        (`sharding.consume_departures`)."""
+        (`sharding.consume_departures`). Queued cap windows flush
+        first — they read pre-departure aggregates."""
+        self._flush_caps()
         self.sharded = sharding.remove_sharded(
             self.sharded, servers, cores, p95_eff, is_uf)
 
@@ -596,8 +683,8 @@ class ShardedServePipeline(ServePipeline):
         """Apply one unique-chassis sample window: route samples to
         their owner shards and run every shard's alarm + apportionment
         kernel concurrently (vmap, or shard_map on the mesh)."""
-        self.emergency, out = sharding.apply_caps_sharded(
-            self.emergency_cfg, self.sharded, self.emergency, chassis,
+        self._emergency, out = sharding.apply_caps_sharded(
+            self.emergency_cfg, self.sharded, self._emergency, chassis,
             power_w, t, mesh=self.mesh)
         return out
 

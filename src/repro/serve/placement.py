@@ -6,26 +6,40 @@ micro-batch in order (placements must see earlier placements — the
 same sequential semantics as the event-driven scheduler), and each
 step scores *all* servers at once.
 
-The rank-weight aggregation is reformulated sort-free, because a
-per-step argsort is the one operation XLA cannot make fast inside a
-scan (~150 us per 720-element sort on CPU — 25x the whole step
-budget):
+The rank-weight aggregation is reformulated sort-free AND
+scatter-free, because a per-step argsort is the one operation XLA
+cannot make fast inside a scan (~150 us per 720-element sort on CPU —
+25x the whole step budget) and a per-step `.at[].set` scatter is the
+next worst (~45 us each on the XLA CPU backend, vs ~1 us for the
+gathers / cumsums / fused compares everything below is built from):
 
   * a placement only changes the scores of the placed chassis'
     K = S/C servers (its kappa, plus the chosen server's packing/eta
-    term), so full-fleet stable ranks are *maintained incrementally*:
-    O(S*K) fused comparisons subtract the old Delta-keys and add the
-    new ones, and the Delta rows are recounted exactly — no sort after
-    the one batched argsort that seeds the scan;
-  * per-arrival feasibility: infeasible servers are strictly fuller,
-    so the packing subset rank is exactly `full_rank - n_infeasible`;
-    the power rule falls back to a prefix count of the feasibility
-    mask in rank order (scatter + cumsum + gather) only when some
-    server is infeasible — a lax.cond keeps that off the common path;
+    term), so the order structures are *maintained incrementally* — no
+    sort after the one batched argsort that seeds the scan. The
+    packing rank row recounts the one moved key exactly; the two power
+    orders are carried as *inverse* permutations (rank position ->
+    server) plus the score-by-server table: the K moved servers'
+    landing and vacated positions come from a fused O(K log S) binary
+    search over the carried order (`_delta_positions`), and every
+    surviving server keeps its relative order, so the recomposition is
+    closed-form complement indexing via a histogram + shared prefix
+    sum (`_compose_inverse`) — no S-sized scatter, no O(S*K) pass, no
+    window search;
+  * per-arrival feasibility and the objective are evaluated in power
+    *rank-position* space, so forward power ranks never need to
+    exist: gathering the feasibility mask through the inverse
+    permutation and prefix-counting it yields the power subset rank
+    at every position (gather + cumsum — branchless, no lax.cond,
+    identical integers on every path), and the packing subset rank is
+    exactly `full_rank - n_infeasible` because infeasible servers are
+    strictly fuller and hold a contiguous prefix of the packing
+    order;
   * the objective then mirrors `SchedulerPolicy.choose` operation for
     operation — `sum_r w_r * (1 - subset_rank_r/(n_feas-1))`, first
-    argmax — because even exactly-tied integer rank sums can resolve
-    differently once divided and weighted in floats.
+    argmax by server index (= min server id over float-maximal
+    positions) — because even exactly-tied integer rank sums can
+    resolve differently once divided and weighted in floats.
 
 Rank rows are (packing, power-for-UF, power-for-NUF) — the power score
 depends on the arriving VM's type, so both orders are maintained.
@@ -56,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import ClusterState, SchedulerPolicy
+from repro.serve import emergency
 
 #: `place_batch` outcome codes (in the returned server array).
 FAIL_CAPACITY = -1      # no feasible server (deployment failure)
@@ -155,14 +170,118 @@ def _before(s_j, j, s_i, i):
     return (s_j > s_i) | ((s_j == s_i) & (j < i))
 
 
-def _init_ranks(scores: jnp.ndarray) -> jnp.ndarray:
-    """(R, S) stable descending ranks (one batched argsort + scatter —
-    runs once per micro-batch, outside the scan)."""
+def _init_ranks(scores: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable descending ranks (R, S) plus the inverse permutations
+    (R, S) (rank position -> server) the scan maintains — one batched
+    argsort + scatter, once per micro-batch, outside the scan."""
     r, s = scores.shape
     perm = jnp.argsort(-scores, axis=-1, stable=True)
     rows = jnp.arange(r)[:, None]
-    return jnp.zeros((r, s), jnp.int32).at[rows, perm].set(
+    ranks = jnp.zeros((r, s), jnp.int32).at[rows, perm].set(
         jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (r, s)))
+    return ranks, perm.astype(jnp.int32)
+
+
+def _delta_positions(perm: jnp.ndarray, q_prev: jnp.ndarray,
+                     new_d: jnp.ndarray, old_d: jnp.ndarray,
+                     delta: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Landing + vacated positions of the K moved servers, by fused
+    binary search over the carried power orders.
+
+    `perm` (R', S) is rank position -> server, `q_prev` (R', S) the
+    score-by-server table consistent with it; the search comparator is
+    the stable-descending key ``(score, server-id)`` (`_before`), which
+    is a strict total order, so (a) the lower bound of a *new* key
+    `new_d` is exactly where it will land once every old delta key is
+    deleted and the new ones inserted — after removing the old-key /
+    intra-new corrections applied by the caller — and (b) the lower
+    bound of an *old* key `old_d` is its exact current position. Both
+    searches run fused (one (R', 2K) bracket, ceil(log2(S+1)) rounds
+    of two tiny flat gathers) — O(K log S) work, no O(S) pass."""
+    rp, s = perm.shape
+    k = delta.shape[0]
+    nb = max(int(np.ceil(np.log2(s + 1))), 1)
+    roff = jnp.arange(rp, dtype=jnp.int32)[:, None] * s
+    pflat = perm.reshape(-1)
+    qflat = q_prev.reshape(-1)
+    keys = jnp.concatenate([new_d, old_d], axis=1)          # (R', 2K)
+    ids = jnp.concatenate([delta, delta])[None, :]
+    lo = jnp.zeros((rp, 2 * k), jnp.int32)
+    hi = jnp.full((rp, 2 * k), s, jnp.int32)
+    for _ in range(nb):
+        # mid == s only in the degenerate lo == hi == s bracket, where
+        # both updates keep lo == hi; clamp so the gather stays legal
+        mid = jnp.minimum((lo + hi) >> 1, s - 1)
+        sm = pflat[(mid + roff).reshape(-1)].reshape(rp, 2 * k)
+        km = qflat[(sm + roff).reshape(-1)].reshape(rp, 2 * k)
+        b = _before(km, sm, keys, ids)
+        lo = jnp.where(b, mid + 1, lo)
+        hi = jnp.where(b, hi, mid)
+    return lo[:, :k], lo[:, k:]
+
+
+def _compose_inverse(perm: jnp.ndarray, fresh: jnp.ndarray,
+                     d_old: jnp.ndarray,
+                     delta: jnp.ndarray) -> jnp.ndarray:
+    """Scatter-light inverse-permutation maintenance.
+
+    `perm` (R', S) holds rank position -> server for R' rank rows;
+    after one placement only the K servers of the placed chassis
+    (`delta`, vacating old positions `d_old` and landing at new
+    positions `fresh`, both (R', K)) move — every other server keeps
+    its *relative* order (its pairwise keys are untouched). So the new
+    order is: the surviving servers in old order, merged around the K
+    landing positions. Position q that is not a landing spot holds the
+    j-th survivor (``j = q - #landings <= q``), which sat at the j-th
+    old position not vacated — the j-th element of the complement of
+    the sorted vacated positions `sd`, in closed form
+    ``g = j + #{k: sd[k] - k <= j}``.
+
+    The count term is a table lookup: ``v = sd - arange(K)`` is
+    nondecreasing, so a K-element histogram of v plus one prefix sum
+    tabulates ``m(j) = #{v <= j}`` for every j at once. Everything is
+    flat 1-D (rows concatenated, per-row corrections are the constant
+    K each row contributes), so the whole compose is two K-sized
+    scatters (XLA CPU folds these; only S-sized scatters hit the ~45us
+    cliff), one fused cumsum, and two flat gathers — no sort (K
+    elements order via pairwise counts), no O(S*K) pass."""
+    rp, s = perm.shape
+    k = delta.shape[0]
+    qpos = jnp.arange(s, dtype=jnp.int32)
+    kpos = jnp.arange(k, dtype=jnp.int32)
+    roff = jnp.arange(rp, dtype=jnp.int32)[:, None] * s
+    roffh = jnp.arange(rp, dtype=jnp.int32)[:, None] * (s + 1)
+    rk_corr = jnp.arange(rp, dtype=jnp.int32)[:, None] * k
+    # ascending vacated positions via pairwise-compare counting
+    # (positions are distinct: counts are a permutation of 0..K-1)
+    rkk = (d_old[:, None, :] < d_old[:, :, None]) \
+        .sum(-1, dtype=jnp.int32)                           # (R', K)
+    sd = ((rkk[:, None, :] == kpos[None, :, None])
+          * d_old[:, None, :]).sum(-1).astype(jnp.int32)
+    v = sd - kpos[None, :]                       # nondecreasing, >= 0
+    # landing positions: K-sized scatter of server-id + 1 (0 == none)
+    mark = jnp.zeros(rp * s, jnp.int32) \
+        .at[(fresh + roff).reshape(-1)].set(
+            jnp.broadcast_to(delta[None, :] + 1, (rp, k)).reshape(-1)) \
+        .reshape(rp, s)
+    is_new = mark > 0
+    inew = is_new.astype(jnp.int32)
+    hist = jnp.zeros(rp * (s + 1), jnp.int32) \
+        .at[(v + roffh).reshape(-1)].add(1)
+    # one fused prefix sum tabulates both the landing counts and m(j);
+    # each row of each segment sums to exactly K, so the cross-row /
+    # cross-segment carry is the deterministic correction below
+    both = jnp.cumsum(jnp.concatenate([inew.reshape(-1), hist]))
+    land_inc = both[:rp * s].reshape(rp, s) - rk_corr       # inclusive
+    m_flat = both[rp * s:]
+    j_q = qpos[None] - (land_inc - inew)
+    m_at = m_flat[(j_q + roffh).reshape(-1)].reshape(rp, s) \
+        - rp * k - rk_corr
+    g = j_q + m_at
+    moved = perm.reshape(-1)[
+        (jnp.minimum(g, s - 1) + roff).reshape(-1)].reshape(rp, s)
+    return jnp.where(is_new, mark - 1, moved)
 
 
 def _commit(st: DeviceClusterState, pool, srv, found, cores_i, uf_i,
@@ -244,7 +363,6 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
     idx = jnp.arange(n_servers, dtype=jnp.int32)
     use_power = policy.use_power_rule
     pw, qw = policy.packing_weight, policy.power_weight
-    rows_q = jnp.arange(2)[:, None]
     # With a single active rule, argmax of its rank weight IS argmax of
     # its raw score (rank is a monotone transform; stable argsort and
     # argmax both break ties toward the smaller server index), so the
@@ -255,41 +373,46 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
             state, pool, cores, is_uf, p95_eff, valid, rho_cap, policy,
             cps)
 
-    def subset_rank(r, feasible):
-        """Rank of each server among the feasible subset: prefix count
-        of the feasibility mask in full-rank order. Costs two XLA CPU
-        scatters (~45 us each) — slow-path only."""
-        by_rank = jnp.zeros(n_servers, jnp.int32) \
-            .at[r].set(feasible.astype(jnp.int32))
-        return (jnp.cumsum(by_rank) - by_rank)[r]
+    # both rules active implies use_power: the carry holds the packing
+    # rank row, the power score-by-server table, and the inverse
+    # permutations (rank position -> server) of the two power rows; the
+    # objective is evaluated in *position* space, so the forward power
+    # ranks never need to exist
+    assert n_servers < (1 << 15), \
+        "rank/feasibility bit-packing assumes n_servers < 2**15"
+    roff2 = jnp.arange(2, dtype=jnp.int32)[:, None] * n_servers
+    a = policy.alpha
 
     def body(carry, inp):
-        st, pl, scores, ranks = carry
+        st, pl, q_prev, pranks, perm = carry
         cores_i, uf_i, p95_i, valid_i = inp
-        raw_feas = st.free_cores >= cores_i
-        feasible = raw_feas & valid_i
+        feasible = (st.free_cores >= cores_i) & valid_i
         n_feas = feasible.sum()
         n_out = n_servers - n_feas
-        r_pow = jnp.where(uf_i, ranks[1], ranks[2]) if use_power \
-            else ranks[0]
+        perm_pow = jnp.where(uf_i, perm[0], perm[1])
 
-        # Subset rank of the packing rule is exactly r_p - n_out:
-        # infeasible servers are strictly *fuller*, so they hold a
-        # contiguous prefix of the packing order. The power rule needs
-        # the real prefix count only when some server is infeasible
-        # (cond keeps the two scatters off the common serving path).
-        sr_pack = ranks[0] - n_out.astype(jnp.int32)
-        sr_pow = jax.lax.cond(
-            (n_out == 0) | (n_feas == 0),
-            lambda _: r_pow,
-            lambda _: subset_rank(r_pow, feasible), None) if use_power \
-            else r_pow
+        # Everything is indexed by power-rank position p (server
+        # perm_pow[p]). Subset rank of the power rule is the prefix
+        # count of feasibility in rank order; subset rank of the
+        # packing rule is exactly rank - n_out, because infeasible
+        # servers are strictly *fuller* and hold a contiguous prefix
+        # of the packing order. Branchless and exact on every path
+        # (all-feasible reduces to prefix[p] counting every p' < p).
+        # Packing rank and feasibility ride one gather (bit 15).
+        comb = pranks | (feasible.astype(jnp.int32) << 15)
+        cg = comb[perm_pow]
+        by_rank = cg >= (1 << 15)
+        br = by_rank.astype(jnp.int32)
+        sr_pow = jnp.cumsum(br) - br
+        sr_pack = (cg & 0x7FFF) - n_out.astype(jnp.int32)
 
         # numpy-bitwise objective: exact integer rank ties can still
         # resolve differently once divided by (n-1) and weighted (the
         # float sums round per operand set), so mirror
         # `core.placement._rank_weight` + `choose` operation for
-        # operation and take the first argmax.
+        # operation. `choose` takes the first argmax by *server*
+        # index; in position space that is the smallest server id
+        # among the float-maximal feasible positions.
         denom = jnp.maximum(n_feas - 1, 1).astype(dtype)
         one = jnp.asarray(1.0, dtype)
         rw_guard = n_feas == 1
@@ -298,54 +421,65 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
             return jnp.where(rw_guard, one,
                              one - sr.astype(dtype) / denom)
 
-        obj = pw * rw(sr_pack)
-        if use_power:
-            obj = obj + qw * rw(sr_pow)
-        srv = jnp.argmax(jnp.where(feasible, obj,
-                                   jnp.asarray(-jnp.inf, dtype)))
+        obj = pw * rw(sr_pack) + qw * rw(sr_pow)
+        masked = jnp.where(by_rank, obj, jnp.asarray(-jnp.inf, dtype))
+        srv = jnp.min(jnp.where(masked == jnp.max(masked), perm_pow,
+                                n_servers))
         st2, pl2, out, srv = _commit(st, pl, srv, n_feas > 0, cores_i,
                                      uf_i, p95_i, valid_i, rho_cap)
         ch = st.chassis_of[srv]
-        # Incremental rank maintenance. Packing: only the placed
-        # server's score moved. Power: the placed chassis' K servers
-        # moved (kappa, plus the placed server's eta). Subtract the
-        # old moved keys' wins over each server, add the new ones, and
-        # recount the moved rows exactly under the new keys. A
+        # Incremental maintenance. Packing ranks: only the placed
+        # server's score moved — subtract its old key's wins over each
+        # server, add the new ones, recount the placed row exactly.
+        # Power orders: the placed chassis' K servers moved (kappa,
+        # plus the placed server's eta) — their new keys are recomputed
+        # on the K-subset with the exact `_rule_scores` float ops, the
+        # landing/vacated positions come from `_delta_positions`, and
+        # the inverse permutations recompose in closed form. A
         # rejected/failed arrival leaves scores unchanged, so every
         # correction cancels to zero.
-        new_scores = _rule_scores(st2, policy, cps)
-        p_old, p_new = scores[0], new_scores[0]
-        dcnt0 = _before(p_new[srv], srv, p_old, idx).astype(jnp.int32) \
+        p_old = 1.0 - st.free_cores / cps
+        p_new_s = 1.0 - st2.free_cores[srv] / cps
+        dcnt0 = _before(p_new_s, srv, p_old, idx).astype(jnp.int32) \
             - _before(p_old[srv], srv, p_old, idx).astype(jnp.int32)
-        fresh0 = _before(p_new, idx, p_new[srv], srv) \
-            .sum(dtype=jnp.int32)
-        ranks0 = (ranks[0] + dcnt0).at[srv].set(fresh0)
-        if use_power:
-            delta = st.chassis_servers[ch]                   # (K,)
-            q_old, q_new = scores[1:], new_scores[1:]        # (2, S)
-            old_d = q_old[:, delta]                          # (2, K)
-            new_d = q_new[:, delta]
-            dcnt = (_before(new_d[:, None, :], delta[None, None, :],
-                            q_old[:, :, None], idx[None, :, None])
-                    .astype(jnp.int32)
-                    - _before(old_d[:, None, :], delta[None, None, :],
-                              q_old[:, :, None], idx[None, :, None])
-                    .astype(jnp.int32)).sum(-1, dtype=jnp.int32)
-            fresh = _before(q_new[:, None, :], idx[None, None, :],
+        fresh0 = _before(p_old, idx, p_new_s, srv) \
+            .sum(dtype=jnp.int32) \
+            - _before(p_old[srv], srv, p_new_s, srv).astype(jnp.int32)
+        pranks2 = jnp.where(idx == srv, fresh0, pranks + dcnt0)
+        delta = st.chassis_servers[ch]                   # (K,)
+        # K-subset twin of `_rule_scores` rows 1-2 (same float ops on
+        # the same operands, so the carried table stays bit-identical
+        # to a full recompute)
+        kappa2 = 1.0 - st2.rho_peak[ch] \
+            / jnp.maximum(st2.rho_max[ch], 1e-9)
+        diff = st2.gamma_nuf[delta] - st2.gamma_uf[delta]
+        eta2 = 0.5 * (1.0 + jnp.stack([diff, -diff]) / cps)
+        new_d = a * kappa2 + (1.0 - a) * eta2            # (2, K)
+        old_d = q_prev[:, delta]
+        q_prev2 = q_prev.reshape(-1) \
+            .at[(delta[None, :] + roff2).reshape(-1)] \
+            .set(new_d.reshape(-1)).reshape(2, n_servers)
+        lb_new, d_old = _delta_positions(perm, q_prev, new_d, old_d,
+                                         delta)
+        # lower bound of a new key counts old delta keys and the other
+        # new keys that sort before it; remove the former (they leave
+        # the order), add this key's rank among the new keys
+        before_old = _before(old_d[:, None, :], delta[None, None, :],
+                             new_d[:, :, None], delta[None, :, None]) \
+            .sum(-1, dtype=jnp.int32)
+        intra_new = _before(new_d[:, None, :], delta[None, None, :],
                             new_d[:, :, None], delta[None, :, None]) \
-                .sum(-1, dtype=jnp.int32)
-            ranks_q = (ranks[1:] + dcnt) \
-                .at[rows_q, delta[None, :]].set(fresh)
-            ranks2 = jnp.concatenate([ranks0[None], ranks_q], 0)
-        else:
-            ranks2 = ranks0[None]
-        return (st2, pl2, new_scores, ranks2), out
+            .sum(-1, dtype=jnp.int32)
+        fresh = lb_new - before_old + intra_new
+        perm2 = _compose_inverse(perm, fresh, d_old, delta)
+        return (st2, pl2, q_prev2, pranks2, perm2), out
 
     inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
               jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
     scores0 = _rule_scores(state, policy, cps)
-    (state, pool, _, _), servers = jax.lax.scan(
-        body, (state, pool, scores0, _init_ranks(scores0)), inputs)
+    ranks0, perm0 = _init_ranks(scores0)
+    (state, pool, _, _, _), servers = jax.lax.scan(
+        body, (state, pool, scores0[1:], ranks0[0], perm0[1:]), inputs)
     return state, servers, pool
 
 
@@ -369,6 +503,49 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
         state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
         float(cores_per_server))
     return state, servers
+
+
+def _apply_cap_windows(ecfg, state: DeviceClusterState, emer, pw, mask,
+                       ts):
+    """Apply W queued power-emergency sample sub-windows against the
+    *current* cluster aggregates, inside whatever jit this is traced
+    into. pw/mask/ts: (W, C) dense `masked_step` operands in merged
+    order. The windows were all merged *before* the arrival batch this
+    rides with, and a cap touches only the emergency state (never the
+    placement aggregates), so applying them back-to-back ahead of the
+    placement scan is exactly the semantics of dispatching each window
+    on its own — minus W extra dispatches. Returns
+    ``(emergency_state, alarm_count)``."""
+    rho_lv = emergency.chassis_rho_levels(
+        state.gamma_nuf, state.gamma_uf, state.chassis_servers, jnp)
+
+    def body(em, xs):
+        p, m, t = xs
+        em2, out = emergency.masked_step(ecfg, em, rho_lv, p, m, t, jnp)
+        return em2, out.alarm.sum()
+
+    emer, alarms = jax.lax.scan(body, emer, (pw, mask, ts))
+    return emer, alarms.sum()
+
+
+@partial(jax.jit,
+         static_argnames=("policy", "cores_per_server", "ecfg"))
+def place_batch_caps(state: DeviceClusterState, emer, pw, mask, ts,
+                     cores, is_uf, p95_eff, valid, rho_cap,
+                     policy: SchedulerPolicy, cores_per_server: int,
+                     ecfg):
+    """`place_batch` with the pending power-emergency cap sub-windows
+    fused in front of the placement scan: one compiled dispatch steps
+    the emergency state through every queued (W, C) sample window
+    (`_apply_cap_windows`) and then places the arrival batch — an
+    emergency sweep costs zero extra dispatches on the serving path.
+    `ecfg` is the static `emergency.EmergencyConfig`. Returns
+    ``(new_state, servers, emergency_state, alarm_count)``."""
+    emer, alarms = _apply_cap_windows(ecfg, state, emer, pw, mask, ts)
+    state, servers, _ = _place_batch_impl(
+        state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
+        float(cores_per_server))
+    return state, servers, emer, alarms
 
 
 @partial(jax.jit, static_argnames=("policy", "cores_per_server"))

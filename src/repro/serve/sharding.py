@@ -60,7 +60,8 @@ from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
 from repro.serve import emergency
 from repro.serve.placement import (DeviceClusterState, FAIL_CAPACITY,
-                                   _place_batch_impl, remove_batch)
+                                   _apply_cap_windows, _place_batch_impl,
+                                   remove_batch)
 
 #: Mesh axis name the serve shards map over.
 SHARD_AXIS = "shard"
@@ -255,36 +256,54 @@ def _pack_round(pending: np.ndarray, targets: np.ndarray, n_shards: int,
 
 
 @lru_cache(maxsize=None)
-def _round_fn(policy: SchedulerPolicy, cps: float, mesh):
+def _round_fn(policy: SchedulerPolicy, cps: float, mesh, ecfg=None):
     """Compiled one-round kernel: gather each shard's routed slice,
     place it on the local state (vmap or shard_map over SHARD_AXIS),
-    translate winners to global server ids."""
+    translate winners to global server ids.
+
+    With `ecfg` (a static `emergency.EmergencyConfig`) the kernel
+    additionally takes the per-shard emergency state and queued
+    (N, W, C/N) cap-sample windows and steps them *ahead of the
+    placement scan in the same dispatch*
+    (`placement._apply_cap_windows`) — the fused form the pipeline
+    routes the home round through, so an emergency sweep costs zero
+    extra vmap/shard_map dispatches. Spillover rounds use the plain
+    (``ecfg=None``) kernel: the windows apply exactly once."""
     place = partial(_place_batch_impl, policy=policy, cps=cps)
 
-    def one_shard(st, pool, cores, is_uf, p95, attempt, cap):
-        return place(st, pool, cores, is_uf, p95, attempt, cap)
+    def one_shard(st, pool, cores, is_uf, p95, attempt, cap, *caps):
+        if ecfg is None:
+            return place(st, pool, cores, is_uf, p95, attempt, cap)
+        emer, pw, mask, ts = caps
+        emer2, alarms = _apply_cap_windows(ecfg, st, emer, pw, mask, ts)
+        st2, srv, pool2 = place(st, pool, cores, is_uf, p95, attempt,
+                                cap)
+        return st2, srv, pool2, emer2, alarms
+
+    n_in = 7 if ecfg is None else 11
+    n_out = 3 if ecfg is None else 5
 
     def fn(shards, pool, global_server, rho_cap, idx, attempt, cores,
-           is_uf, p95):
+           is_uf, p95, *caps):
         c, u, p = cores[idx], is_uf[idx], p95[idx]
+        operands = (shards, pool, c, u, p, attempt, rho_cap) + caps
         if mesh is None:
-            st2, srv, pool2 = jax.vmap(one_shard)(
-                shards, pool, c, u, p, attempt, rho_cap)
+            out = jax.vmap(one_shard)(*operands)
         else:
-            def per(st, pl, c1, u1, p1, a1, rc):
+            def per(*args):
                 sq = partial(jax.tree.map, lambda x: x[0])
-                s2, sv, pl2 = one_shard(sq(st), pl[0], c1[0], u1[0],
-                                        p1[0], a1[0], rc[0])
-                return (jax.tree.map(lambda x: x[None], s2), sv[None],
-                        pl2[None])
+                res = one_shard(*(sq(a) for a in args))
+                return jax.tree.map(lambda x: x[None], res)
             spec = P(SHARD_AXIS)
-            st2, srv, pool2 = shard_map(
-                per, mesh=mesh,
-                in_specs=(spec,) * 7, out_specs=(spec, spec, spec))(
-                shards, pool, c, u, p, attempt, rho_cap)
+            out = shard_map(per, mesh=mesh, in_specs=(spec,) * n_in,
+                            out_specs=(spec,) * n_out)(*operands)
+        st2, srv, pool2 = out[:3]
         glob = jnp.take_along_axis(global_server, jnp.maximum(srv, 0),
                                    axis=1)
-        return st2, pool2, jnp.where(srv >= 0, glob, srv)
+        glob = jnp.where(srv >= 0, glob, srv)
+        if ecfg is None:
+            return st2, pool2, glob
+        return st2, pool2, glob, out[3], out[4].sum()
 
     return jax.jit(fn)
 
@@ -293,7 +312,8 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
                         valid, policy: SchedulerPolicy,
                         cores_per_server: int, *, mesh=None,
                         spill_rounds: int | None = None,
-                        rebalance: bool = True):
+                        rebalance: bool = True, emer=None, caps=None,
+                        ecfg=None):
     """Place one arrival batch through the full sharded protocol.
 
     cores/is_uf/p95_eff/valid: (B,) host arrays with B divisible by
@@ -305,10 +325,22 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     feasibility; docs/sharding.md). `rebalance` equalizes leftover
     tokens across shards between rounds (conserves the total).
 
+    `emer`/`caps`/`ecfg` fuse the power-emergency sweep into the home
+    round's dispatch: `caps` is ``(pw, mask, ts)`` stacked (N, W, C/N)
+    sample windows (the `split_caps` layout, one row per queued
+    unique-chassis window in merged order) and `emer` the per-shard
+    `EmergencyState`. The windows step *before* the placement scan in
+    the same compiled call — bit-identical to W standalone
+    `apply_caps_sharded` dispatches, because caps touch only the
+    emergency state and the criticality aggregates are the pre-batch
+    ones either way. Spillover rounds always run the plain kernel.
+
     Returns ``(sharded_state, servers, info)``: servers is (B,) global
     ids with FAIL_* codes (a still-failed arrival reports the
     most-severe code it saw across rounds), info counts
-    ``{"rounds", "spilled", "spill_admitted"}``."""
+    ``{"rounds", "spilled", "spill_admitted"}``. With `emer` it
+    returns ``(sharded_state, servers, info, emergency_state,
+    alarms)``."""
     n = sharded.n_shards
     cores = np.asarray(cores, np.float64)
     is_uf = np.asarray(is_uf, bool)
@@ -325,13 +357,18 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     cores_d = jnp.asarray(cores, dtype)
     uf_d = jnp.asarray(is_uf)
     p95_d = jnp.asarray(p95_eff, dtype)
+    fused = emer is not None
+    if fused:
+        fn0 = _round_fn(policy, float(cores_per_server), mesh, ecfg)
+        pw, mask, ts = (jnp.asarray(a) for a in caps)
+        alarms = 0
 
     result = np.full(b, FAIL_CAPACITY, np.int64)
     pending = np.arange(b)[valid]
     shards, pool = sharded.shards, sharded.pool
     info = {"rounds": 0, "spilled": 0, "spill_admitted": 0}
     for rnd in range(spill_rounds + 1):
-        if not len(pending):
+        if not len(pending) and not (rnd == 0 and fused):
             break
         if rnd > 0:
             info["spilled"] += len(pending)
@@ -339,10 +376,15 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
                 pool = jnp.full_like(pool, pool.mean())
         targets = route_shard(b, n, rnd)
         idx, attempt = _pack_round(pending, targets, n, b_loc)
-        shards, pool, glob = fn(shards, pool, sharded.global_server,
-                                sharded.rho_cap, jnp.asarray(idx),
-                                jnp.asarray(attempt), cores_d, uf_d,
-                                p95_d)
+        operands = (shards, pool, sharded.global_server,
+                    sharded.rho_cap, jnp.asarray(idx),
+                    jnp.asarray(attempt), cores_d, uf_d, p95_d)
+        if rnd == 0 and fused:
+            shards, pool, glob, emer, al = fn0(*operands, emer, pw,
+                                               mask, ts)
+            alarms = int(al)
+        else:
+            shards, pool, glob = fn(*operands)
         out = np.asarray(glob)[attempt]
         arrivals = idx[attempt]
         admitted = out >= 0
@@ -354,7 +396,10 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
         result[failed] = np.minimum(result[failed], out[~admitted])
         pending = np.sort(failed)
         info["rounds"] = rnd + 1
-    return (sharded._replace(shards=shards, pool=pool), result, info)
+    new = sharded._replace(shards=shards, pool=pool)
+    if fused:
+        return new, result, info, emer, alarms
+    return new, result, info
 
 
 def split_departures(sharded: ShardedState, servers, cores, p95_eff,

@@ -1,0 +1,144 @@
+"""Dispatch-count guard for the fused emergency sweep (DESIGN.md §13).
+
+The perf contract: a serve batch that carries queued cap windows costs
+exactly the placement dispatch — the emergency sweep rides inside it
+(`placement.place_batch_caps` unsharded, the `ecfg` home-round kernel
+sharded) and the standalone cap kernels never run on the streamed
+path. These tests count the module-level entry points so the sweep can
+never silently regrow an extra dispatch."""
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core.placement import ClusterState
+from repro.core.predictor import train_service
+from repro.serve import (EmergencyConfig, ServeConfig, ServePipeline,
+                         ShardedServeConfig, ShardedServePipeline,
+                         device_state)
+from repro.serve import pipeline as pipeline_mod
+from repro.serve import placement, sharding
+from repro.serve.featurizer import table_from_history
+from repro.sim.telemetry import arrival_batch, generate_population
+
+BUDGET_TIGHT = 1480.0
+
+
+def _loaded_state(seed=3, n_servers=48, per_chassis=12, cores=40,
+                  n=260):
+    rng = np.random.default_rng(seed)
+    st = ClusterState(n_servers=n_servers, cores_per_server=cores,
+                      chassis_of_server=np.arange(n_servers)
+                      // per_chassis,
+                      n_chassis=n_servers // per_chassis)
+    for _ in range(n):
+        srv = int(rng.integers(0, n_servers))
+        c = int(rng.integers(1, 8))
+        if st.free_cores[srv] >= c:
+            st.place(srv, c, float(rng.uniform(0.2, 1)),
+                     bool(rng.random() < 0.5))
+    return st
+
+
+@pytest.fixture(scope="module")
+def guard_world():
+    pop = generate_population(300, seed=1)
+    hist, arrivals = F.split_history_arrivals(pop)
+    labels = hist.labels.astype(np.float64)
+    aggs = F.subscription_aggregates(hist, labels)
+    svc = train_service(F.build_features(hist, aggs),
+                        labels.astype(np.int64),
+                        F.p95_bucket([v.p95_util for v in hist.vms]),
+                        n_trees=12)
+    return svc, hist, labels, arrivals
+
+
+def _first_n(batch, n):
+    return type(batch)(*(getattr(batch, f)[:n]
+                         for f in type(batch).__dataclass_fields__))
+
+
+def _cfg():
+    return EmergencyConfig.from_model(BUDGET_TIGHT)
+
+
+def test_unsharded_sweep_rides_placement_dispatch(guard_world,
+                                                  monkeypatch):
+    svc, hist, labels, arrivals = guard_world
+    cap = max(v.subscription for v in hist.vms) + 8
+    pipe = ServePipeline(
+        svc, table_from_history(hist, labels, cap),
+        device_state(_loaded_state()), cores_per_server=40,
+        blades_per_chassis=12, config=ServeConfig(batch_size=32),
+        emergency_cfg=_cfg())
+    calls = {"fused": 0, "plain": 0, "standalone": 0}
+    real_fused = placement.place_batch_caps
+    real_plain = placement.place_batch
+    real_standalone = pipeline_mod._cap_step_fn
+    monkeypatch.setattr(
+        placement, "place_batch_caps",
+        lambda *a, **k: (calls.__setitem__("fused", calls["fused"] + 1),
+                         real_fused(*a, **k))[1])
+    monkeypatch.setattr(
+        placement, "place_batch",
+        lambda *a, **k: (calls.__setitem__("plain", calls["plain"] + 1),
+                         real_plain(*a, **k))[1])
+    monkeypatch.setattr(
+        pipeline_mod, "_cap_step_fn",
+        lambda cfg: (calls.__setitem__("standalone",
+                                       calls["standalone"] + 1),
+                     real_standalone(cfg))[1])
+    # one full emergency sweep (4 unique chassis -> 1 window) ...
+    pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
+                t=np.array([1.0, 2.0, 3.0, 4.0]))
+    # ... then one full micro-batch of arrivals
+    out = pipe.submit_to(0, _first_n(arrival_batch(arrivals), 32),
+                         t=np.arange(32, dtype=np.float64) + 10.0)
+    assert len(out) == 1
+    # fused budget: the sweep + batch is ONE placement dispatch
+    assert calls["fused"] == 1
+    assert calls["plain"] == 0
+    assert calls["standalone"] == 0
+    assert pipe.alarms >= 1                  # the sweep really applied
+    assert calls["standalone"] == 0          # ... without a flush
+
+
+def test_sharded_sweep_rides_home_round(guard_world, monkeypatch):
+    svc, hist, labels, arrivals = guard_world
+    cap = max(v.subscription for v in hist.vms) + 8
+    pipe = ShardedServePipeline(
+        svc, table_from_history(hist, labels, cap),
+        device_state(_loaded_state()), cores_per_server=40,
+        blades_per_chassis=12,
+        config=ShardedServeConfig(batch_size=32, n_shards=4),
+        emergency_cfg=_cfg())
+    counts = {"rounds": 0, "fused_rounds": 0, "standalone": 0}
+    real_round = sharding._round_fn
+    real_caps = sharding.apply_caps_sharded
+
+    def counting_round(policy, cps, mesh, ecfg=None):
+        fn = real_round(policy, cps, mesh, ecfg)
+
+        def wrapped(*a, **k):
+            counts["rounds"] += 1
+            counts["fused_rounds"] += ecfg is not None
+            return fn(*a, **k)
+        return wrapped
+
+    monkeypatch.setattr(sharding, "_round_fn", counting_round)
+    monkeypatch.setattr(
+        sharding, "apply_caps_sharded",
+        lambda *a, **k: (counts.__setitem__(
+            "standalone", counts["standalone"] + 1),
+            real_caps(*a, **k))[1])
+    pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
+                t=np.array([1.0, 2.0, 3.0, 4.0]))
+    out = pipe.submit_to(0, _first_n(arrival_batch(arrivals), 32),
+                         t=np.arange(32, dtype=np.float64) + 10.0)
+    assert len(out) == 1
+    # fused budget: one home round carrying the sweep, zero standalone
+    # cap dispatches; spill rounds only if the home round rejected
+    assert counts["fused_rounds"] == 1
+    assert counts["rounds"] <= 1 + pipe.spill_info["rounds"]
+    assert counts["standalone"] == 0
+    assert pipe.alarms >= 1
+    assert counts["standalone"] == 0

@@ -7,7 +7,9 @@ import pytest
 from repro.core.forest import train_gradient_boosting, train_random_forest
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.forest.ops import forest_predict
+from repro.kernels.forest.forest import (forest_predict_pallas,
+                                         resolve_block_t)
+from repro.kernels.forest.ops import forest_predict, pack_forest
 from repro.kernels.forest.ref import forest_predict_ref
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_ref
@@ -59,6 +61,41 @@ def test_forest_kernel_vs_oracle(trainer, kind, n_classes):
     p_pal = np.asarray(forest_predict(f, x))
     np.testing.assert_allclose(p_ref, p_np, atol=1e-5)
     np.testing.assert_allclose(p_pal, p_np, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def packed_forest():
+    x = RNG.normal(0, 1, (300, 7)).astype(np.float32)
+    y = RNG.integers(0, 3, 300)
+    y[x[:, 0] > 0.3] = 0
+    f = train_random_forest(x, y, 3, n_trees=12, depth=4)
+    return f, x, f.predict_proba_np(x), pack_forest(f)
+
+
+@pytest.mark.parametrize("block_b", [32, 128])
+@pytest.mark.parametrize("block_t", [1, 2, 3, 4, 6, 12])
+def test_forest_tiled_kernel_tile_shape_parity(packed_forest, block_b,
+                                               block_t):
+    """The (batch, trees) grid tiling is a pure execution-schedule
+    choice: every tile shape must reproduce the untiled oracle
+    bit-for-bit up to float accumulation order."""
+    f, x, p_np, (gather, thr, leaf, t, d, kind) = packed_forest
+    b = x.shape[0]
+    pad = (-b) % block_b
+    xp = jnp.asarray(np.vstack([x, np.zeros((pad, x.shape[1]),
+                                            np.float32)]))
+    summed = forest_predict_pallas(xp, gather, thr, leaf, t, d,
+                                   block_b=block_b, block_t=block_t,
+                                   interpret=True)[:b]
+    np.testing.assert_allclose(np.asarray(summed) / t, p_np, atol=1e-5)
+
+
+def test_resolve_block_t_clamps_to_divisor():
+    assert resolve_block_t(12, None) == 12
+    assert resolve_block_t(12, 48) == 12
+    assert resolve_block_t(12, 5) == 4      # largest divisor <= 5
+    assert resolve_block_t(12, 1) == 1
+    assert resolve_block_t(7, 3) == 1       # prime ensemble degrades
 
 
 # --- flash attention -------------------------------------------------------
