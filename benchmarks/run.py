@@ -43,6 +43,7 @@ DRIVERS = (
      "BENCH_serve_ingest.json"),
     ("serve_emergency", "benchmarks.serve_emergency",
      "BENCH_serve_emergency.json"),
+    ("serve_obs", "benchmarks.serve_obs", "BENCH_serve_obs.json"),
     ("forest_kernel", "benchmarks.forest_kernel",
      "BENCH_forest_kernel.json"),
     ("roofline", "benchmarks.roofline_report", None),

@@ -1,0 +1,106 @@
+"""Fleet observability plane (DESIGN.md §14).
+
+Three pillars, one bundle:
+
+  * `registry` — a host-side `MetricsRegistry` of counters, gauges,
+    and log-bucketed histograms, fed by the in-scan counter outputs
+    of the placement/sharding/emergency kernels and exported as
+    Prometheus text or a JSON snapshot.
+  * `audit` — an `AuditTrail` ring recording one decision tuple per
+    arrival (chosen chassis, rule, fail reason, pool state) so a
+    capped critical VM can be explained post-hoc.
+  * `tracer` — a `SpanTracer` timing each pipeline stage per batch
+    (ingest -> merge -> featurize -> infer -> place -> commit, plus
+    emergency sweeps and migrations) with an optional
+    ``jax.profiler`` hook.
+
+All of it lives on the host side of the dispatch boundary: kernels
+gained *extra outputs*, never extra inputs, so an instrumented run is
+decision-bit-identical to an uninstrumented one (asserted in
+``tests/test_obs.py``). Construct one `Observability` per pipeline
+and pass it as the ``obs=`` keyword of `serve.pipeline.ServePipeline`
+/ `ShardedServePipeline` / `sim.scheduler_sim.simulate`; render it
+with `launch.monitor`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .audit import AuditRecord, AuditTrail, OUTCOME_NAMES
+from .registry import (LEVEL_NAMES, Counter, Gauge, Histogram,
+                       MetricsRegistry)
+from .tracing import Span, SpanTracer
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "LEVEL_NAMES",
+    "AuditRecord", "AuditTrail", "OUTCOME_NAMES",
+    "Span", "SpanTracer",
+    "Observability", "record_sim_metrics",
+]
+
+
+@dataclass
+class Observability:
+    """The per-pipeline observability bundle: one registry, one audit
+    ring, one span tracer, sharing lifetime with the pipeline they
+    instrument. ``audit=None`` / ``tracer=None`` at construction turn
+    those pillars off individually (the registry is always present —
+    it is the cheap pillar)."""
+
+    registry: MetricsRegistry = field(default_factory=MetricsRegistry)
+    audit: AuditTrail | None = None
+    tracer: SpanTracer | None = None
+
+    @classmethod
+    def full(cls, audit_capacity: int = 4096,
+             span_capacity: int = 4096) -> "Observability":
+        """All three pillars on — the configuration the overhead
+        benchmark (`benchmarks/serve_obs.py`) measures."""
+        reg = MetricsRegistry()
+        return cls(registry=reg,
+                   audit=AuditTrail(capacity=audit_capacity),
+                   tracer=SpanTracer(reg, capacity=span_capacity))
+
+    def span(self, name: str):
+        """Span context for `name` (no-op context when tracing off)."""
+        if self.tracer is not None:
+            return self.tracer.span(name)
+        import contextlib
+        return contextlib.nullcontext()
+
+
+def record_sim_metrics(registry: MetricsRegistry, metrics) -> None:
+    """Export a `sim.scheduler_sim.SimMetrics` into `registry` under
+    the serve-plane schema, so sim runs and live serve runs snapshot
+    identically: per-level throttled-seconds become
+    ``emergency_throttled_seconds_total{level=...}`` (level order =
+    `LEVEL_NAMES` = the emergency plane's apportionment priority
+    order), alarms/migrations/placements/failures become counters,
+    and the scalar quality ratios become gauges."""
+    g = registry.gauge
+    c = registry.counter
+    c("sim_placements_total",
+      help="VM placements committed by the simulator").inc(
+          metrics.placements)
+    c("sim_failures_total",
+      help="VM placements rejected by the simulator").inc(
+          metrics.failures)
+    g("sim_failure_rate", help="failures / placements").set(
+        metrics.failure_rate)
+    g("sim_empty_server_ratio",
+      help="mean ratio of empty servers over samples").set(
+          metrics.empty_server_ratio)
+    g("sim_chassis_score_std",
+      help="mean std of chassis packing scores").set(
+          metrics.chassis_score_std)
+    g("sim_server_score_std",
+      help="mean std of server packing scores").set(
+          metrics.server_score_std)
+    for level, secs in zip(LEVEL_NAMES, metrics.throttled_s):
+        c("emergency_throttled_seconds_total",
+          help="seconds of frequency capping by criticality level",
+          level=level).inc(float(secs))
+    c("emergency_alarms_total",
+      help="power-emergency alarms raised").inc(metrics.alarms)
+    c("emergency_migrations_total",
+      help="mitigation migrations executed").inc(metrics.migrations)

@@ -31,9 +31,11 @@ from repro.serve.pipeline import (
     ShardedServePipeline)
 from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    FAIL_TOKENS, DeviceClusterState,
-                                   device_state, fresh_state,
-                                   place_batch, place_batch_pooled,
-                                   remove_batch, score_chassis_batch,
+                                   SweepCounters, device_state,
+                                   fresh_state, outcome_counters,
+                                   place_batch, place_batch_caps,
+                                   place_batch_pooled, remove_batch,
+                                   score_chassis_batch,
                                    score_server_batch)
 from repro.serve.sharding import (SHARD_AXIS, ShardedState,
                                   apply_caps_sharded, chassis_to_shard,
@@ -60,7 +62,8 @@ __all__ = [
     "mitigation_due", "reset_dwell", "sampled_power",
     "scatter_samples", "throttled_by_level", "util_from_power",
     "LiveVMs", "MigrationPlan", "plan_migrations",
-    "DeviceClusterState", "device_state", "fresh_state", "place_batch",
+    "DeviceClusterState", "SweepCounters", "device_state", "fresh_state",
+    "outcome_counters", "place_batch", "place_batch_caps",
     "place_batch_pooled", "remove_batch", "score_chassis_batch",
     "score_server_batch",
     "FAIL_CAPACITY", "FAIL_POWER", "FAIL_TOKENS",

@@ -142,6 +142,7 @@ class EmergencyOutputs(NamedTuple):
     alarm: Any         # (..., C) bool
     cut_w: Any         # (..., C) — required reduction past the target
     leftover_w: Any    # (..., C) — cut no floor absorbed (RAPL trigger)
+    cut_by_level_w: Any  # (..., C, L) — watts removed per crit level
 
 
 def init_emergency(n_chassis: int, batch_shape=(), xp=np,
@@ -251,9 +252,17 @@ def emergency_step(cfg: EmergencyConfig, st: EmergencyState, rho_lv,
     last_t = xp.broadcast_to(t, st.last_t.shape).astype(st.last_t.dtype)
 
     p_after = sampled_power(cfg, rho_lv, util, pstate, rapl, xp)
+    # per-level watts removed at the post-action settings — the same
+    # g as `sampled_power` uses, so cut_by_level decomposes the
+    # (p_full - p_after) reduction by criticality level
+    gtab = xp.asarray(dyn_scale(FREQ_TABLE), dtype)
+    g = xp.where(rapl[..., None],
+                 gtab[RaplController.backstop_pstate()], gtab[pstate])
+    cut_lv = dyn_full * (1 - g)
     st2 = EmergencyState(pstate, rapl, capped_s, clear_s,
                          throttled_s.astype(dtype), last_t)
-    return st2, EmergencyOutputs(p_full, p_after, alarm, cut, leftover)
+    return st2, EmergencyOutputs(p_full, p_after, alarm, cut, leftover,
+                                 cut_lv)
 
 
 def masked_step(cfg: EmergencyConfig, st: EmergencyState, rho_lv,
@@ -280,7 +289,9 @@ def masked_step(cfg: EmergencyConfig, st: EmergencyState, rho_lv,
         xp.where(mask, out.power_after_w, zero),
         mask & out.alarm,
         xp.where(mask, out.cut_w, zero),
-        xp.where(mask, out.leftover_w, zero))
+        xp.where(mask, out.leftover_w, zero),
+        xp.where(mask[..., None], out.cut_by_level_w,
+                 zero[..., None]))
 
 
 def scatter_samples(n_chassis: int, chassis, power_w, t, xp=np,

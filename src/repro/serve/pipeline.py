@@ -29,6 +29,8 @@ micro-batches. `submit`/`depart` are the 1-host special case;
 """
 from __future__ import annotations
 
+import contextlib
+import time
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -39,6 +41,7 @@ import numpy as np
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
+from repro.obs import LEVEL_NAMES, Observability
 from repro.serve import admission, emergency, placement, sharding
 from repro.serve.featurizer import (
     SubscriptionTable, featurize_batch, ingest_population, shard_table,
@@ -152,10 +155,19 @@ class ServePipeline:
                  chassis_budget_w=None,
                  power_model: ServerPowerModel | None = None,
                  blades_per_chassis: int | None = None,
-                 emergency_cfg: emergency.EmergencyConfig | None = None):
+                 emergency_cfg: emergency.EmergencyConfig | None = None,
+                 obs: Observability | None = None):
         self.config = config or ServeConfig()
         self.table = table
         self.state = state
+        # observability plane (repro.obs, DESIGN.md §14) — purely
+        # host-side consumers of outputs the kernels already produce,
+        # so obs on/off never changes a decision
+        self.obs = obs
+        self._batches = 0
+        self._has_pool = False      # sharded subclass may flip this
+        self._chassis_of_host = np.asarray(state.chassis_of)
+        self._rule_idx = self._policy_rule_index(self.config.policy)
         self.cores_per_server = int(cores_per_server)
         self._kernel = resolve_kernel(self.config.kernel)
         # double-buffered model: index _active serves, 1-_active packs
@@ -221,6 +233,109 @@ class ServePipeline:
         self._flush_caps()
         return self._alarms
 
+    # -- observability (repro.obs, DESIGN.md §14) --------------------------
+    @staticmethod
+    def _policy_rule_index(policy: SchedulerPolicy) -> int:
+        """Admission-rule index recorded into the audit trail: 0 =
+        packing rule only (NoRule baseline), 1 = power rule only, 2 =
+        combined weighted aggregation (the paper's default)."""
+        if not policy.use_power_rule or policy.power_weight == 0:
+            return 0
+        if policy.packing_weight == 0:
+            return 1
+        return 2
+
+    def _span(self, name: str):
+        """Span context for one pipeline stage (no-op without obs)."""
+        if self.obs is not None:
+            return self.obs.span(name)
+        return contextlib.nullcontext()
+
+    def _pool_tokens_left(self) -> float:
+        """Remaining power tokens recorded into audit rows (+inf when
+        no cluster watt budget bounds admission — the unsharded
+        pipeline and unbudgeted sharded pipelines)."""
+        return float("inf")
+
+    def _record_batch(self, batch: ArrivalBatch, res: ServeResult) -> None:
+        """Fold one served batch's decisions into the metrics registry
+        and audit trail — a pure host-side reduction of outputs the
+        placement kernel already returned (`placement.
+        outcome_counters`), so recording can never perturb a
+        decision."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        self._batches += 1
+        b = len(res.server)
+        valid = np.ones(b, bool)
+        cnt = placement.outcome_counters(
+            res.server, valid, np.asarray(batch.cores), res.p95_eff)
+        reg.counter("serve_batches_total",
+                    help="micro-batches served").inc()
+        reg.counter("serve_arrivals_total",
+                    help="arrivals decided").inc(b)
+        reg.counter("serve_admits_total",
+                    help="arrivals admitted").inc(cnt["admits"])
+        for reason, key in (("capacity", "fail_capacity"),
+                            ("power", "fail_power"),
+                            ("tokens", "fail_tokens")):
+            reg.counter("serve_rejects_total",
+                        help="arrivals rejected, by reason",
+                        reason=reason).inc(cnt[key])
+        reg.counter("serve_conservative_total",
+                    help="decisions that hit a confidence gate").inc(
+                        res.n_conservative)
+        reg.counter("serve_rho_admitted_total",
+                    help="admitted sum(p95*cores), rho units").inc(
+                        cnt["rho_admitted"])
+        if self.obs.audit is not None:
+            srv = np.asarray(res.server)
+            chassis = np.where(
+                srv >= 0, self._chassis_of_host[np.maximum(srv, 0)], -1)
+            self.obs.audit.record_batch(
+                t=time.time(), batch=self._batches, servers=srv,
+                chassis=chassis, rule=self._rule_idx,
+                cores=np.asarray(batch.cores),
+                is_uf=res.workload_type == UF, p95_eff=res.p95_eff,
+                valid=valid, conservative=res.conservative,
+                pool_left=self._pool_tokens_left())
+
+    def _record_sweep(self, sweep: placement.SweepCounters,
+                      windows: int) -> None:
+        """Fold one emergency sweep's in-scan counters into the
+        registry. `windows` is host-tracked (the device struct cannot
+        carry it — summing per-shard copies would overcount)."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        reg.counter("emergency_cap_windows_total",
+                    help="cap sample windows applied").inc(windows)
+        reg.counter("emergency_samples_total",
+                    help="chassis power samples consumed").inc(
+                        int(np.asarray(sweep.samples)))
+        reg.counter("emergency_alarms_total",
+                    help="power-emergency alarms raised").inc(
+                        int(np.asarray(sweep.alarms)))
+        cut_w = float(np.asarray(sweep.cut_w))
+        reg.counter("emergency_cut_watts_total",
+                    help="watts of reduction demanded past the "
+                    "target").inc(cut_w)
+        reg.counter("emergency_leftover_watts_total",
+                    help="demanded watts no frequency floor could "
+                    "absorb (RAPL backstop)").inc(
+                        float(np.asarray(sweep.leftover_w)))
+        if cut_w > 0.0:
+            reg.histogram("emergency_cut_watts",
+                          help="watts of cut demanded per sweep"
+                          ).observe(cut_w)
+        for level, w in zip(LEVEL_NAMES,
+                            np.asarray(sweep.cut_by_level_w, np.float64)):
+            reg.counter("emergency_level_cut_watts_total",
+                        help="watts actually removed, by criticality "
+                        "level",
+                        level=level).inc(float(w))
+
     # -- construction ------------------------------------------------------
     @classmethod
     def from_history(cls, service: PredictionService, history: Population,
@@ -280,8 +395,11 @@ class ServePipeline:
         with several hosts a batch is only served once every host's
         clock has passed it — push (or `flush`) regularly from all
         hosts to keep the watermark moving."""
-        self.ingest.submit_to(host, batch, t)
-        return self._drain_events(self.ingest.poll())
+        with self._span("ingest"):
+            self.ingest.submit_to(host, batch, t)
+        with self._span("merge"):
+            events = self.ingest.poll()
+        return self._drain_events(events)
 
     def depart_to(self, host: int, servers, cores, p95_eff, is_uf,
                   t=None) -> list[ServeResult]:
@@ -296,12 +414,15 @@ class ServePipeline:
         budget is never exceeded either way). Advancing this host's
         clock can release queued micro-batches — any results are
         returned."""
-        self.ingest.depart_to(host, DepartureBatch(
-            np.asarray(servers, np.int32),
-            np.asarray(cores, np.float32),
-            np.asarray(p95_eff, np.float32),
-            np.asarray(is_uf, bool)), t)
-        return self._drain_events(self.ingest.poll())
+        with self._span("ingest"):
+            self.ingest.depart_to(host, DepartureBatch(
+                np.asarray(servers, np.int32),
+                np.asarray(cores, np.float32),
+                np.asarray(p95_eff, np.float32),
+                np.asarray(is_uf, bool)), t)
+        with self._span("merge"):
+            events = self.ingest.poll()
+        return self._drain_events(events)
 
     def cap_to(self, host: int, chassis, power_w,
                t=None) -> list[ServeResult]:
@@ -316,16 +437,21 @@ class ServePipeline:
         if self.emergency_cfg is None:
             raise ValueError(
                 "cap_to() needs a pipeline built with emergency_cfg")
-        self.ingest.cap_to(host, CapBatch(
-            np.asarray(chassis, np.int32),
-            np.asarray(power_w, np.float32)), t)
-        return self._drain_events(self.ingest.poll())
+        with self._span("ingest"):
+            self.ingest.cap_to(host, CapBatch(
+                np.asarray(chassis, np.int32),
+                np.asarray(power_w, np.float32)), t)
+        with self._span("merge"):
+            events = self.ingest.poll()
+        return self._drain_events(events)
 
     def flush(self) -> ServeResult | None:
         """Serve everything still queued, watermark ignored (padded up
         to the batch size; chunked if the drain releases more than one
         micro-batch). Returns one concatenated result, or None."""
-        out = self._drain_events(self.ingest.drain())
+        with self._span("merge"):
+            events = self.ingest.drain()
+        out = self._drain_events(events)
         if self._queued:
             merged = _concat_batches(self._pending)
             self._pending, self._queued = [], 0
@@ -384,23 +510,29 @@ class ServePipeline:
         b = len(batch)
         pad_to = self.config.batch_size
         packed, meta = self._buffers[self._active]
-        x = featurize_batch(self.table, batch, pad_to=pad_to)
-        q = served_query(packed, meta, x, kernel=self._kernel)
-        is_uf = q["workload_type_used"] == UF
-        policy = self.config.policy
-        if policy.use_utilization_predictions:
-            p95_eff = bucket_to_p95_jnp(q["p95_bucket_used"])
-        else:
-            p95_eff = jnp.ones(pad_to, jnp.float32)
+        with self._span("featurize"):
+            x = featurize_batch(self.table, batch, pad_to=pad_to)
+        with self._span("infer"):
+            q = served_query(packed, meta, x, kernel=self._kernel)
+            is_uf = q["workload_type_used"] == UF
+            policy = self.config.policy
+            if policy.use_utilization_predictions:
+                p95_eff = bucket_to_p95_jnp(q["p95_bucket_used"])
+            else:
+                p95_eff = jnp.ones(pad_to, jnp.float32)
         cores = jnp.zeros(pad_to, jnp.float32) \
             .at[:b].set(jnp.asarray(batch.cores))
         valid = jnp.arange(pad_to) < b
-        servers = self._place(cores, is_uf, p95_eff, valid)
+        with self._span("place"):
+            servers = self._place(cores, is_uf, p95_eff, valid)
         self.served += b
-        host = jax.device_get((servers, q["workload_type_used"],
-                               q["p95_bucket_used"], p95_eff,
-                               q["conservative"]))
-        return ServeResult(*(a[:b] for a in host))
+        with self._span("commit"):
+            host = jax.device_get((servers, q["workload_type_used"],
+                                   q["p95_bucket_used"], p95_eff,
+                                   q["conservative"]))
+        res = ServeResult(*(a[:b] for a in host))
+        self._record_batch(batch, res)
+        return res
 
     def _place(self, cores, is_uf, p95_eff, valid):
         """Placement stage of one padded micro-batch: run the batched
@@ -412,16 +544,28 @@ class ServePipeline:
         pipeline overrides this single hook — every other serving
         stage is shard-agnostic."""
         if self._pending_caps:
+            n_windows = len(self._pending_caps)
             pw, mask, ts = self._stacked_caps()
             self._pending_caps = []
+            if self.obs is not None:
+                self.obs.registry.counter(
+                    "serve_dispatch_total",
+                    help="compiled kernel dispatches, by call site",
+                    kind="place_batch_caps").inc()
             (self.state, servers, self._emergency,
-             alarms) = placement.place_batch_caps(
+             sweep) = placement.place_batch_caps(
                 self.state, self._emergency, pw, mask, ts, cores,
                 is_uf, p95_eff, valid, self.rho_cap,
                 self.config.policy, self.cores_per_server,
                 self.emergency_cfg)
-            self._alarms += int(alarms)
+            self._alarms += int(np.asarray(sweep.alarms))
+            self._record_sweep(sweep, windows=n_windows)
             return servers
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "serve_dispatch_total",
+                help="compiled kernel dispatches, by call site",
+                kind="place_batch").inc()
         self.state, servers = placement.place_batch(
             self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
             self.config.policy, self.cores_per_server)
@@ -496,14 +640,30 @@ class ServePipeline:
         `emergency`/`alarms`, departures, end-of-stream `flush`)."""
         pending, self._pending_caps = self._pending_caps, []
         for chassis, power_w, t in pending:
-            out = self._cap_window(chassis, power_w, t)
-            self._alarms += int(np.asarray(out.alarm).sum())
+            with self._span("emergency"):
+                out = self._cap_window(chassis, power_w, t)
+            alarms = int(np.asarray(out.alarm).sum())
+            self._alarms += alarms
+            if self.obs is not None:
+                cbl = np.asarray(out.cut_by_level_w, np.float64)
+                self._record_sweep(placement.SweepCounters(
+                    samples=len(chassis), alarms=alarms,
+                    cut_w=np.asarray(out.cut_w, np.float64).sum(),
+                    leftover_w=np.asarray(out.leftover_w,
+                                          np.float64).sum(),
+                    cut_by_level_w=cbl.reshape(
+                        -1, emergency.N_LEVELS).sum(0)), windows=1)
 
     def _cap_window(self, chassis, power_w, t):
         """Apply one unique-chassis sample window (unsharded path)."""
         dtype = self.state.free_cores.dtype
         pw, mask, ts = emergency.scatter_samples(
             self.n_chassis, chassis, power_w, t, jnp, dtype)
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "serve_dispatch_total",
+                help="compiled kernel dispatches, by call site",
+                kind="cap_step").inc()
         fn = _cap_step_fn(self.emergency_cfg)
         self._emergency, out = fn(self.state.gamma_nuf,
                                   self.state.gamma_uf,
@@ -614,6 +774,7 @@ class ShardedServePipeline(ServePipeline):
             pool_total = max(
                 pool_total - float(np.asarray(state.rho_peak).sum()),
                 0.0)
+        self._has_pool = pool_total is not None
         self.sharded = sharding.shard_state(
             self.state, config.n_shards, rho_cap=self.rho_cap,
             pool_total=pool_total)
@@ -630,25 +791,62 @@ class ShardedServePipeline(ServePipeline):
     def _place(self, cores, is_uf, p95_eff, valid):
         cfg = self.config
         kw = {}
-        if self._pending_caps:
+        fused = bool(self._pending_caps)
+        if fused:
+            n_windows = len(self._pending_caps)
             kw = dict(emer=self._emergency, caps=self._sharded_caps(),
                       ecfg=self.emergency_cfg)
             self._pending_caps = []
+        if self.obs is not None:
+            kw["registry"] = self.obs.registry
         out = sharding.place_group_sharded(
             self.sharded, np.asarray(cores), np.asarray(is_uf),
             np.asarray(p95_eff), np.asarray(valid), cfg.policy,
             self.cores_per_server, mesh=self.mesh,
             spill_rounds=cfg.spill_rounds,
             rebalance=cfg.rebalance_tokens, **kw)
-        if kw:
+        if fused:
             (self.sharded, servers, info, self._emergency,
-             alarms) = out
-            self._alarms += alarms
+             sweep) = out
+            self._alarms += int(np.asarray(sweep.alarms))
+            self._record_sweep(sweep, windows=n_windows)
         else:
             self.sharded, servers, info = out
         self.spill_info = {k: self.spill_info[k] + info[k]
                            for k in self.spill_info}
+        self._record_spill(info)
         return servers.astype(np.int32)
+
+    def _record_spill(self, info: dict) -> None:
+        """Fold one sharded placement call's spillover/token counters
+        into the registry (host-side, from the already-returned
+        ``info`` dict)."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        reg.counter("serve_spill_rounds_total",
+                    help="spillover rounds run beyond the home round"
+                    ).inc(max(info["rounds"] - 1, 0))
+        reg.counter("serve_spilled_total",
+                    help="arrivals that entered a spillover round").inc(
+                        info["spilled"])
+        reg.counter("serve_spill_admits_total",
+                    help="arrivals admitted by a spillover round").inc(
+                        info["spill_admitted"])
+        if self._has_pool:
+            reg.counter("serve_tokens_drawn_total",
+                        help="power tokens drawn from the pools, "
+                        "rho units").inc(
+                            max(0.0, info.get("tokens_drawn", 0.0)))
+            for i, p in enumerate(np.asarray(self.sharded.pool)):
+                reg.gauge("serve_pool_tokens",
+                          help="remaining power tokens, by shard",
+                          shard=str(i)).set(float(p))
+
+    def _pool_tokens_left(self) -> float:
+        if not self._has_pool:
+            return float("inf")
+        return float(np.asarray(self.sharded.pool).sum())
 
     def _sharded_caps(self):
         """Densify queued sub-windows into the stacked (N, W, C/N)
@@ -668,6 +866,15 @@ class ShardedServePipeline(ServePipeline):
         (`sharding.consume_departures`). Queued cap windows flush
         first — they read pre-departure aggregates."""
         self._flush_caps()
+        if self.obs is not None and self._has_pool:
+            srv = np.asarray(servers)
+            live = srv >= 0
+            credit = (np.asarray(p95_eff, np.float64)[live]
+                      * np.asarray(cores, np.float64)[live]).sum()
+            self.obs.registry.counter(
+                "serve_tokens_credited_total",
+                help="power tokens credited back by departures, "
+                "rho units").inc(float(credit))
         self.sharded = sharding.remove_sharded(
             self.sharded, servers, cores, p95_eff, is_uf)
 
@@ -683,6 +890,11 @@ class ShardedServePipeline(ServePipeline):
         """Apply one unique-chassis sample window: route samples to
         their owner shards and run every shard's alarm + apportionment
         kernel concurrently (vmap, or shard_map on the mesh)."""
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "serve_dispatch_total",
+                help="compiled kernel dispatches, by call site",
+                kind="caps_sharded").inc()
         self._emergency, out = sharding.apply_caps_sharded(
             self.emergency_cfg, self.sharded, self._emergency, chassis,
             power_w, t, mesh=self.mesh)

@@ -63,7 +63,7 @@ it mutates the state.
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -505,6 +505,27 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
     return state, servers
 
 
+class SweepCounters(NamedTuple):
+    """In-scan observables of one fused emergency sweep, accumulated in
+    the cap-window scan carry (`_apply_cap_windows`) and flushed into
+    the host `repro.obs.MetricsRegistry` by the pipeline. All leaves
+    are scalars except `cut_by_level_w` (L,) — per-criticality-level
+    watts removed, level order = apportionment priority (NUF first)."""
+    samples: Any        # i32 — chassis power samples applied
+    alarms: Any         # i32 — protective-capping alarms raised
+    cut_w: Any          # f — required reduction past the target (W)
+    leftover_w: Any     # f — cut no floor absorbed (RAPL trigger, W)
+    cut_by_level_w: Any  # (L,) f — realized watts cut per crit level
+
+
+def _zero_sweep(dtype) -> SweepCounters:
+    """All-zero `SweepCounters` (the scan-carry initial value)."""
+    return SweepCounters(
+        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+        jnp.zeros((), dtype), jnp.zeros((), dtype),
+        jnp.zeros(emergency.N_LEVELS, dtype))
+
+
 def _apply_cap_windows(ecfg, state: DeviceClusterState, emer, pw, mask,
                        ts):
     """Apply W queued power-emergency sample sub-windows against the
@@ -515,17 +536,26 @@ def _apply_cap_windows(ecfg, state: DeviceClusterState, emer, pw, mask,
     placement aggregates), so applying them back-to-back ahead of the
     placement scan is exactly the semantics of dispatching each window
     on its own — minus W extra dispatches. Returns
-    ``(emergency_state, alarm_count)``."""
+    ``(emergency_state, SweepCounters)``."""
     rho_lv = emergency.chassis_rho_levels(
         state.gamma_nuf, state.gamma_uf, state.chassis_servers, jnp)
+    dtype = state.free_cores.dtype
 
-    def body(em, xs):
+    def body(carry, xs):
+        em, acc = carry
         p, m, t = xs
         em2, out = emergency.masked_step(ecfg, em, rho_lv, p, m, t, jnp)
-        return em2, out.alarm.sum()
+        acc2 = SweepCounters(
+            acc.samples + m.sum(dtype=jnp.int32),
+            acc.alarms + out.alarm.sum(dtype=jnp.int32),
+            acc.cut_w + out.cut_w.sum(dtype=dtype),
+            acc.leftover_w + out.leftover_w.sum(dtype=dtype),
+            acc.cut_by_level_w + out.cut_by_level_w.sum(0, dtype=dtype))
+        return (em2, acc2), None
 
-    emer, alarms = jax.lax.scan(body, emer, (pw, mask, ts))
-    return emer, alarms.sum()
+    (emer, sweep), _ = jax.lax.scan(body, (emer, _zero_sweep(dtype)),
+                                    (pw, mask, ts))
+    return emer, sweep
 
 
 @partial(jax.jit,
@@ -540,12 +570,15 @@ def place_batch_caps(state: DeviceClusterState, emer, pw, mask, ts,
     (`_apply_cap_windows`) and then places the arrival batch — an
     emergency sweep costs zero extra dispatches on the serving path.
     `ecfg` is the static `emergency.EmergencyConfig`. Returns
-    ``(new_state, servers, emergency_state, alarm_count)``."""
-    emer, alarms = _apply_cap_windows(ecfg, state, emer, pw, mask, ts)
+    ``(new_state, servers, emergency_state, SweepCounters)`` — the
+    sweep counters replace PR 6's scalar alarm count (alarms is now
+    ``sweep.alarms``) and feed the observability plane at zero extra
+    dispatch cost."""
+    emer, sweep = _apply_cap_windows(ecfg, state, emer, pw, mask, ts)
     state, servers, _ = _place_batch_impl(
         state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
         float(cores_per_server))
-    return state, servers, emer, alarms
+    return state, servers, emer, sweep
 
 
 @partial(jax.jit, static_argnames=("policy", "cores_per_server"))
@@ -583,3 +616,29 @@ def remove_batch(state: DeviceClusterState, servers: jnp.ndarray,
         gamma_uf=state.gamma_uf.at[srv].add(-w * uf_f),
         gamma_nuf=state.gamma_nuf.at[srv].add(-w * (1.0 - uf_f)),
         rho_peak=state.rho_peak.at[ch].add(-w))
+
+
+def outcome_counters(servers, valid, cores, p95_eff) -> dict:
+    """Per-batch decision counts from a placement's outputs — the
+    host-side (numpy) reduction the observability plane accumulates.
+
+    servers: (B,) outcome codes as returned by the `place_batch`
+    family; valid/cores/p95_eff: the matching batch operands. Padding
+    rows (``valid=False``) can carry arbitrary codes without ever
+    touching state, so every count masks with `valid`. Returns integer
+    counts per outcome plus ``rho_admitted`` (the admitted
+    ``sum(p95*cores)`` — the exact quantity drawn from chassis
+    `rho_peak` and, sharded, the token pools). Keys:
+    admits / fail_capacity / fail_power / fail_tokens / rho_admitted;
+    the first four always sum to ``valid.sum()``."""
+    servers = np.asarray(servers)
+    valid = np.asarray(valid, bool)
+    admitted = (servers >= 0) & valid
+    w = np.asarray(p95_eff, np.float64) * np.asarray(cores, np.float64)
+    return {
+        "admits": int(admitted.sum()),
+        "fail_capacity": int(((servers == FAIL_CAPACITY) & valid).sum()),
+        "fail_power": int(((servers == FAIL_POWER) & valid).sum()),
+        "fail_tokens": int(((servers == FAIL_TOKENS) & valid).sum()),
+        "rho_admitted": float(w[admitted].sum()),
+    }

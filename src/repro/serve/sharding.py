@@ -60,8 +60,8 @@ from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
 from repro.serve import emergency
 from repro.serve.placement import (DeviceClusterState, FAIL_CAPACITY,
-                                   _apply_cap_windows, _place_batch_impl,
-                                   remove_batch)
+                                   SweepCounters, _apply_cap_windows,
+                                   _place_batch_impl, remove_batch)
 
 #: Mesh axis name the serve shards map over.
 SHARD_AXIS = "shard"
@@ -268,17 +268,20 @@ def _round_fn(policy: SchedulerPolicy, cps: float, mesh, ecfg=None):
     (`placement._apply_cap_windows`) — the fused form the pipeline
     routes the home round through, so an emergency sweep costs zero
     extra vmap/shard_map dispatches. Spillover rounds use the plain
-    (``ecfg=None``) kernel: the windows apply exactly once."""
+    (``ecfg=None``) kernel: the windows apply exactly once. The fused
+    kernel's fifth output is the per-shard
+    `placement.SweepCounters` (leading (N,) axis) — the in-scan
+    observables of the sweep."""
     place = partial(_place_batch_impl, policy=policy, cps=cps)
 
     def one_shard(st, pool, cores, is_uf, p95, attempt, cap, *caps):
         if ecfg is None:
             return place(st, pool, cores, is_uf, p95, attempt, cap)
         emer, pw, mask, ts = caps
-        emer2, alarms = _apply_cap_windows(ecfg, st, emer, pw, mask, ts)
+        emer2, sweep = _apply_cap_windows(ecfg, st, emer, pw, mask, ts)
         st2, srv, pool2 = place(st, pool, cores, is_uf, p95, attempt,
                                 cap)
-        return st2, srv, pool2, emer2, alarms
+        return st2, srv, pool2, emer2, sweep
 
     n_in = 7 if ecfg is None else 11
     n_out = 3 if ecfg is None else 5
@@ -303,7 +306,7 @@ def _round_fn(policy: SchedulerPolicy, cps: float, mesh, ecfg=None):
         glob = jnp.where(srv >= 0, glob, srv)
         if ecfg is None:
             return st2, pool2, glob
-        return st2, pool2, glob, out[3], out[4].sum()
+        return st2, pool2, glob, out[3], out[4]
 
     return jax.jit(fn)
 
@@ -313,7 +316,7 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
                         cores_per_server: int, *, mesh=None,
                         spill_rounds: int | None = None,
                         rebalance: bool = True, emer=None, caps=None,
-                        ecfg=None):
+                        ecfg=None, registry=None):
     """Place one arrival batch through the full sharded protocol.
 
     cores/is_uf/p95_eff/valid: (B,) host arrays with B divisible by
@@ -338,9 +341,14 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     Returns ``(sharded_state, servers, info)``: servers is (B,) global
     ids with FAIL_* codes (a still-failed arrival reports the
     most-severe code it saw across rounds), info counts
-    ``{"rounds", "spilled", "spill_admitted"}``. With `emer` it
-    returns ``(sharded_state, servers, info, emergency_state,
-    alarms)``."""
+    ``{"rounds", "spilled", "spill_admitted", "tokens_drawn"}``
+    (tokens_drawn: total pool draw across rounds in rho units, 0.0
+    with no budget). With `emer` it returns ``(sharded_state, servers,
+    info, emergency_state, sweep)`` where sweep is a host-side
+    `placement.SweepCounters` summed over shards. `registry`, a
+    `repro.obs.MetricsRegistry`, counts each compiled round dispatch
+    into ``serve_dispatch_total{kind=...}`` at the true call site —
+    the first-class replacement for monkeypatch dispatch counting."""
     n = sharded.n_shards
     cores = np.asarray(cores, np.float64)
     is_uf = np.asarray(is_uf, bool)
@@ -361,12 +369,14 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     if fused:
         fn0 = _round_fn(policy, float(cores_per_server), mesh, ecfg)
         pw, mask, ts = (jnp.asarray(a) for a in caps)
-        alarms = 0
+        sweep = None
 
     result = np.full(b, FAIL_CAPACITY, np.int64)
     pending = np.arange(b)[valid]
     shards, pool = sharded.shards, sharded.pool
-    info = {"rounds": 0, "spilled": 0, "spill_admitted": 0}
+    pool_start = np.asarray(pool)
+    info = {"rounds": 0, "spilled": 0, "spill_admitted": 0,
+            "tokens_drawn": 0.0}
     for rnd in range(spill_rounds + 1):
         if not len(pending) and not (rnd == 0 and fused):
             break
@@ -380,11 +390,18 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
                     sharded.rho_cap, jnp.asarray(idx),
                     jnp.asarray(attempt), cores_d, uf_d, p95_d)
         if rnd == 0 and fused:
-            shards, pool, glob, emer, al = fn0(*operands, emer, pw,
+            shards, pool, glob, emer, sw = fn0(*operands, emer, pw,
                                                mask, ts)
-            alarms = int(al)
+            sweep = SweepCounters(*(np.asarray(x).sum(axis=0)
+                                    for x in sw))
+            if registry is not None:
+                registry.counter("serve_dispatch_total",
+                                 kind="sharded_round_caps").inc()
         else:
             shards, pool, glob = fn(*operands)
+            if registry is not None:
+                registry.counter("serve_dispatch_total",
+                                 kind="sharded_round").inc()
         out = np.asarray(glob)[attempt]
         arrivals = idx[attempt]
         admitted = out >= 0
@@ -396,9 +413,16 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
         result[failed] = np.minimum(result[failed], out[~admitted])
         pending = np.sort(failed)
         info["rounds"] = rnd + 1
+    pool_end = np.asarray(pool)
+    if np.isfinite(pool_start).all():
+        # rebalancing conserves the total, so the overall delta is
+        # exactly the admitted draw of every round combined
+        info["tokens_drawn"] = float(pool_start.sum() - pool_end.sum())
     new = sharded._replace(shards=shards, pool=pool)
     if fused:
-        return new, result, info, emer, alarms
+        # the home round always runs when fused (it must apply the
+        # queued windows even with zero pending arrivals)
+        return new, result, info, emer, sweep
     return new, result, info
 
 

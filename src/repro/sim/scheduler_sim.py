@@ -26,9 +26,10 @@ against the event-driven oracle (DESIGN.md §9).
 """
 from __future__ import annotations
 
+import contextlib
 import heapq
 from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -107,11 +108,24 @@ class SimMetrics:
     #: per-criticality throttled-seconds — the paper's Table-4-style
     #: impact axis (critical should stay near zero under
     #: criticality-aware apportionment) — plus alarm and migration
-    #: counts.
-    uf_throttled_s: float = 0.0
-    nuf_throttled_s: float = 0.0
+    #: counts. `throttled_s` is (L,) in the emergency plane's level
+    #: order (index `serve.emergency.CRIT_NUF` = 0, `CRIT_UF` = 1 —
+    #: the `obs.LEVEL_NAMES` order), matching `EmergencyState.
+    #: throttled_s` instead of the historical pair of drifting scalar
+    #: names; those survive as read-only properties.
+    throttled_s: np.ndarray = field(default_factory=lambda: np.zeros(2))
     alarms: int = 0
     migrations: int = 0
+
+    @property
+    def nuf_throttled_s(self) -> float:
+        """Non-critical throttled-seconds (``throttled_s[CRIT_NUF]``)."""
+        return float(self.throttled_s[0])
+
+    @property
+    def uf_throttled_s(self) -> float:
+        """Critical throttled-seconds (``throttled_s[CRIT_UF]``)."""
+        return float(self.throttled_s[1])
 
 
 class _EmergencySim:
@@ -145,6 +159,9 @@ class _EmergencySim:
                                            dtype=np.float64)
         self.alarms = 0
         self.migrations = 0
+        # span factory for the observability plane; `simulate` rebinds
+        # it to `Observability.span` when tracing is on
+        self.span = lambda name: contextlib.nullcontext()
 
     def _rho_lv(self, state) -> np.ndarray:
         c = self.n_chassis
@@ -204,19 +221,21 @@ class _EmergencySim:
             p95_eff=np.array([r[2] for r in rows], np.float64),
             is_uf=np.array([r[3] for r in rows], bool),
             token=tokens)
-        plan = mit.plan_migrations(
-            self.cfg, live, self.chassis_of, state.free_cores,
-            self._rho_lv(state), u, due)
-        # paired depart/arrive application; pairs touch disjoint VMs,
-        # so plan order == any merged event order (the pipeline path
-        # routes the same pairs through the ingest merge)
-        for m in range(len(plan)):
-            cores = float(plan.cores[m])
-            p95, uf = float(plan.p95_eff[m]), bool(plan.is_uf[m])
-            state.remove(int(plan.src_server[m]), cores, p95, uf)
-            state.place(int(plan.dst_server[m]), cores, p95, uf)
-            vm_live[int(plan.token[m])] = (int(plan.dst_server[m]),
-                                           cores, p95, uf)
+        with self.span("migrate"):
+            plan = mit.plan_migrations(
+                self.cfg, live, self.chassis_of, state.free_cores,
+                self._rho_lv(state), u, due)
+            # paired depart/arrive application; pairs touch disjoint
+            # VMs, so plan order == any merged event order (the
+            # pipeline path routes the same pairs through the ingest
+            # merge)
+            for m in range(len(plan)):
+                cores = float(plan.cores[m])
+                p95, uf = float(plan.p95_eff[m]), bool(plan.is_uf[m])
+                state.remove(int(plan.src_server[m]), cores, p95, uf)
+                state.place(int(plan.dst_server[m]), cores, p95, uf)
+                vm_live[int(plan.token[m])] = (int(plan.dst_server[m]),
+                                               cores, p95, uf)
         self.migrations += len(plan)
         self.st = emg.reset_dwell(self.st, due, np)
 
@@ -308,7 +327,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              cluster_budget_w: float | None = None,
              emergency_cfg=None,
              prefill_core_ratio: float = 0.0,
-             trace: list | None = None) -> SimMetrics:
+             trace: list | None = None,
+             obs=None) -> SimMetrics:
     """Run the 30-day simulation. Table I parameters throughout:
     UF:NUF core ratio 4:6, UF P95 ~ 65 % (bucket 3), NUF ~ 44 %
     (bucket 2).
@@ -364,7 +384,15 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     bit-identical to the numpy oracle on every scan.
 
     `trace`, if given, collects the chosen server (or failure code)
-    per placement attempt — the decision-equivalence probe."""
+    per placement attempt — the decision-equivalence probe.
+
+    `obs`, a `repro.obs.Observability`, turns on the fleet
+    observability plane (DESIGN.md §14): placement and emergency
+    stages run under spans, the sharded backend counts its compiled
+    round dispatches into the registry, and the final `SimMetrics`
+    is exported through `repro.obs.record_sim_metrics` so sim runs
+    snapshot under the same schema as live serve runs. Decisions are
+    bit-identical with `obs` on or off (asserted in tests)."""
     if backend not in ("event", "serve", "serve-sharded"):
         raise ValueError(f"unknown backend {backend!r}")
     if n_ingest_hosts < 1:
@@ -386,6 +414,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         from repro.serve.sharding import (place_group_sharded,
                                           rho_pool_from_budget,
                                           shard_state)
+    span = obs.span if obs is not None else \
+        (lambda name: contextlib.nullcontext())
     rng = np.random.default_rng(seed)
     n_servers = RACKS * CHASSIS_PER_RACK * BLADES_PER_CHASSIS
     chassis_of = np.arange(n_servers) // BLADES_PER_CHASSIS
@@ -403,6 +433,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     if emergency_cfg is not None:
         emer = _EmergencySim(emergency_cfg, state.n_chassis, chassis_of,
                              use_jax=backend != "event")
+        if obs is not None:
+            emer.span = obs.span
     departures: list = []        # heap of (time, vm_token)
     vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
     token = 0
@@ -456,7 +488,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         if t >= horizon:
             break
         if emer is not None:
-            emer.scan(t, state, vm_live)
+            with span("emergency"):
+                emer.scan(t, state, vm_live)
         # sample the whole deployment group first (placement consumes
         # no randomness, so both backends see the same stream), then
         # place per-VM (event) or via one batched scan (serve)
@@ -499,8 +532,13 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             # rule, so 'serve' reproduces 'event' placements exactly
             # (the f32 serving path's divergence is bounded in
             # DESIGN.md §9)
-            with jax.experimental.enable_x64():
+            with jax.experimental.enable_x64(), span("place"):
                 if backend == "serve":
+                    if obs is not None:
+                        obs.registry.counter(
+                            "serve_dispatch_total",
+                            help="compiled kernel dispatches, "
+                            "by call site", kind="place_batch").inc()
                     _, srvs = place_batch(
                         device_state(state, jnp.float64), cores_a,
                         uf_a.astype(bool), p95_a, valid, serve_rho_cap,
@@ -519,7 +557,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                         rho_cap=serve_rho_cap, pool_total=pool)
                     _, srvs, _ = place_group_sharded(
                         sharded, cores_a, uf_a.astype(bool), p95_a,
-                        valid, policy, state.cores_per_server)
+                        valid, policy, state.cores_per_server,
+                        registry=None if obs is None else obs.registry)
                     chosen = [None] * n        # un-permute the merge
                     for k, j in enumerate(order):
                         chosen[j] = int(srvs[k])
@@ -550,16 +589,19 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     if emer is not None:
         from repro.serve.emergency import throttled_by_level
         throttled = throttled_by_level(emer.st)
-    return SimMetrics(
+    metrics = SimMetrics(
         failure_rate=failures / max(placements, 1),
         empty_server_ratio=float(np.mean(empty_samples)),
         chassis_score_std=float(np.mean(chassis_stds)),
         server_score_std=float(np.mean(server_stds)),
         placements=placements, failures=failures, power=power,
-        nuf_throttled_s=float(throttled[0]),
-        uf_throttled_s=float(throttled[1]),
+        throttled_s=np.asarray(throttled, np.float64),
         alarms=0 if emer is None else emer.alarms,
         migrations=0 if emer is None else emer.migrations)
+    if obs is not None:
+        from repro.obs import record_sim_metrics
+        record_sim_metrics(obs.registry, metrics)
+    return metrics
 
 
 def fig7_sweep(alphas=(0.0, 0.2, 0.4, 0.6, 0.8, 1.0), days: float = 30.0,

@@ -4,19 +4,21 @@ The perf contract: a serve batch that carries queued cap windows costs
 exactly the placement dispatch — the emergency sweep rides inside it
 (`placement.place_batch_caps` unsharded, the `ecfg` home-round kernel
 sharded) and the standalone cap kernels never run on the streamed
-path. These tests count the module-level entry points so the sweep can
-never silently regrow an extra dispatch."""
+path. These tests assert it through the first-class dispatch counters
+(`serve_dispatch_total{kind=...}` in `repro.obs.MetricsRegistry`,
+incremented at the true call sites) instead of the old monkeypatch
+wrappers, so the invariant is checked against the same instrumentation
+operators scrape."""
 import numpy as np
 import pytest
 
 from repro.core import features as F
 from repro.core.placement import ClusterState
 from repro.core.predictor import train_service
+from repro.obs import Observability
 from repro.serve import (EmergencyConfig, ServeConfig, ServePipeline,
                          ShardedServeConfig, ShardedServePipeline,
                          device_state)
-from repro.serve import pipeline as pipeline_mod
-from repro.serve import placement, sharding
 from repro.serve.featurizer import table_from_history
 from repro.sim.telemetry import arrival_batch, generate_population
 
@@ -61,32 +63,23 @@ def _cfg():
     return EmergencyConfig.from_model(BUDGET_TIGHT)
 
 
-def test_unsharded_sweep_rides_placement_dispatch(guard_world,
-                                                  monkeypatch):
+def _dispatches(obs):
+    v = obs.registry.value
+    return {kind: v("serve_dispatch_total", kind=kind)
+            for kind in ("place_batch_caps", "place_batch", "cap_step",
+                         "sharded_round_caps", "sharded_round",
+                         "caps_sharded")}
+
+
+def test_unsharded_sweep_rides_placement_dispatch(guard_world):
     svc, hist, labels, arrivals = guard_world
     cap = max(v.subscription for v in hist.vms) + 8
+    obs = Observability()
     pipe = ServePipeline(
         svc, table_from_history(hist, labels, cap),
         device_state(_loaded_state()), cores_per_server=40,
         blades_per_chassis=12, config=ServeConfig(batch_size=32),
-        emergency_cfg=_cfg())
-    calls = {"fused": 0, "plain": 0, "standalone": 0}
-    real_fused = placement.place_batch_caps
-    real_plain = placement.place_batch
-    real_standalone = pipeline_mod._cap_step_fn
-    monkeypatch.setattr(
-        placement, "place_batch_caps",
-        lambda *a, **k: (calls.__setitem__("fused", calls["fused"] + 1),
-                         real_fused(*a, **k))[1])
-    monkeypatch.setattr(
-        placement, "place_batch",
-        lambda *a, **k: (calls.__setitem__("plain", calls["plain"] + 1),
-                         real_plain(*a, **k))[1])
-    monkeypatch.setattr(
-        pipeline_mod, "_cap_step_fn",
-        lambda cfg: (calls.__setitem__("standalone",
-                                       calls["standalone"] + 1),
-                     real_standalone(cfg))[1])
+        emergency_cfg=_cfg(), obs=obs)
     # one full emergency sweep (4 unique chassis -> 1 window) ...
     pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
                 t=np.array([1.0, 2.0, 3.0, 4.0]))
@@ -94,51 +87,62 @@ def test_unsharded_sweep_rides_placement_dispatch(guard_world,
     out = pipe.submit_to(0, _first_n(arrival_batch(arrivals), 32),
                          t=np.arange(32, dtype=np.float64) + 10.0)
     assert len(out) == 1
+    d = _dispatches(obs)
     # fused budget: the sweep + batch is ONE placement dispatch
-    assert calls["fused"] == 1
-    assert calls["plain"] == 0
-    assert calls["standalone"] == 0
+    assert d["place_batch_caps"] == 1
+    assert d["place_batch"] == 0
+    assert d["cap_step"] == 0
     assert pipe.alarms >= 1                  # the sweep really applied
-    assert calls["standalone"] == 0          # ... without a flush
+    # reading `alarms` flushes the (now empty) queue — still no
+    # standalone cap dispatch
+    assert _dispatches(obs)["cap_step"] == 0
+    # and the sweep's in-scan counters surfaced through the registry
+    assert obs.registry.value("emergency_alarms_total") == pipe.alarms
+    assert obs.registry.value("emergency_cap_windows_total") == 1
 
 
-def test_sharded_sweep_rides_home_round(guard_world, monkeypatch):
+def test_unsharded_standalone_flush_is_counted(guard_world):
+    """A cap window with no batch to ride (an `emergency` read forces
+    the flush) takes exactly one standalone cap-step dispatch."""
     svc, hist, labels, arrivals = guard_world
     cap = max(v.subscription for v in hist.vms) + 8
+    obs = Observability()
+    pipe = ServePipeline(
+        svc, table_from_history(hist, labels, cap),
+        device_state(_loaded_state()), cores_per_server=40,
+        blades_per_chassis=12, config=ServeConfig(batch_size=32),
+        emergency_cfg=_cfg(), obs=obs)
+    pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
+                t=np.array([1.0, 2.0, 3.0, 4.0]))
+    assert pipe.alarms >= 1                  # property read -> flush
+    d = _dispatches(obs)
+    assert d["cap_step"] == 1
+    assert d["place_batch_caps"] == 0
+    assert obs.registry.value("emergency_cap_windows_total") == 1
+    assert obs.registry.value("emergency_samples_total") == 4
+
+
+def test_sharded_sweep_rides_home_round(guard_world):
+    svc, hist, labels, arrivals = guard_world
+    cap = max(v.subscription for v in hist.vms) + 8
+    obs = Observability()
     pipe = ShardedServePipeline(
         svc, table_from_history(hist, labels, cap),
         device_state(_loaded_state()), cores_per_server=40,
         blades_per_chassis=12,
         config=ShardedServeConfig(batch_size=32, n_shards=4),
-        emergency_cfg=_cfg())
-    counts = {"rounds": 0, "fused_rounds": 0, "standalone": 0}
-    real_round = sharding._round_fn
-    real_caps = sharding.apply_caps_sharded
-
-    def counting_round(policy, cps, mesh, ecfg=None):
-        fn = real_round(policy, cps, mesh, ecfg)
-
-        def wrapped(*a, **k):
-            counts["rounds"] += 1
-            counts["fused_rounds"] += ecfg is not None
-            return fn(*a, **k)
-        return wrapped
-
-    monkeypatch.setattr(sharding, "_round_fn", counting_round)
-    monkeypatch.setattr(
-        sharding, "apply_caps_sharded",
-        lambda *a, **k: (counts.__setitem__(
-            "standalone", counts["standalone"] + 1),
-            real_caps(*a, **k))[1])
+        emergency_cfg=_cfg(), obs=obs)
     pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
                 t=np.array([1.0, 2.0, 3.0, 4.0]))
     out = pipe.submit_to(0, _first_n(arrival_batch(arrivals), 32),
                          t=np.arange(32, dtype=np.float64) + 10.0)
     assert len(out) == 1
+    d = _dispatches(obs)
     # fused budget: one home round carrying the sweep, zero standalone
     # cap dispatches; spill rounds only if the home round rejected
-    assert counts["fused_rounds"] == 1
-    assert counts["rounds"] <= 1 + pipe.spill_info["rounds"]
-    assert counts["standalone"] == 0
+    assert d["sharded_round_caps"] == 1
+    assert d["sharded_round"] == pipe.spill_info["rounds"] - 1
+    assert d["caps_sharded"] == 0
     assert pipe.alarms >= 1
-    assert counts["standalone"] == 0
+    assert _dispatches(obs)["caps_sharded"] == 0
+    assert obs.registry.value("emergency_alarms_total") == pipe.alarms
