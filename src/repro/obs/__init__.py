@@ -26,7 +26,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .audit import AuditRecord, AuditTrail, OUTCOME_NAMES
+from .audit import (AdaptiveRecord, AdaptiveTrail, AuditRecord,
+                    AuditTrail, OUTCOME_NAMES)
 from .registry import (LEVEL_NAMES, Counter, Gauge, Histogram,
                        MetricsRegistry)
 from .tracing import Span, SpanTracer
@@ -34,6 +35,7 @@ from .tracing import Span, SpanTracer
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "LEVEL_NAMES",
     "AuditRecord", "AuditTrail", "OUTCOME_NAMES",
+    "AdaptiveRecord", "AdaptiveTrail",
     "Span", "SpanTracer",
     "Observability", "record_sim_metrics",
 ]
@@ -50,6 +52,9 @@ class Observability:
     registry: MetricsRegistry = field(default_factory=MetricsRegistry)
     audit: AuditTrail | None = None
     tracer: SpanTracer | None = None
+    #: adaptive-controller decision ring (`serve.adaptive`); None
+    #: turns the reason rows off while the gauges/counters stay on
+    adaptive: AdaptiveTrail | None = None
 
     @classmethod
     def full(cls, audit_capacity: int = 4096,
@@ -59,7 +64,8 @@ class Observability:
         reg = MetricsRegistry()
         return cls(registry=reg,
                    audit=AuditTrail(capacity=audit_capacity),
-                   tracer=SpanTracer(reg, capacity=span_capacity))
+                   tracer=SpanTracer(reg, capacity=span_capacity),
+                   adaptive=AdaptiveTrail())
 
     def span(self, name: str):
         """Span context for `name` (no-op context when tracing off)."""
@@ -104,3 +110,12 @@ def record_sim_metrics(registry: MetricsRegistry, metrics) -> None:
       help="power-emergency alarms raised").inc(metrics.alarms)
     c("emergency_migrations_total",
       help="mitigation migrations executed").inc(metrics.migrations)
+    g("adaptive_ratio",
+      help="oversubscription ratio of the adaptive controller "
+      "(1.0 when the controller is off)").set(metrics.adaptive_ratio)
+    c("adaptive_ratchet_total",
+      help="adaptive-controller up-steps taken").inc(
+          metrics.adaptive_ratchets)
+    c("adaptive_backoff_total",
+      help="adaptive-controller down-steps taken").inc(
+          metrics.adaptive_backoffs)

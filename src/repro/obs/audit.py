@@ -21,7 +21,8 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["AuditRecord", "AuditTrail", "OUTCOME_NAMES"]
+__all__ = ["AuditRecord", "AuditTrail", "OUTCOME_NAMES",
+           "AdaptiveRecord", "AdaptiveTrail"]
 
 #: Decision-outcome code -> human name (codes from `serve.placement`).
 OUTCOME_NAMES = {
@@ -180,3 +181,127 @@ class AuditTrail:
         rows = self.tail(len(self))
         bad = rows[rows["outcome"] < 0]
         return [AuditRecord(r) for r in bad[-n:]]
+
+
+#: One adaptive-controller decision row (`serve.adaptive`). ``action``
+#: is +1 ratchet / 0 hold / -1 backoff; ``reason`` indexes
+#: `repro.serve.adaptive.REASON_NAMES`; ``shard`` is -1 unsharded.
+_ADAPTIVE_DTYPE = np.dtype([
+    ("seq", np.int64),          # monotone decision sequence number
+    ("t", np.float64),          # wall-clock seconds (time.time)
+    ("shard", np.int16),        # owning shard, or -1 unsharded
+    ("ratio", np.float32),      # post-decision oversubscription ratio
+    ("stable_frac", np.float32),  # stable / known chassis this scan
+    ("n_known", np.int32),      # chassis with enough window history
+    ("n_stable", np.int32),     # known chassis scored stable
+    ("action", np.int8),        # +1 ratchet / 0 hold / -1 backoff
+    ("reason", np.int8),        # index into adaptive.REASON_NAMES
+])
+
+_ACTION_NAMES = {1: "ratchet", 0: "hold", -1: "backoff"}
+
+
+class AdaptiveRecord:
+    """Read-only view of one adaptive-controller decision row with
+    named attributes and a human rendering (`AdaptiveTrail.explain`
+    returns these)."""
+
+    __slots__ = ("_row",)
+
+    def __init__(self, row: np.void):
+        self._row = row
+
+    def __getattr__(self, name):
+        try:
+            return self._row[name].item()
+        except (KeyError, ValueError):
+            raise AttributeError(name) from None
+
+    @property
+    def action_name(self) -> str:
+        """Controller action as a string (ratchet / hold / backoff)."""
+        return _ACTION_NAMES.get(int(self._row["action"]),
+                                 f"action_{int(self._row['action'])}")
+
+    @property
+    def reason_name(self) -> str:
+        """Decision reason as a string (the `serve.adaptive.
+        REASON_NAMES` entry the recorded index points at)."""
+        from repro.serve.adaptive import REASON_NAMES
+        code = int(self._row["reason"])
+        if 0 <= code < len(REASON_NAMES):
+            return REASON_NAMES[code]
+        return f"reason_{code}"
+
+    def describe(self) -> str:
+        """One-line human rendering of the controller decision."""
+        r = self._row
+        where = "" if int(r["shard"]) < 0 else f" shard={int(r['shard'])}"
+        return (f"seq={int(r['seq'])}{where} {self.action_name}"
+                f" ({self.reason_name})"
+                f" ratio={float(r['ratio']):.3f}"
+                f" stable={int(r['n_stable'])}/{int(r['n_known'])}"
+                f" frac={float(r['stable_frac']):.3f}")
+
+
+class AdaptiveTrail:
+    """Bounded ring of adaptive-ratio controller decisions — the "why
+    did the budget move" sibling of the placement `AuditTrail`, with
+    the same power-of-two ring mechanics. One row per controller scan
+    (per shard, sharded), written host-side from outputs the kernel
+    already returned, so recording never perturbs a decision."""
+
+    def __init__(self, capacity: int = 1024):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = 1 << (capacity - 1).bit_length()
+        self._ring = np.zeros(self.capacity, _ADAPTIVE_DTYPE)
+        self._next_seq = 0
+
+    def __len__(self) -> int:
+        return min(self._next_seq, self.capacity)
+
+    @property
+    def total_recorded(self) -> int:
+        """Total rows ever written (>= ``len`` once the ring wraps)."""
+        return self._next_seq
+
+    def record(self, *, t: float, shard: int, ratio: float,
+               stable_frac: float, n_known: int, n_stable: int,
+               action: int, reason: int) -> int:
+        """Append one controller decision row; returns its seq."""
+        seq = self._next_seq
+        row = self._ring[seq & (self.capacity - 1)]
+        row["seq"], row["t"], row["shard"] = seq, t, shard
+        row["ratio"], row["stable_frac"] = ratio, stable_frac
+        row["n_known"], row["n_stable"] = n_known, n_stable
+        row["action"], row["reason"] = action, reason
+        self._next_seq += 1
+        return seq
+
+    def tail(self, n: int = 32) -> np.ndarray:
+        """The most recent `n` rows, oldest first (a copy)."""
+        n = min(n, len(self))
+        if n == 0:
+            return np.zeros(0, _ADAPTIVE_DTYPE)
+        idx = (self._next_seq - n + np.arange(n)) & (self.capacity - 1)
+        return self._ring[idx].copy()
+
+    def explain(self, seq: int) -> AdaptiveRecord:
+        """Look up one decision by sequence number (KeyError if it has
+        fallen out of the ring or was never recorded)."""
+        if not (0 <= seq < self._next_seq) \
+                or seq < self._next_seq - self.capacity:
+            raise KeyError(
+                f"seq {seq} not in adaptive ring (kept: "
+                f"[{max(0, self._next_seq - self.capacity)}, "
+                f"{self._next_seq}))")
+        return AdaptiveRecord(self._ring[seq & (self.capacity - 1)])
+
+    def backoffs(self, n: int = 32) -> list:
+        """The most recent back-off decisions (up to `n`), oldest
+        first — the starting point of a "why did my budget shrink"
+        investigation."""
+        rows = self.tail(len(self))
+        bad = rows[rows["action"] < 0]
+        return [AdaptiveRecord(r) for r in bad[-n:]]

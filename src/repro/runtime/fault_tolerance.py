@@ -21,6 +21,8 @@ from repro.checkpoint import Checkpointer
 
 @dataclass
 class FaultToleranceConfig:
+    """Knobs for `FaultTolerantLoop`: checkpoint cadence/retention,
+    straggler detection, and the chaos-injection channel."""
     checkpoint_every: int = 50
     keep_last: int = 3
     #: a step slower than median * this factor counts as a straggler
@@ -33,11 +35,18 @@ class FaultToleranceConfig:
 
 
 class InjectedFailure(RuntimeError):
-    pass
+    """The chaos channel: the ONLY exception the loop retries.
+
+    Raised by the loop itself (`inject_failure_rate`) or by a test's
+    step_fn to stand in for a node crash; any other exception is a
+    real defect and propagates (tests/test_fault_tolerance.py)."""
 
 
 @dataclass
 class RunState:
+    """Mutable run bookkeeping: current step, restart/mitigation
+    counters, and the trailing step-time window the straggler
+    deadline is computed from."""
     step: int = 0
     restarts: int = 0
     straggler_steps: int = 0
@@ -78,8 +87,14 @@ class FaultTolerantLoop:
     def run(self, train_state, step_fn, batch_fn, n_steps: int,
             start_step: int = 0):
         """step_fn(train_state, batch) -> (train_state, metrics).
-        Failures (injected or real exceptions from step_fn) trigger
-        restore-and-continue up to max_restarts."""
+
+        `InjectedFailure` (the chaos channel, raised by the loop
+        itself or by step_fn) triggers restore-and-continue up to
+        max_restarts: rewind to the newest committed checkpoint, or
+        to the pre-loop snapshot if nothing committed yet. Any OTHER
+        exception from step_fn/batch_fn propagates to the caller
+        unchanged — a real defect must fail the job loudly, not spin
+        the restore loop (pinned in tests/test_fault_tolerance.py)."""
         step = start_step
         history = []
         # snapshot for failures before the first checkpoint commits

@@ -5,6 +5,11 @@ decision: micro-batched featurization, batched two-stage forest
 inference with confidence gating, vectorized Algorithm-1 scoring, and
 power-headroom admission — one compiled flow per micro-batch, with
 double-buffered model hot-swap for the paper's daily retrain."""
+from repro.serve.adaptive import (AdaptiveConfig, AdaptiveOutputs,
+                                  AdaptiveState, REASON_NAMES,
+                                  adaptive_step, decision_reason,
+                                  init_adaptive, offered_power,
+                                  retarget_pool)
 from repro.serve.admission import (
     headroom_w, projected_chassis_power, rho_cap_from_budget)
 from repro.serve.emergency import (CRIT_NUF, CRIT_UF, N_LEVELS,
@@ -38,9 +43,11 @@ from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    score_chassis_batch,
                                    score_server_batch)
 from repro.serve.sharding import (SHARD_AXIS, ShardedState,
+                                  apply_adaptive_sharded,
                                   apply_caps_sharded, chassis_to_shard,
                                   consume_departures,
                                   device_put_sharded_state,
+                                  init_adaptive_sharded,
                                   init_emergency_sharded,
                                   place_group_sharded, remove_sharded,
                                   rho_pool_from_budget, route_shard,
@@ -71,9 +78,13 @@ __all__ = [
     "ServeConfig", "ServePipeline", "ServeResult",
     "ShardedServeConfig", "ShardedServePipeline",
     "SHARD_AXIS", "ShardedState", "apply_caps_sharded",
-    "chassis_to_shard", "consume_departures",
-    "device_put_sharded_state", "init_emergency_sharded",
+    "apply_adaptive_sharded", "chassis_to_shard", "consume_departures",
+    "device_put_sharded_state", "init_adaptive_sharded",
+    "init_emergency_sharded",
     "place_group_sharded", "remove_sharded", "rho_pool_from_budget",
     "route_shard", "shard_mesh", "shard_state", "split_caps",
     "split_departures", "unshard_state",
+    "AdaptiveConfig", "AdaptiveOutputs", "AdaptiveState",
+    "REASON_NAMES", "adaptive_step", "decision_reason",
+    "init_adaptive", "offered_power", "retarget_pool",
 ]

@@ -42,7 +42,7 @@ from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
 from repro.obs import LEVEL_NAMES, Observability
-from repro.serve import admission, emergency, placement, sharding
+from repro.serve import admission, adaptive, emergency, placement, sharding
 from repro.serve.featurizer import (
     SubscriptionTable, featurize_batch, ingest_population, shard_table,
     table_from_history)
@@ -111,6 +111,20 @@ def _concat_batches(parts: list) -> ArrivalBatch:
 
 
 @lru_cache(maxsize=None)
+def _adaptive_step_fn(cfg: adaptive.AdaptiveConfig):
+    """Compiled unsharded adaptive-controller scan: per-chassis
+    criticality aggregates from the cluster state, then the masked
+    stability-scoring + ratio step (`serve.adaptive.adaptive_step`)."""
+
+    def fn(gamma_nuf, gamma_uf, chassis_servers, ast, pw, mask):
+        rho_lv = emergency.chassis_rho_levels(gamma_nuf, gamma_uf,
+                                              chassis_servers, jnp)
+        return adaptive.adaptive_step(cfg, ast, rho_lv, pw, mask, jnp)
+
+    return jax.jit(fn)
+
+
+@lru_cache(maxsize=None)
 def _cap_step_fn(cfg: emergency.EmergencyConfig):
     """Compiled unsharded emergency scan: per-chassis criticality
     aggregates from the cluster state, then the masked alarm +
@@ -156,7 +170,8 @@ class ServePipeline:
                  power_model: ServerPowerModel | None = None,
                  blades_per_chassis: int | None = None,
                  emergency_cfg: emergency.EmergencyConfig | None = None,
-                 obs: Observability | None = None):
+                 obs: Observability | None = None,
+                 adaptive_cfg: adaptive.AdaptiveConfig | None = None):
         self.config = config or ServeConfig()
         self.table = table
         self.state = state
@@ -206,6 +221,22 @@ class ServePipeline:
                     "static chassis floor (and every alarm and cut) "
                     "would be miscalibrated")
             self.emergency = self._init_emergency()
+        # adaptive oversubscription controller (serve.adaptive,
+        # DESIGN.md §15): CAPPING samples feed per-chassis stability
+        # windows; the stepped ratio rescales the admission ceiling
+        # (and, sharded, the free token pools) between micro-batches
+        self.adaptive_cfg = adaptive_cfg
+        self._adaptive = None
+        self._rho_cap_base = self.rho_cap
+        self._ratio_prev = 1.0
+        if adaptive_cfg is not None:
+            if adaptive_cfg.blades_per_chassis != self.blades_per_chassis:
+                raise ValueError(
+                    f"adaptive_cfg.blades_per_chassis="
+                    f"{adaptive_cfg.blades_per_chassis} does not match "
+                    f"the pipeline's {self.blades_per_chassis} — power "
+                    "samples would read back as the wrong utilization")
+            self._adaptive = self._init_adaptive()
 
     def _init_emergency(self):
         """Fresh per-chassis emergency state (unsharded layout)."""
@@ -232,6 +263,87 @@ class ServePipeline:
         (flushes queued windows first, like `emergency`)."""
         self._flush_caps()
         return self._alarms
+
+    # -- adaptive oversubscription (serve.adaptive, DESIGN.md §15) ---------
+    def _init_adaptive(self):
+        """Fresh controller state (unsharded layout, ratio 1.0)."""
+        return adaptive.init_adaptive(
+            self.adaptive_cfg, self.n_chassis, xp=jnp,
+            dtype=self.state.free_cores.dtype)
+
+    @property
+    def adaptive_state(self):
+        """Current adaptive-controller state (None with the controller
+        off). Unlike `emergency` there is nothing to flush — the
+        controller steps eagerly when CAPPING events are consumed, so
+        its ratio is already in force for the next micro-batch."""
+        return self._adaptive
+
+    @property
+    def adaptive_ratio(self):
+        """Current oversubscription ratio (1.0 with the controller
+        off); the sharded pipeline returns the (N,) per-shard ratios."""
+        if self._adaptive is None:
+            return 1.0
+        return float(np.asarray(self._adaptive.ratio))
+
+    def _adaptive_scan(self, chassis, power_w) -> None:
+        """Run one controller scan over a unique-chassis sample window
+        and put the stepped ratio in force (unsharded path)."""
+        dtype = self.state.free_cores.dtype
+        pw, mask, _ = emergency.scatter_samples(
+            self.n_chassis, chassis, power_w,
+            np.zeros(len(np.asarray(chassis))), jnp, dtype)
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "serve_dispatch_total",
+                help="compiled kernel dispatches, by call site",
+                kind="adaptive_step").inc()
+        fn = _adaptive_step_fn(self.adaptive_cfg)
+        self._adaptive, out = fn(self.state.gamma_nuf,
+                                 self.state.gamma_uf,
+                                 self.state.chassis_servers,
+                                 self._adaptive, pw, mask)
+        self._apply_ratio(out)
+
+    def _apply_ratio(self, out) -> None:
+        """Rescale the effective watt budget to the stepped ratio —
+        unsharded, that is the per-chassis admission ceiling (the
+        device-side product keeps the scan sync-free when obs is
+        off)."""
+        self.rho_cap = self._rho_cap_base * out.ratio
+        self._record_adaptive(out)
+
+    def _record_adaptive(self, out) -> None:
+        """Export one controller decision: ratio gauge, step counters,
+        and an `obs.audit.AdaptiveTrail` reason row — host-side
+        consumers of outputs the kernel already returned."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        r = float(np.asarray(out.ratio))
+        reg.gauge("adaptive_ratio",
+                  help="oversubscription ratio of the adaptive "
+                  "controller").set(r)
+        reg.counter("adaptive_ratchet_total",
+                    help="adaptive-controller up-steps taken").inc(
+                        int(np.asarray(out.ratchet)))
+        reg.counter("adaptive_backoff_total",
+                    help="adaptive-controller down-steps taken").inc(
+                        int(np.asarray(out.backoff)))
+        if self.obs.adaptive is not None:
+            ratchet = bool(np.asarray(out.ratchet))
+            backoff = bool(np.asarray(out.backoff))
+            self.obs.adaptive.record(
+                t=time.time(), shard=-1, ratio=r,
+                stable_frac=float(np.asarray(out.stable_frac)),
+                n_known=int(np.asarray(out.n_known)),
+                n_stable=int(np.asarray(out.n_stable)),
+                action=1 if ratchet else (-1 if backoff else 0),
+                reason=adaptive.decision_reason(
+                    self._ratio_prev, r, int(np.asarray(out.n_known)),
+                    ratchet, backoff, bool(np.asarray(out.hot))))
+        self._ratio_prev = r
 
     # -- observability (repro.obs, DESIGN.md §14) --------------------------
     @staticmethod
@@ -432,11 +544,13 @@ class ServePipeline:
         apply at their merged-stream position, so alarms, lifts, and
         the capacity/token effects of any mitigation traffic stay
         deterministic across host counts. Requires the pipeline to be
-        built with `emergency_cfg`. Advancing this host's clock can
-        release queued micro-batches — any results are returned."""
-        if self.emergency_cfg is None:
+        built with `emergency_cfg` and/or `adaptive_cfg` (either plane
+        consumes the samples). Advancing this host's clock can release
+        queued micro-batches — any results are returned."""
+        if self.emergency_cfg is None and self.adaptive_cfg is None:
             raise ValueError(
-                "cap_to() needs a pipeline built with emergency_cfg")
+                "cap_to() needs a pipeline built with emergency_cfg "
+                "or adaptive_cfg")
         with self._span("ingest"):
             self.ingest.cap_to(host, CapBatch(
                 np.asarray(chassis, np.int32),
@@ -622,17 +736,29 @@ class ServePipeline:
         f32 serving path stores the emergency clocks in the state
         dtype, and epoch-second stamps (~1e9) would otherwise quantize
         the 30 s lift/dwell windows away — relative session time keeps
-        sub-second resolution for years of stream."""
-        if self.emergency_cfg is None:
+        sub-second resolution for years of stream.
+
+        The adaptive controller (`adaptive_cfg`) consumes the same
+        sub-windows *eagerly*: its scan reads only the placement
+        aggregates (which every queued-cap consumer already sees
+        consistently — mutations flush the queue first) and its
+        stepped ratio must be in force for the very next micro-batch,
+        so deferring it would lag the budget by one batch."""
+        if self.emergency_cfg is None and self.adaptive_cfg is None:
             raise ValueError(
                 "received CAPPING events but the pipeline was built "
-                "without emergency_cfg")
+                "without emergency_cfg or adaptive_cfg")
         if self._cap_epoch is None:
             self._cap_epoch = float(t[0])
         t = np.asarray(t, np.float64) - self._cap_epoch
         for lo, hi in _unique_chassis_windows(batch.chassis):
-            self._pending_caps.append(
-                (batch.chassis[lo:hi], batch.power_w[lo:hi], t[lo:hi]))
+            if self.adaptive_cfg is not None:
+                self._adaptive_scan(batch.chassis[lo:hi],
+                                    batch.power_w[lo:hi])
+            if self.emergency_cfg is not None:
+                self._pending_caps.append(
+                    (batch.chassis[lo:hi], batch.power_w[lo:hi],
+                     t[lo:hi]))
 
     def _flush_caps(self) -> None:
         """Apply queued cap sub-windows through the standalone kernel —
@@ -762,8 +888,11 @@ class ShardedServePipeline(ServePipeline):
         else:
             self.mesh = None
         self.cluster_budget_w = cluster_budget_w
-        pool_total = sharding.rho_pool_from_budget(
+        # gross = the ratio-1.0 token allowance; the adaptive
+        # controller retargets free pools against it (`retarget_pool`)
+        gross = sharding.rho_pool_from_budget(
             cluster_budget_w, state.n_servers, self.power_model)
+        pool_total = gross
         if np.isinf(pool_total):
             pool_total = None
         else:
@@ -784,6 +913,11 @@ class ShardedServePipeline(ServePipeline):
             if config.shard_table:
                 self.table = shard_table(self.table, self.mesh)
         self.state = None        # self.sharded is the source of truth
+        self._sharded_cap_base = self.sharded.rho_cap
+        self._pool_base = None if np.isinf(gross) else \
+            jnp.full(config.n_shards, gross / config.n_shards,
+                     self.sharded.pool.dtype)
+        self._ratio_prev = np.ones(config.n_shards)
         self.spill_info = {"rounds": 0, "spilled": 0,
                            "spill_admitted": 0}
 
@@ -877,6 +1011,93 @@ class ShardedServePipeline(ServePipeline):
                 "rho units").inc(float(credit))
         self.sharded = sharding.remove_sharded(
             self.sharded, servers, cores, p95_eff, is_uf)
+
+    # -- sharded adaptive oversubscription ---------------------------------
+    def _init_adaptive(self):
+        """Controller state partitioned like the cluster (leading
+        shard axis over the same contiguous chassis blocks)."""
+        return sharding.init_adaptive_sharded(
+            self.adaptive_cfg, self.n_chassis, self.config.n_shards,
+            dtype=self.state.free_cores.dtype)
+
+    @property
+    def adaptive_ratio(self):
+        """(N,) per-shard oversubscription ratios (all 1.0 with the
+        controller off) — each shard adapts the slice of the watt
+        budget it owns."""
+        if self._adaptive is None:
+            return np.ones(self.config.n_shards)
+        return np.asarray(self._adaptive.ratio)
+
+    def _adaptive_scan(self, chassis, power_w) -> None:
+        """Route one unique-chassis sample window to the owner shards
+        and step every shard's controller concurrently."""
+        if self.obs is not None:
+            self.obs.registry.counter(
+                "serve_dispatch_total",
+                help="compiled kernel dispatches, by call site",
+                kind="adaptive_sharded").inc()
+        self._adaptive, out = sharding.apply_adaptive_sharded(
+            self.adaptive_cfg, self.sharded, self._adaptive, chassis,
+            power_w, mesh=self.mesh)
+        self._apply_ratio(out)
+
+    def _apply_ratio(self, out) -> None:
+        """Put the stepped per-shard ratios in force: rescale each
+        shard's slice of the admission ceiling and retarget its free
+        token pool against the committed rho — never revoking tokens
+        already committed to placed VMs (`adaptive.retarget_pool`
+        floors the free pool at zero), so the reserve/commit
+        conservation invariant survives any mint/retire sequence."""
+        ratio = out.ratio
+        cap = self._sharded_cap_base * ratio[:, None]
+        pool = self.sharded.pool
+        if self._pool_base is not None:
+            committed = jnp.sum(self.sharded.shards.rho_peak, axis=-1)
+            pool = adaptive.retarget_pool(
+                self.adaptive_cfg, self._pool_base, ratio, committed,
+                jnp)
+        self.sharded = self.sharded._replace(rho_cap=cap, pool=pool)
+        self._record_adaptive(out)
+
+    def _record_adaptive(self, out) -> None:
+        """Per-shard export of one controller decision (shard-labelled
+        gauge, summed step counters, one reason row per shard)."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        ratios = np.asarray(out.ratio)
+        ratchets = np.asarray(out.ratchet)
+        backoffs = np.asarray(out.backoff)
+        for i, r in enumerate(ratios):
+            reg.gauge("adaptive_ratio",
+                      help="oversubscription ratio of the adaptive "
+                      "controller", shard=str(i)).set(float(r))
+        reg.counter("adaptive_ratchet_total",
+                    help="adaptive-controller up-steps taken").inc(
+                        int(ratchets.sum()))
+        reg.counter("adaptive_backoff_total",
+                    help="adaptive-controller down-steps taken").inc(
+                        int(backoffs.sum()))
+        if self.obs.adaptive is not None:
+            now = time.time()
+            n_known = np.asarray(out.n_known)
+            n_stable = np.asarray(out.n_stable)
+            frac = np.asarray(out.stable_frac)
+            hot = np.asarray(out.hot)
+            for i in range(len(ratios)):
+                self.obs.adaptive.record(
+                    t=now, shard=i, ratio=float(ratios[i]),
+                    stable_frac=float(frac[i]),
+                    n_known=int(n_known[i]),
+                    n_stable=int(n_stable[i]),
+                    action=1 if ratchets[i] else
+                    (-1 if backoffs[i] else 0),
+                    reason=adaptive.decision_reason(
+                        float(self._ratio_prev[i]), float(ratios[i]),
+                        int(n_known[i]), bool(ratchets[i]),
+                        bool(backoffs[i]), bool(hot[i])))
+        self._ratio_prev = ratios
 
     # -- sharded power-emergency plane -------------------------------------
     def _init_emergency(self):

@@ -562,6 +562,65 @@ def _caps_fn(cfg: emergency.EmergencyConfig, mesh):
     return jax.jit(fn)
 
 
+def init_adaptive_sharded(cfg, n_chassis: int, n_shards: int,
+                          dtype=jnp.float32):
+    """Adaptive-controller state partitioned like the cluster: one
+    `serve.adaptive.AdaptiveState` slice per shard, leading (N,) axis
+    over the same contiguous chassis blocks as `shard_state` — each
+    shard carries its *own* ratio over the budget slice it owns."""
+    from repro.serve import adaptive
+    chassis_to_shard(n_chassis, n_shards)       # validates divisibility
+    return adaptive.init_adaptive(
+        cfg, n_chassis // n_shards, batch_shape=(n_shards,), xp=jnp,
+        dtype=dtype)
+
+
+@lru_cache(maxsize=None)
+def _adaptive_fn(cfg, mesh):
+    """Compiled sharded adaptive-controller scan
+    (`serve.adaptive.adaptive_step` per shard): each shard scores its
+    own chassis windows and steps its own ratio — vmap on one device,
+    shard_map over the mesh, identical per-shard arithmetic (the
+    `_caps_fn` pattern)."""
+    from repro.serve import adaptive
+
+    def one_shard(st, ast, pw, mask):
+        rho_lv = emergency.chassis_rho_levels(
+            st.gamma_nuf, st.gamma_uf, st.chassis_servers, jnp)
+        return adaptive.adaptive_step(cfg, ast, rho_lv, pw, mask, jnp)
+
+    def fn(shards, ast, pw, mask):
+        if mesh is None:
+            return jax.vmap(one_shard)(shards, ast, pw, mask)
+
+        def per(st, a1, p1, m1):
+            sq = partial(jax.tree.map, lambda x: x[0])
+            a2, o2 = one_shard(sq(st), sq(a1), p1[0], m1[0])
+            return jax.tree.map(lambda x: x[None], (a2, o2))
+        spec = P(SHARD_AXIS)
+        return shard_map(per, mesh=mesh, in_specs=(spec,) * 4,
+                         out_specs=(spec, spec))(shards, ast, pw, mask)
+
+    return jax.jit(fn)
+
+
+def apply_adaptive_sharded(cfg, sharded: ShardedState, ast, chassis,
+                           power_w, *, mesh=None):
+    """Apply one unique-chassis power-sample window to the sharded
+    adaptive-controller state (`serve.adaptive`, DESIGN.md §15): route
+    samples to their owner shards (`split_caps`) and run every shard's
+    stability-scoring + ratio step concurrently — no cross-shard
+    communication; each shard adapts the slice of the watt budget it
+    owns. Returns ``(new_adaptive_state, AdaptiveOutputs)`` with the
+    per-shard leading axis."""
+    dtype = sharded.shards.free_cores.dtype
+    pw, mask, _ = split_caps(sharded, chassis, power_w,
+                             np.zeros(len(np.asarray(chassis))))
+    fn = _adaptive_fn(cfg, mesh)
+    return fn(sharded.shards, ast, jnp.asarray(pw, dtype),
+              jnp.asarray(mask))
+
+
 def apply_caps_sharded(cfg: emergency.EmergencyConfig,
                        sharded: ShardedState, emer, chassis, power_w,
                        t, *, mesh=None):

@@ -116,6 +116,12 @@ class SimMetrics:
     throttled_s: np.ndarray = field(default_factory=lambda: np.zeros(2))
     alarms: int = 0
     migrations: int = 0
+    #: adaptive-ratio controller (`adaptive_cfg` runs only): the final
+    #: oversubscription ratio and the up/down step counts — 1.0/0/0
+    #: when the controller is off
+    adaptive_ratio: float = 1.0
+    adaptive_ratchets: int = 0
+    adaptive_backoffs: int = 0
 
     @property
     def nuf_throttled_s(self) -> float:
@@ -240,6 +246,83 @@ class _EmergencySim:
         self.st = emg.reset_dwell(self.st, due, np)
 
 
+class _AdaptiveSim:
+    """Adaptive-ratio controller driven inside `simulate`
+    (DESIGN.md §15, docs/adaptive.md).
+
+    Holds one fleet-wide `serve.adaptive.AdaptiveState` (f64) and
+    steps it at every deployment event from the same synthetic power
+    samples the emergency plane reads: the committed per-criticality
+    aggregates scaled by the deterministic diurnal utilization sample
+    (`sim.telemetry.diurnal_util`) through `serve.adaptive.
+    offered_power`. The resulting ratio scales the serve path's
+    admission ceiling (and, sharded, the global token allowance)
+    before the *next* placement scan — closed loop, one scan behind,
+    exactly like the pipeline's eager cap-window stepping.
+
+    The numpy execution is the oracle; with `use_jax` every scan ALSO
+    runs the compiled jnp twin in x64 and asserts it bit-identical —
+    the same acceptance invariant `_EmergencySim` enforces."""
+
+    def __init__(self, cfg, n_chassis: int, chassis_of: np.ndarray,
+                 use_jax: bool):
+        from repro.serve import adaptive
+        self.adp = adaptive
+        self.cfg = cfg
+        self.n_chassis = n_chassis
+        self.chassis_of = chassis_of
+        self.use_jax = use_jax
+        self.st = adaptive.init_adaptive(cfg, n_chassis, xp=np,
+                                         dtype=np.float64)
+        self.span = lambda name: contextlib.nullcontext()
+
+    def _rho_lv(self, state) -> np.ndarray:
+        c = self.n_chassis
+        return np.stack(
+            [np.bincount(self.chassis_of, weights=state.gamma_nuf,
+                         minlength=c),
+             np.bincount(self.chassis_of, weights=state.gamma_uf,
+                         minlength=c)], axis=-1)
+
+    @property
+    def ratio(self) -> float:
+        """Current fleet oversubscription ratio (starts at 1.0)."""
+        return float(self.st.ratio)
+
+    @property
+    def ratchets(self) -> int:
+        """Up-steps taken so far."""
+        return int(self.st.ratchets)
+
+    @property
+    def backoffs(self) -> int:
+        """Down-steps taken so far."""
+        return int(self.st.backoffs)
+
+    def scan(self, t_h: float, state) -> None:
+        """One controller scan at simulation time `t_h` (hours)."""
+        adp = self.adp
+        u = float(tel.diurnal_util(t_h))
+        rho_lv = self._rho_lv(state)
+        power = np.asarray(adp.offered_power(self.cfg, rho_lv, u, np))
+        mask = np.ones(self.n_chassis, bool)
+        st2, out = adp.adaptive_step(self.cfg, self.st, rho_lv, power,
+                                     mask, np)
+        if self.use_jax:
+            import jax
+            import jax.numpy as jnp
+            with jax.experimental.enable_x64():
+                stj, _ = adp.adaptive_step(
+                    self.cfg, jax.tree.map(jnp.asarray, self.st),
+                    jnp.asarray(rho_lv), jnp.asarray(power),
+                    jnp.asarray(mask), jnp)
+            for a, b in zip(st2, stj):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                    "adaptive controller kernel diverged from numpy " \
+                    "oracle"
+        self.st = st2
+
+
 def evaluate_power_dynamics(vm_live: dict, chassis_of: np.ndarray,
                             n_chassis: int, budget_w: float,
                             blades_per_chassis: int = BLADES_PER_CHASSIS,
@@ -326,6 +409,7 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
              n_ingest_hosts: int = 1,
              cluster_budget_w: float | None = None,
              emergency_cfg=None,
+             adaptive_cfg=None,
              prefill_core_ratio: float = 0.0,
              trace: list | None = None,
              obs=None) -> SimMetrics:
@@ -383,6 +467,18 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     backends additionally asserts the compiled jnp kernel
     bit-identical to the numpy oracle on every scan.
 
+    `adaptive_cfg`, a `serve.adaptive.AdaptiveConfig`, turns on the
+    closed-loop adaptive oversubscription controller (DESIGN.md §15,
+    docs/adaptive.md) and requires a serve backend — it modulates the
+    serve path's admission ceiling, which the event oracle does not
+    read. Every deployment event also steps the controller from the
+    same diurnal power samples; the resulting ratio scales
+    `admission_budget_w`'s per-chassis rho ceiling (and, sharded, the
+    `cluster_budget_w` token allowance, never revoking committed
+    tokens) for the *next* placement scan. Under the serve backends
+    every controller scan asserts the compiled jnp twin bit-identical
+    to the numpy oracle, like the emergency plane.
+
     `trace`, if given, collects the chosen server (or failure code)
     per placement attempt — the decision-equivalence probe.
 
@@ -398,6 +494,12 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     if n_ingest_hosts < 1:
         raise ValueError(f"n_ingest_hosts must be >= 1, "
                          f"got {n_ingest_hosts}")
+    if adaptive_cfg is not None and backend == "event":
+        # the controller modulates the serve admission ceiling; the
+        # event oracle has no such ceiling, so silently accepting the
+        # knob would report a ratio that never bound anything
+        raise ValueError(
+            "adaptive_cfg requires backend='serve' or 'serve-sharded'")
     if n_ingest_hosts != 1 and backend != "serve-sharded":
         # only the sharded backend routes groups through the ingest
         # merge; silently ignoring the knob would make an invariance
@@ -435,6 +537,12 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                              use_jax=backend != "event")
         if obs is not None:
             emer.span = obs.span
+    adp = None
+    if adaptive_cfg is not None:
+        adp = _AdaptiveSim(adaptive_cfg, state.n_chassis, chassis_of,
+                           use_jax=True)
+        if obs is not None:
+            adp.span = obs.span
     departures: list = []        # heap of (time, vm_token)
     vm_live: dict = {}           # token -> (server, cores, p95eff, uf_pred)
     token = 0
@@ -490,6 +598,9 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         if emer is not None:
             with span("emergency"):
                 emer.scan(t, state, vm_live)
+        if adp is not None:
+            with span("adaptive"):
+                adp.scan(t, state)
         # sample the whole deployment group first (placement consumes
         # no randomness, so both backends see the same stream), then
         # place per-VM (event) or via one batched scan (serve)
@@ -532,6 +643,10 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             # rule, so 'serve' reproduces 'event' placements exactly
             # (the f32 serving path's divergence is bounded in
             # DESIGN.md §9)
+            # the controller's ratio (stepped just above, one scan
+            # behind by construction) widens or shrinks the watt
+            # ceilings for THIS group's scan
+            ratio = 1.0 if adp is None else adp.ratio
             with jax.experimental.enable_x64(), span("place"):
                 if backend == "serve":
                     if obs is not None:
@@ -541,20 +656,23 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
                             "by call site", kind="place_batch").inc()
                     _, srvs = place_batch(
                         device_state(state, jnp.float64), cores_a,
-                        uf_a.astype(bool), p95_a, valid, serve_rho_cap,
+                        uf_a.astype(bool), p95_a, valid,
+                        serve_rho_cap * ratio,
                         policy, state.cores_per_server)
                     chosen = [int(s) for s in np.asarray(srvs)[:n]]
                 else:
                     # the token pool is the global allowance net of
                     # everything currently committed, so the watt
                     # invariant holds across the whole run, not just
-                    # within one group
+                    # within one group; the adaptive ratio retargets
+                    # the allowance but never the committed side
+                    # (`serve.adaptive.retarget_pool` semantics)
                     pool = None if np.isinf(serve_pool_total) else \
-                        max(serve_pool_total - float(state.rho_peak.sum()),
-                            0.0)
+                        max(serve_pool_total * ratio
+                            - float(state.rho_peak.sum()), 0.0)
                     sharded = shard_state(
                         device_state(state, jnp.float64), serve_shards,
-                        rho_cap=serve_rho_cap, pool_total=pool)
+                        rho_cap=serve_rho_cap * ratio, pool_total=pool)
                     _, srvs, _ = place_group_sharded(
                         sharded, cores_a, uf_a.astype(bool), p95_a,
                         valid, policy, state.cores_per_server,
@@ -597,7 +715,10 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         placements=placements, failures=failures, power=power,
         throttled_s=np.asarray(throttled, np.float64),
         alarms=0 if emer is None else emer.alarms,
-        migrations=0 if emer is None else emer.migrations)
+        migrations=0 if emer is None else emer.migrations,
+        adaptive_ratio=1.0 if adp is None else adp.ratio,
+        adaptive_ratchets=0 if adp is None else adp.ratchets,
+        adaptive_backoffs=0 if adp is None else adp.backoffs)
     if obs is not None:
         from repro.obs import record_sim_metrics
         record_sim_metrics(obs.registry, metrics)

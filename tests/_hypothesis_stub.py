@@ -45,6 +45,45 @@ def sampled_from(seq):
     return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
 
 
+def lists(elements, min_size=0, max_size=None, unique=False, **_):
+    cap = min_size + 10 if max_size is None else max_size
+
+    def sample(rng):
+        n = int(rng.integers(min_size, cap + 1))
+        out, seen, tries = [], set(), 0
+        while len(out) < n and tries < 200 * (cap + 1):
+            v = elements.sample(rng)
+            tries += 1
+            if unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+    return _Strategy(sample)
+
+
+class _DrawFn:
+    """The `draw` callable handed to @composite functions."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def __call__(self, strategy):
+        return strategy.sample(self._rng)
+
+
+def composite(fn):
+    """`@composite def s(draw, ...)` -> calling ``s(...)`` returns a
+    strategy, like the real decorator (draw pulls from the shared
+    seeded generator)."""
+    def make(*args, **kw):
+        return _Strategy(lambda rng: fn(_DrawFn(rng), *args, **kw))
+    make.__name__ = fn.__name__
+    make.__doc__ = fn.__doc__
+    return make
+
+
 def arrays(dtype, shape, elements=None, **_):
     if isinstance(shape, int):
         shape = (shape,)
@@ -121,6 +160,8 @@ def install() -> None:
     st_mod.floats = floats
     st_mod.booleans = booleans
     st_mod.sampled_from = sampled_from
+    st_mod.lists = lists
+    st_mod.composite = composite
     extra = types.ModuleType("hypothesis.extra")
     hnp = types.ModuleType("hypothesis.extra.numpy")
     hnp.arrays = arrays

@@ -1,0 +1,189 @@
+"""Direct unit coverage of `repro.runtime.fault_tolerance`.
+
+The module is dormant on the serve path today (ROADMAP gap); these
+tests pin its observable behavior — the restore-retry loop, restart
+exhaustion, the pre-commit rewind, the straggler rolling deadline
+(the loop's heartbeat), and the fact that only the chaos channel
+(`InjectedFailure`) is retried while real exceptions propagate —
+so later PRs can wire it into ingest against a fixed contract."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime.fault_tolerance import (FaultToleranceConfig,
+                                           FaultTolerantLoop,
+                                           InjectedFailure, RunState)
+
+
+def _loop(tmp_path, **kw):
+    kw.setdefault("checkpoint_every", 5)
+    return FaultTolerantLoop(FaultToleranceConfig(**kw),
+                             Checkpointer(str(tmp_path)))
+
+
+def _counting(state, batch):
+    return {"x": state["x"] + batch}, float(state["x"])
+
+
+# --- restore-retry --------------------------------------------------------
+
+def test_injected_failure_from_step_fn_restores_and_retries(tmp_path):
+    """A step_fn raising the chaos exception rewinds to the newest
+    commit and the run still converges to the exact final state."""
+    loop = _loop(tmp_path)
+    fails = {7: True, 12: True}
+
+    def step_fn(state, batch):
+        if fails.pop(int(state["x"]), False):
+            raise InjectedFailure("chaos")
+        return _counting(state, batch)
+
+    state, history = loop.run({"x": jnp.asarray(0.0)}, step_fn,
+                              lambda s: 1.0, n_steps=20)
+    assert float(state["x"]) == 20.0
+    assert loop.state.restarts == 2
+    # the replayed steps re-run: history is longer than n_steps
+    assert len(history) > 20
+
+
+def test_failure_before_first_commit_rewinds_to_snapshot(tmp_path):
+    """With no committed checkpoint yet, restore falls back to the
+    pre-loop snapshot and start_step — no stale state leaks in."""
+    loop = _loop(tmp_path, checkpoint_every=100)
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(float(state["x"]))
+        if len(seen) == 3:
+            raise InjectedFailure("early")
+        return _counting(state, batch)
+
+    state, _ = loop.run({"x": jnp.asarray(5.0)}, step_fn,
+                        lambda s: 1.0, n_steps=4)
+    assert loop.state.restarts == 1
+    assert float(state["x"]) == 9.0          # 5 + 4, replayed from 5
+    assert seen[3] == 5.0                    # rewound to the snapshot
+
+
+def test_restart_exhaustion_reraises(tmp_path):
+    """max_restarts bounds the retry loop: one more chaos failure
+    than allowed escapes to the caller."""
+    loop = _loop(tmp_path, max_restarts=3)
+
+    def step_fn(state, batch):
+        raise InjectedFailure("always")
+
+    with pytest.raises(InjectedFailure):
+        loop.run({"x": jnp.asarray(0.0)}, step_fn, lambda s: 1.0,
+                 n_steps=5)
+    assert loop.state.restarts == 4          # 3 retries + the fatal one
+
+
+def test_real_exception_propagates_without_retry(tmp_path):
+    """Only the chaos channel is retried: a genuine defect in step_fn
+    must fail the job loudly, untouched by the restore loop."""
+    loop = _loop(tmp_path)
+    calls = []
+
+    def step_fn(state, batch):
+        calls.append(1)
+        raise ValueError("real bug")
+
+    with pytest.raises(ValueError, match="real bug"):
+        loop.run({"x": jnp.asarray(0.0)}, step_fn, lambda s: 1.0,
+                 n_steps=5)
+    assert len(calls) == 1                   # no retry happened
+    assert loop.state.restarts == 0
+
+
+def test_injection_rate_draws_from_seeded_rng(tmp_path):
+    """The loop's own chaos channel: a high injection rate produces
+    restarts deterministically for a fixed seed, and the run still
+    lands on the exact final state."""
+    cfg = FaultToleranceConfig(checkpoint_every=4,
+                               inject_failure_rate=0.3)
+    loop = FaultTolerantLoop(cfg, Checkpointer(str(tmp_path)),
+                             rng_seed=7)
+    state, _ = loop.run({"x": jnp.asarray(0.0)}, _counting,
+                        lambda s: 1.0, n_steps=16)
+    assert loop.state.restarts > 0
+    assert float(state["x"]) == 16.0
+
+
+# --- checkpoint cadence / resume ------------------------------------------
+
+def test_checkpoints_commit_on_cadence(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    loop = FaultTolerantLoop(FaultToleranceConfig(checkpoint_every=4),
+                             ck)
+    loop.run({"x": jnp.asarray(0.0)}, _counting, lambda s: 1.0,
+             n_steps=10)
+    assert ck.latest_step() == 8             # 4 and 8 committed, not 10
+
+
+def test_resume_or_init_cold_and_warm(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    loop = FaultTolerantLoop(FaultToleranceConfig(), ck)
+    state, start = loop.resume_or_init(lambda: {"x": jnp.asarray(1.0)})
+    assert start == 0 and float(state["x"]) == 1.0
+    ck.save(6, {"x": jnp.asarray(42.0)})
+    state, start = loop.resume_or_init(lambda: {"x": jnp.asarray(1.0)})
+    assert start == 6 and float(state["x"]) == 42.0
+
+
+# --- straggler rolling deadline (the loop's heartbeat) --------------------
+
+def test_straggler_deadline_fires_after_patience():
+    """Steps slower than factor x rolling median for `patience`
+    consecutive beats expire the deadline: mitigation fires and the
+    counter rearms."""
+    loop = FaultTolerantLoop(
+        FaultToleranceConfig(straggler_factor=2.0,
+                             straggler_patience=3),
+        Checkpointer.__new__(Checkpointer))   # never touched here
+    hits = []
+    loop.on_straggler = lambda s: hits.append(s.mitigations)
+    for dt in [0.1] * 10:
+        loop._track_straggler(dt)
+        loop.state.step_times.append(dt)
+    for dt in [0.5] * 6:
+        loop._track_straggler(dt)
+        loop.state.step_times.append(dt)
+    assert loop.state.mitigations >= 1
+    assert hits                               # callback saw each expiry
+
+
+def test_fast_step_rearms_the_straggler_counter():
+    """A single on-deadline beat resets patience — intermittent slow
+    steps (capping-induced) never accumulate into a mitigation."""
+    loop = FaultTolerantLoop(
+        FaultToleranceConfig(straggler_factor=2.0,
+                             straggler_patience=2),
+        Checkpointer.__new__(Checkpointer))
+    for dt in [0.1] * 10:
+        loop._track_straggler(dt)
+        loop.state.step_times.append(dt)
+    for dt in [0.5, 0.1] * 4:                 # never 2 slow in a row
+        loop._track_straggler(dt)
+        loop.state.step_times.append(dt)
+    assert loop.state.mitigations == 0
+    assert loop.state.straggler_steps == 0
+
+
+def test_no_deadline_before_any_history():
+    """median of an empty window is +inf: the first beats can never
+    expire the deadline, however slow."""
+    loop = FaultTolerantLoop(
+        FaultToleranceConfig(straggler_factor=2.0,
+                             straggler_patience=1),
+        Checkpointer.__new__(Checkpointer))
+    loop._track_straggler(999.0)
+    assert loop.state.mitigations == 0
+    assert RunState().median_step_time() == float("inf")
+
+
+def test_median_uses_trailing_window():
+    st = RunState(step_times=[0.1] * 50 + [1.0] * 50)
+    assert st.median_step_time() == pytest.approx(1.0)
+    assert np.isfinite(st.median_step_time())
