@@ -46,6 +46,8 @@ DRIVERS = (
     ("serve_obs", "benchmarks.serve_obs", "BENCH_serve_obs.json"),
     ("serve_adaptive", "benchmarks.serve_adaptive",
      "BENCH_serve_adaptive.json"),
+    ("serve_resources", "benchmarks.serve_resources",
+     "BENCH_serve_resources.json"),
     ("forest_kernel", "benchmarks.forest_kernel",
      "BENCH_forest_kernel.json"),
     ("roofline", "benchmarks.roofline_report", None),

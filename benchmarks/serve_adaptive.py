@@ -60,10 +60,11 @@ from repro.core import features as F
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import F_MAX, idle_power
 from repro.serve import (
-    AdaptiveConfig, EmergencyConfig, ShardedServeConfig,
-    ShardedServePipeline, device_state)
+    AdaptiveConfig, EmergencyConfig, PlaneBundle, ResourceVector,
+    ShardedServeConfig, ShardedServePipeline, device_state)
 from repro.serve.featurizer import table_from_history
-from repro.sim.scheduler_sim import PredictionChannel, simulate
+from repro.sim.scheduler_sim import (PredictionChannel, ServeBackendSpec,
+                                     SimSpec, simulate)
 from repro.sim.telemetry import arrival_batch, arrival_stamps
 
 OUT_PATH = "BENCH_serve_adaptive.json"
@@ -120,14 +121,16 @@ def _fixed_budget_w(ratio: float) -> float:
 def _sweep_arm(budget_w: float, adaptive_cfg, smoke: bool) -> dict:
     t0 = time.perf_counter()
     m = simulate(
-        SchedulerPolicy(), PredictionChannel("ml"), backend="serve",
-        days=0.2 if smoke else SWEEP_DAYS, seed=SWEEP_SEED,
-        deployments_per_hour=16.0 if smoke else
-        SWEEP_DEPLOYMENTS_PER_HOUR,
-        prefill_core_ratio=SWEEP_PREFILL,
-        admission_budget_w=budget_w,
-        emergency_cfg=EmergencyConfig.from_model(CHASSIS_BUDGET_W),
-        adaptive_cfg=adaptive_cfg)
+        SchedulerPolicy(), PredictionChannel("ml"),
+        SimSpec(days=0.2 if smoke else SWEEP_DAYS, seed=SWEEP_SEED,
+                deployments_per_hour=16.0 if smoke else
+                SWEEP_DEPLOYMENTS_PER_HOUR,
+                prefill_core_ratio=SWEEP_PREFILL,
+                serve=ServeBackendSpec(
+                    backend="serve",
+                    admission_budget=ResourceVector(watts=budget_w)),
+                emergency=EmergencyConfig.from_model(CHASSIS_BUDGET_W),
+                adaptive=adaptive_cfg))
     return {"admitted": m.placements - m.failures,
             "failures": m.failures,
             "uf_throttled_s": m.uf_throttled_s,
@@ -208,12 +211,13 @@ def _make_pipe(svc, hist, labels, state, batch_size,
         svc, table_from_history(hist, labels, cap),
         device_state(state), cores_per_server=CORES_PER_SERVER,
         blades_per_chassis=BLADES_PER_CHASSIS,
-        config=ShardedServeConfig(batch_size=batch_size,
-                                  n_shards=N_SHARDS),
-        emergency_cfg=EmergencyConfig.from_model(BUDGET_2X),
-        adaptive_cfg=AdaptiveConfig(window=8, min_history=1,
-                                    hot_util=0.9, step_up=0.25)
-        if adaptive_on else None)
+        config=ShardedServeConfig(
+            batch_size=batch_size, n_shards=N_SHARDS,
+            planes=PlaneBundle(
+                emergency=EmergencyConfig.from_model(BUDGET_2X),
+                adaptive=AdaptiveConfig(window=8, min_history=1,
+                                        hot_util=0.9, step_up=0.25)
+                if adaptive_on else None)))
 
 
 def _stream(pipe, arrivals, batch_size, sweep_power) -> None:

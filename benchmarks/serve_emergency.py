@@ -43,7 +43,8 @@ from repro.core import features as F
 from repro.core.placement import ClusterState, SchedulerPolicy
 from repro.core.predictor import train_service
 from repro.serve import (
-    EmergencyConfig, ShardedServeConfig, ShardedServePipeline, device_state)
+    EmergencyConfig, PlaneBundle, ShardedServeConfig,
+    ShardedServePipeline, device_state)
 from repro.serve.featurizer import table_from_history
 from repro.sim.telemetry import (
     arrival_batch, arrival_stamps, generate_population)
@@ -110,10 +111,11 @@ def _make_pipe(svc, hist, labels, state, n_shards, batch_size,
         svc, table_from_history(hist, labels, cap),
         device_state(state), cores_per_server=CORES_PER_SERVER,
         blades_per_chassis=BLADES_PER_CHASSIS,
-        config=ShardedServeConfig(batch_size=batch_size,
-                                  n_shards=n_shards),
-        emergency_cfg=EmergencyConfig.from_model(BUDGET_2X)
-        if emergency else None)
+        config=ShardedServeConfig(
+            batch_size=batch_size, n_shards=n_shards,
+            planes=PlaneBundle(
+                emergency=EmergencyConfig.from_model(BUDGET_2X)
+                if emergency else None)))
 
 
 def _sweep_power(state: ClusterState) -> np.ndarray:
@@ -211,16 +213,17 @@ def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:
         for s in SHARD_COUNTS}
 
     # Table-4 axis: critical vs non-critical throttled-seconds at 2x
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel, SimSpec,
+                                         simulate)
     sim_kw = dict(days=0.1 if smoke else 0.55, seed=0,
                   deployments_per_hour=16.0, prefill_core_ratio=0.75)
     throttled = {}
     for name, blind in (("aware", False), ("blind", True)):
         m = simulate(SchedulerPolicy(alpha=0.8),
                      PredictionChannel("ml"),
-                     emergency_cfg=EmergencyConfig.from_model(
+                     SimSpec(emergency=EmergencyConfig.from_model(
                          BUDGET_2X, dwell_s=1800.0,
-                         criticality_blind=blind), **sim_kw)
+                         criticality_blind=blind), **sim_kw))
         throttled[name] = {"uf_throttled_s": m.uf_throttled_s,
                            "nuf_throttled_s": m.nuf_throttled_s,
                            "alarms": m.alarms,

@@ -38,8 +38,8 @@ from benchmarks.serve_emergency import (
 from repro.core import features as F
 from repro.obs import Observability
 from repro.serve import (
-    EmergencyConfig, ShardedServeConfig, ShardedServePipeline,
-    device_state)
+    EmergencyConfig, PlaneBundle, ShardedServeConfig,
+    ShardedServePipeline, device_state)
 from repro.serve.featurizer import table_from_history
 
 OUT_PATH = "BENCH_serve_obs.json"
@@ -57,10 +57,11 @@ def _make_pipe(svc, hist, labels, state, n_shards, batch_size,
         svc, table_from_history(hist, labels, cap),
         device_state(state), cores_per_server=CORES_PER_SERVER,
         blades_per_chassis=BLADES_PER_CHASSIS,
-        config=ShardedServeConfig(batch_size=batch_size,
-                                  n_shards=n_shards),
-        emergency_cfg=EmergencyConfig.from_model(BUDGET_2X),
-        obs=Observability.full() if obs_on else None)
+        config=ShardedServeConfig(
+            batch_size=batch_size, n_shards=n_shards,
+            planes=PlaneBundle(
+                emergency=EmergencyConfig.from_model(BUDGET_2X),
+                obs=Observability.full() if obs_on else None)))
 
 
 def run(out_path: str = OUT_PATH, smoke: bool = False) -> dict:

@@ -20,7 +20,8 @@ from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import train_service, table3_metrics
 from repro.sim.chassis_sim import paper_chassis_specs, simulate_chassis
-from repro.sim.scheduler_sim import PredictionChannel, simulate
+from repro.sim.scheduler_sim import (PredictionChannel, SimSpec,
+                                     simulate)
 from repro.sim.telemetry import (generate_chassis_telemetry,
                                  generate_population)
 
@@ -40,9 +41,9 @@ print(f"criticality acc {m['criticality']['accuracy_high_conf']:.2f}, "
 
 print("=== 2. criticality-aware scheduling (Fig 7) ===")
 base = simulate(SchedulerPolicy(use_power_rule=False),
-                PredictionChannel("none"), days=6, seed=0)
+                PredictionChannel("none"), SimSpec(days=6, seed=0))
 ours = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                days=6, seed=0)
+                SimSpec(days=6, seed=0))
 print(f"chassis balance std: {base.chassis_score_std:.3f} -> "
       f"{ours.chassis_score_std:.3f}; server balance std: "
       f"{base.server_score_std:.3f} -> {ours.server_score_std:.3f}")

@@ -23,6 +23,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.power_model import F_MAX, ServerPowerModel
+from repro.core.resources import ResourceVector
 
 
 @dataclass(frozen=True)
@@ -197,3 +198,30 @@ def scenario_table(draws_w: np.ndarray, provisioned_w: float,
             d, provisioned_w, SCENARIOS["predictions_minimal_uf_impact"],
             f2)
     return rows
+
+
+def joint_chassis_budget(draws_w: np.ndarray, provisioned_w: float,
+                         cfg: OversubConfig, fleet: FleetProfile,
+                         cores_per_chassis: float,
+                         gb_per_chassis: float,
+                         core_ratio: float = 1.0,
+                         gb_ratio: float = 1.0,
+                         full_server: bool = False
+                         ) -> tuple[BudgetResult, ResourceVector]:
+    """Joint (watts, cores, GB) chassis budget (DESIGN.md §16).
+
+    The watts axis comes from the paper's 5-step algorithm
+    (`compute_budget`); the cores/GB axes are Coach-style
+    oversubscription ratios over the *physical* chassis capacity
+    (``ratio >= 1`` oversells the axis; the serve plane's per-resource
+    admission ledger enforces the result, and `resources.trough_ratios`
+    conditions the ratios on the diurnal trough at admission time).
+    Returns ``(BudgetResult, ResourceVector)`` — the vector is what
+    `serve.admission.resource_caps_from_budget` turns into per-chassis
+    (C, R) ceilings."""
+    result = compute_budget(draws_w, provisioned_w, cfg, fleet,
+                            full_server=full_server)
+    vec = ResourceVector(watts=result.budget_w,
+                         cores=core_ratio * float(cores_per_chassis),
+                         gb=gb_ratio * float(gb_per_chassis))
+    return result, vec

@@ -98,15 +98,20 @@ def _run_sim(shards: int, days: float, seed: int) -> Observability:
     """Drive a short metrics-enabled sharded sim (emergency plane on,
     warm-started near the alarm threshold) and return its bundle."""
     from repro.core.placement import SchedulerPolicy
+    from repro.core.resources import ResourceVector
     from repro.serve.emergency import EmergencyConfig
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
 
     obs = Observability.full()
-    simulate(SchedulerPolicy(), PredictionChannel(), days=days,
-             seed=seed, backend="serve-sharded", serve_shards=shards,
-             cluster_budget_w=2.0e6,
-             emergency_cfg=EmergencyConfig.from_model(1480.0),
-             prefill_core_ratio=0.5, obs=obs)
+    simulate(SchedulerPolicy(), PredictionChannel(),
+             SimSpec(days=days, seed=seed, prefill_core_ratio=0.5,
+                     serve=ServeBackendSpec(
+                         backend="serve-sharded", shards=shards,
+                         cluster_budget=ResourceVector(watts=2.0e6)),
+                     emergency=EmergencyConfig.from_model(1480.0)),
+             obs=obs)
     return obs
 
 

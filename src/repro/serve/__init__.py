@@ -10,8 +10,15 @@ from repro.serve.adaptive import (AdaptiveConfig, AdaptiveOutputs,
                                   adaptive_step, decision_reason,
                                   init_adaptive, offered_power,
                                   retarget_pool)
+from repro.core.resources import (RESOURCES, ResourceVector,
+                                  demand_vector, trough_ratios)
 from repro.serve.admission import (
-    headroom_w, projected_chassis_power, rho_cap_from_budget)
+    headroom_w, projected_chassis_power, resource_caps_from_budget,
+    rho_cap_from_budget)
+from repro.serve.ballooning import (BalloonOutputs, BalloonState,
+                                    BallooningConfig, balloon_demand_w,
+                                    balloon_step, init_ballooning,
+                                    total_ballooned_gb)
 from repro.serve.emergency import (CRIT_NUF, CRIT_UF, N_LEVELS,
                                    EmergencyConfig, EmergencyOutputs,
                                    EmergencyState, chassis_rho_levels,
@@ -32,8 +39,8 @@ from repro.serve.ingest import (
     kway_merge, slice_soa)
 from repro.serve.mitigation import (LiveVMs, MigrationPlan, plan_migrations)
 from repro.serve.pipeline import (
-    ServeConfig, ServePipeline, ServeResult, ShardedServeConfig,
-    ShardedServePipeline)
+    PlaneBundle, ServeConfig, ServePipeline, ServeResult,
+    ShardedServeConfig, ShardedServePipeline)
 from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    FAIL_TOKENS, DeviceClusterState,
                                    SweepCounters, device_state,
@@ -44,12 +51,15 @@ from repro.serve.placement import (FAIL_CAPACITY, FAIL_POWER,
                                    score_server_batch)
 from repro.serve.sharding import (SHARD_AXIS, ShardedState,
                                   apply_adaptive_sharded,
+                                  apply_caps_ballooned_sharded,
                                   apply_caps_sharded, chassis_to_shard,
                                   consume_departures,
                                   device_put_sharded_state,
                                   init_adaptive_sharded,
+                                  init_ballooning_sharded,
                                   init_emergency_sharded,
                                   place_group_sharded, remove_sharded,
+                                  resource_pool_from_budget,
                                   rho_pool_from_budget, route_shard,
                                   shard_mesh, shard_state, split_caps,
                                   split_departures, unshard_state)
@@ -74,14 +84,21 @@ __all__ = [
     "place_batch_pooled", "remove_batch", "score_chassis_batch",
     "score_server_batch",
     "FAIL_CAPACITY", "FAIL_POWER", "FAIL_TOKENS",
-    "rho_cap_from_budget", "projected_chassis_power", "headroom_w",
-    "ServeConfig", "ServePipeline", "ServeResult",
+    "RESOURCES", "ResourceVector", "demand_vector", "trough_ratios",
+    "rho_cap_from_budget", "resource_caps_from_budget",
+    "projected_chassis_power", "headroom_w",
+    "BallooningConfig", "BalloonOutputs", "BalloonState",
+    "balloon_demand_w", "balloon_step", "init_ballooning",
+    "total_ballooned_gb",
+    "PlaneBundle", "ServeConfig", "ServePipeline", "ServeResult",
     "ShardedServeConfig", "ShardedServePipeline",
     "SHARD_AXIS", "ShardedState", "apply_caps_sharded",
+    "apply_caps_ballooned_sharded",
     "apply_adaptive_sharded", "chassis_to_shard", "consume_departures",
     "device_put_sharded_state", "init_adaptive_sharded",
-    "init_emergency_sharded",
-    "place_group_sharded", "remove_sharded", "rho_pool_from_budget",
+    "init_ballooning_sharded", "init_emergency_sharded",
+    "place_group_sharded", "remove_sharded",
+    "resource_pool_from_budget", "rho_pool_from_budget",
     "route_shard", "shard_mesh", "shard_state", "split_caps",
     "split_departures", "unshard_state",
     "AdaptiveConfig", "AdaptiveOutputs", "AdaptiveState",

@@ -41,7 +41,8 @@ net for commitment the controller can no longer cover.
 Everything is branchless, fixed-shape, and xp-generic with leading
 batch dims (the sharded plane carries a leading shard axis): the
 numpy call is the oracle, and the sim backends
-(`sim.scheduler_sim.simulate(adaptive_cfg=...)`) assert the compiled
+(`sim.scheduler_sim.simulate` with ``SimSpec(adaptive=...)``) assert
+the compiled
 jnp twin bit-identical on every scan. Controller decisions export
 through the observability plane (`adaptive_ratio` gauge,
 `adaptive_backoff_total` counter, `obs.audit.AdaptiveTrail` reason

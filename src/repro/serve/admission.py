@@ -27,6 +27,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
+from repro.core.resources import N_RESOURCES, ResourceVector
 from repro.serve.placement import DeviceClusterState
 
 
@@ -43,6 +44,36 @@ def rho_cap_from_budget(budget_w, blades_per_chassis: int,
     cap = (budget - static) / model.p_dyn_per_core
     return np.where(np.isfinite(budget), np.maximum(cap, 0.0),
                     np.inf).astype(np.float32)
+
+
+def resource_caps_from_budget(budget: ResourceVector,
+                              blades_per_chassis: int, n_chassis: int,
+                              model: ServerPowerModel | None = None,
+                              ratios=None) -> np.ndarray:
+    """(C, R) per-chassis admission ceilings from a per-chassis
+    `ResourceVector` budget (DESIGN.md §16).
+
+    The watts axis converts through the power model exactly like
+    `rho_cap_from_budget` (a ceiling on chassis ``sum(p95*cores)``);
+    the cores/GB axes are already ledger currency (allocatable virtual
+    cores / GB per chassis, typically ``ratio * physical capacity``
+    from `core.oversubscription.joint_chassis_budget`). ``None`` axes
+    disable (+inf column) — `ResourceVector(watts=B)` reproduces the
+    scalar watt ceilings bit for bit.
+
+    `ratios`, an optional (R,) multiplier (e.g.
+    `core.resources.trough_ratios` at the current diurnal sample),
+    conditions the ceilings on time of day — Coach-style: cores/GB
+    ratchet up on the trough while the watts breaker limit stays
+    fixed (pass ratios with ``ratios[0] == 1``)."""
+    vec = budget.as_array()
+    if ratios is not None:
+        vec = vec * np.asarray(ratios, np.float64)
+    caps = np.broadcast_to(vec, (n_chassis, N_RESOURCES)).copy()
+    caps[:, 0] = rho_cap_from_budget(
+        None if budget.watts is None else vec[0], blades_per_chassis,
+        n_chassis, model)
+    return caps.astype(np.float32)
 
 
 def projected_chassis_power(state: DeviceClusterState,

@@ -65,6 +65,12 @@ class DepartureBatch:
     cores: np.ndarray               # (B,) float32
     p95_eff: np.ndarray             # (B,) float32 — p95 recorded at placement
     is_uf: np.ndarray               # (B,) bool
+    mem_gb: np.ndarray = None       # (B,) float32 — GB recorded at placement
+
+    def __post_init__(self):
+        if self.mem_gb is None:
+            self.mem_gb = np.zeros_like(
+                np.asarray(self.cores, np.float32))
 
     def __len__(self) -> int:
         return len(self.server)
@@ -112,7 +118,8 @@ def _concat_soa(cls, parts: list):
 def empty_departures() -> DepartureBatch:
     """A zero-length `DepartureBatch` (typed empty columns)."""
     return DepartureBatch(np.empty(0, np.int32), np.empty(0, np.float32),
-                          np.empty(0, np.float32), np.empty(0, bool))
+                          np.empty(0, np.float32), np.empty(0, bool),
+                          np.empty(0, np.float32))
 
 
 def empty_arrivals() -> ArrivalBatch:

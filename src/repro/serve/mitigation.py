@@ -56,10 +56,13 @@ class LiveVMs:
     p95_eff: np.ndarray             # (V,) float — p95 at placement
     is_uf: np.ndarray               # (V,) bool
     token: np.ndarray = None        # (V,) int64 — caller's VM id
+    mem_gb: np.ndarray = None       # (V,) float — GB at placement
 
     def __post_init__(self):
         if self.token is None:
             self.token = np.arange(len(self.server), dtype=np.int64)
+        if self.mem_gb is None:
+            self.mem_gb = np.zeros(len(self.server), np.float64)
 
     def __len__(self) -> int:
         return len(self.server)
@@ -75,6 +78,11 @@ class MigrationPlan:
     cores: np.ndarray               # (M,) float
     p95_eff: np.ndarray             # (M,) float
     is_uf: np.ndarray               # (M,) bool
+    mem_gb: np.ndarray = None       # (M,) float — GB moving with the VM
+
+    def __post_init__(self):
+        if self.mem_gb is None:
+            self.mem_gb = np.zeros(len(self.vm), np.float64)
 
     def __len__(self) -> int:
         return len(self.vm)
@@ -90,11 +98,13 @@ class MigrationPlan:
         dep = DepartureBatch(self.src_server.astype(np.int32),
                              self.cores.astype(np.float32),
                              self.p95_eff.astype(np.float32),
-                             self.is_uf.astype(bool))
+                             self.is_uf.astype(bool),
+                             self.mem_gb.astype(np.float32))
         arr = DepartureBatch(self.dst_server.astype(np.int32),
                              (-self.cores).astype(np.float32),
                              self.p95_eff.astype(np.float32),
-                             self.is_uf.astype(bool))
+                             self.is_uf.astype(bool),
+                             (-self.mem_gb).astype(np.float32))
         return dep, arr
 
     def paired_stamps(self, t0: float, eps: float = 1e-7) -> tuple:
@@ -112,14 +122,16 @@ def _empty_plan() -> MigrationPlan:
     return MigrationPlan(np.empty(0, np.int64), np.empty(0, np.int64),
                          np.empty(0, np.int32), np.empty(0, np.int32),
                          np.empty(0, np.float64), np.empty(0, np.float64),
-                         np.empty(0, bool))
+                         np.empty(0, bool), np.empty(0, np.float64))
 
 
 def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
                     chassis_of: np.ndarray, free_cores: np.ndarray,
                     rho_lv: np.ndarray, util: float, due: np.ndarray,
                     max_moves_per_chassis: int = 2,
-                    max_moves: int = 32) -> MigrationPlan:
+                    max_moves: int = 32, *,
+                    mem_chassis: np.ndarray = None,
+                    gb_cap: np.ndarray = None) -> MigrationPlan:
     """Plan migrations for every dwell-flagged chassis.
 
     chassis_of: (S,) server->chassis; free_cores: (S,) current free
@@ -139,7 +151,15 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
     its post-move draw stays under the alarm threshold — mitigation
     must never *create* an emergency. All greedy state lives in
     working copies, so the returned plan is a pure function of the
-    inputs (asserted under event permutation in tests)."""
+    inputs (asserted under event permutation in tests).
+
+    mem_chassis/gb_cap: (C,) committed GB and GB capacity per chassis
+    (`DeviceClusterState.res_peak[:, R_GB]` and the admission
+    ceiling's GB column). When given, a destination must also hold
+    the VM's memory — the watt-only planner treated memory as free
+    and could pick a chassis with cores but no GB, wedging the move
+    at execution time. ``None`` (either) disables the check (the
+    scalar-era behavior)."""
     due = np.asarray(due, bool)
     if not due.any() or not len(live):
         return _empty_plan()
@@ -148,6 +168,11 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
     free = np.asarray(free_cores, np.float64).copy()
     rho = np.asarray(rho_lv, np.float64).copy()
     util = float(util)
+    check_mem = mem_chassis is not None and gb_cap is not None
+    if check_mem:
+        mem_c = np.asarray(mem_chassis, np.float64).copy()
+        cap_gb = np.broadcast_to(
+            np.asarray(gb_cap, np.float64), (n_chassis,))
     # per-chassis server lists, id-ordered (deterministic dst pick)
     servers_of = [np.flatnonzero(chassis_of == c)
                   for c in range(n_chassis)]
@@ -162,7 +187,7 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
             False, np))
 
     rows = {"vm": [], "token": [], "src": [], "dst": [], "cores": [],
-            "p95": [], "uf": []}
+            "p95": [], "uf": [], "mem": []}
     for c in np.flatnonzero(due):
         # cheapest critical VMs on this chassis, registry order on ties
         cand = np.flatnonzero((vm_chassis == c) & np.asarray(live.is_uf)
@@ -175,11 +200,15 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
             if offered(c) <= cfg.target_w:
                 break
             cores_v = float(live.cores[v])
-            # eligible destinations: not due, can hold the VM, and
-            # stay under the alarm threshold after taking it
+            mem_v = float(live.mem_gb[v])
+            # eligible destinations: not due, can hold the VM (cores
+            # on a blade AND GB on the chassis), and stay under the
+            # alarm threshold after taking it
             dst_c, dst_s, best_head = -1, -1, -np.inf
             for c2 in range(n_chassis):
                 if c2 == c or due[c2]:
+                    continue
+                if check_mem and mem_c[c2] + mem_v > cap_gb[c2]:
                     continue
                 srv = servers_of[c2]
                 fit = srv[free[srv] >= cores_v]
@@ -202,6 +231,9 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
             free[dst_s] -= cores_v
             rho[c, CRIT_UF] -= w_vm[v]
             rho[dst_c, CRIT_UF] += w_vm[v]
+            if check_mem:
+                mem_c[c] -= mem_v
+                mem_c[dst_c] += mem_v
             moved[v] = True
             moves_left -= 1
             rows["vm"].append(int(v))
@@ -211,6 +243,7 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
             rows["cores"].append(cores_v)
             rows["p95"].append(float(live.p95_eff[v]))
             rows["uf"].append(bool(live.is_uf[v]))
+            rows["mem"].append(mem_v)
     return MigrationPlan(
         np.asarray(rows["vm"], np.int64),
         np.asarray(rows["token"], np.int64),
@@ -218,4 +251,5 @@ def plan_migrations(cfg: EmergencyConfig, live: LiveVMs,
         np.asarray(rows["dst"], np.int32),
         np.asarray(rows["cores"], np.float64),
         np.asarray(rows["p95"], np.float64),
-        np.asarray(rows["uf"], bool))
+        np.asarray(rows["uf"], bool),
+        np.asarray(rows["mem"], np.float64))

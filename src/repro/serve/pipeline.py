@@ -31,7 +31,8 @@ from __future__ import annotations
 
 import contextlib
 import time
-from dataclasses import dataclass, field
+import warnings
+from dataclasses import dataclass, field, replace
 from functools import lru_cache
 
 import jax
@@ -41,8 +42,10 @@ import numpy as np
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
+from repro.core.resources import N_RESOURCES, RESOURCES, ResourceVector
 from repro.obs import LEVEL_NAMES, Observability
-from repro.serve import admission, adaptive, emergency, placement, sharding
+from repro.serve import (admission, adaptive, ballooning, emergency,
+                         placement, sharding)
 from repro.serve.featurizer import (
     SubscriptionTable, featurize_batch, ingest_population, shard_table,
     table_from_history)
@@ -55,11 +58,42 @@ from repro.sim.telemetry import ArrivalBatch, Population
 
 
 @dataclass(frozen=True)
+class PlaneBundle:
+    """Every control-plane attachment of a pipeline, in one field
+    (DESIGN.md §16) — what used to sprawl across five constructor
+    kwargs (``chassis_budget_w``, ``cluster_budget_w``,
+    ``emergency_cfg``, ``adaptive_cfg``, ``obs``), now carried by
+    `ServeConfig.planes` so a pipeline's whole wiring is one value you
+    can name, log, and reuse.
+
+    chassis_budget: per-chassis admission budget as a `ResourceVector`
+        — the watts axis converts through the power model into the
+        legacy rho ceiling, the cores/GB axes are ledger currency
+        (`serve.admission.resource_caps_from_budget`); a power-only
+        vector reproduces ``chassis_budget_w`` bit for bit.
+    cluster_budget: sharded pipelines only — the global token-pool
+        budget (`serve.sharding.resource_pool_from_budget`); a
+        power-only vector reproduces ``cluster_budget_w``.
+    emergency / adaptive / ballooning: the emergency-capping plane,
+        the closed-loop oversubscription controller, and the memory
+        ballooning rung between them and migration (ballooning
+        requires emergency — its probe reuses the alarm arithmetic).
+    obs: the observability plane (decision-neutral, host-side)."""
+    chassis_budget: ResourceVector | None = None
+    cluster_budget: ResourceVector | None = None
+    emergency: emergency.EmergencyConfig | None = None
+    adaptive: adaptive.AdaptiveConfig | None = None
+    ballooning: ballooning.BallooningConfig | None = None
+    obs: Observability | None = None
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     batch_size: int = 256
     kernel: str = "auto"            # 'pallas' | 'ref' | 'auto'
     policy: SchedulerPolicy = field(default_factory=SchedulerPolicy)
     n_ingest_hosts: int = 1         # per-host queues (serve.ingest)
+    planes: PlaneBundle = field(default_factory=PlaneBundle)
 
 
 @dataclass
@@ -139,6 +173,63 @@ def _cap_step_fn(cfg: emergency.EmergencyConfig):
     return jax.jit(fn)
 
 
+@lru_cache(maxsize=None)
+def _balloon_cap_step_fn(ecfg: emergency.EmergencyConfig,
+                         bcfg: ballooning.BallooningConfig):
+    """Compiled unsharded balloon-then-cap scan: the ballooning rung
+    (`serve.ballooning.balloon_step` over the chassis NUF-memory
+    ledger) absorbs what the NUF frequency floor cannot, and the
+    masked emergency step consumes the DRAM-adjusted draws."""
+
+    def fn(gamma_nuf, gamma_uf, chassis_servers, mem_nuf, emer, bst,
+           pw, mask, ts):
+        rho_lv = emergency.chassis_rho_levels(gamma_nuf, gamma_uf,
+                                              chassis_servers, jnp)
+        bst2, bout = ballooning.balloon_step(
+            bcfg, ecfg, bst, rho_lv, pw, mem_nuf, mask, jnp)
+        emer2, eout = emergency.masked_step(
+            ecfg, emer, rho_lv, bout.power_adj_w, mask, ts, jnp)
+        return emer2, bst2, eout, bout
+
+    return jax.jit(fn)
+
+
+#: Sentinel distinguishing "kwarg not passed" from an explicit None on
+#: the deprecated constructor kwargs.
+_UNSET = object()
+
+
+def _legacy_planes(planes: PlaneBundle, what: str,
+                   **kw) -> PlaneBundle:
+    """Fold deprecated constructor kwargs into the `PlaneBundle`,
+    warning once per call site. Tier-1 runs with
+    ``-W error::DeprecationWarning``, so every in-repo caller uses the
+    `ServeConfig.planes` front door — the shim exists for external
+    callers and for the equivalence tests that pin old == new."""
+    given = {k: v for k, v in kw.items() if v is not _UNSET}
+    if not given:
+        return planes
+    warnings.warn(
+        f"{', '.join(sorted(given))} as {what} constructor kwargs are "
+        "deprecated; pass ServeConfig(planes=PlaneBundle(...)) "
+        "(docs/resources.md has the migration table)",
+        DeprecationWarning, stacklevel=3)
+    fields = {}
+    if "chassis_budget_w" in given:
+        w = given.pop("chassis_budget_w")
+        fields["chassis_budget"] = \
+            None if w is None else ResourceVector(watts=float(w))
+    if "cluster_budget_w" in given:
+        w = given.pop("cluster_budget_w")
+        fields["cluster_budget"] = \
+            None if w is None else ResourceVector(watts=float(w))
+    for old, new in (("emergency_cfg", "emergency"),
+                     ("adaptive_cfg", "adaptive"), ("obs", "obs")):
+        if old in given:
+            fields[new] = given.pop(old)
+    return replace(planes, **fields)
+
+
 def _unique_chassis_windows(chassis: np.ndarray):
     """Split one merged CAPPING run into maximal prefixes with unique
     chassis ids, preserving order: the dense masked kernel applies one
@@ -166,19 +257,29 @@ class ServePipeline:
                  state: placement.DeviceClusterState,
                  cores_per_server: int,
                  config: ServeConfig | None = None,
-                 chassis_budget_w=None,
+                 chassis_budget_w=_UNSET,
                  power_model: ServerPowerModel | None = None,
                  blades_per_chassis: int | None = None,
-                 emergency_cfg: emergency.EmergencyConfig | None = None,
-                 obs: Observability | None = None,
-                 adaptive_cfg: adaptive.AdaptiveConfig | None = None):
-        self.config = config or ServeConfig()
+                 emergency_cfg=_UNSET,
+                 obs=_UNSET,
+                 adaptive_cfg=_UNSET):
+        config = config or ServeConfig()
+        planes = _legacy_planes(config.planes, type(self).__name__,
+                                chassis_budget_w=chassis_budget_w,
+                                emergency_cfg=emergency_cfg, obs=obs,
+                                adaptive_cfg=adaptive_cfg)
+        if planes.ballooning is not None and planes.emergency is None:
+            raise ValueError(
+                "PlaneBundle.ballooning requires PlaneBundle.emergency "
+                "— the ballooning rung probes the emergency plane's "
+                "alarm arithmetic to size its reclaim")
+        self.config = replace(config, planes=planes)
         self.table = table
         self.state = state
         # observability plane (repro.obs, DESIGN.md §14) — purely
         # host-side consumers of outputs the kernels already produce,
         # so obs on/off never changes a decision
-        self.obs = obs
+        self.obs = planes.obs
         self._batches = 0
         self._has_pool = False      # sharded subclass may flip this
         self._chassis_of_host = np.asarray(state.chassis_of)
@@ -194,9 +295,13 @@ class ServePipeline:
             blades_per_chassis = state.n_servers // n_chassis
         self.blades_per_chassis = blades_per_chassis
         self.power_model = power_model or ServerPowerModel()
-        self.rho_cap = jnp.asarray(admission.rho_cap_from_budget(
-            chassis_budget_w, blades_per_chassis, n_chassis,
-            self.power_model))
+        # (C, R) per-chassis admission ceilings over the joint
+        # (watts, cores, GB) ledger (DESIGN.md §16); a power-only (or
+        # absent) budget leaves the cores/GB columns +inf — vacuous,
+        # decision-identical to the scalar watt ceiling
+        self.res_cap = jnp.asarray(admission.resource_caps_from_budget(
+            planes.chassis_budget or ResourceVector(),
+            blades_per_chassis, n_chassis, self.power_model))
         if self.config.n_ingest_hosts < 1:
             raise ValueError(
                 f"n_ingest_hosts must be >= 1, "
@@ -207,36 +312,61 @@ class ServePipeline:
         self.swaps = 0
         self.served = 0
         # power-emergency plane (serve.emergency, DESIGN.md §12)
-        self.emergency_cfg = emergency_cfg
+        self.emergency_cfg = planes.emergency
         self._pending_caps: list[tuple] = []    # queued (chassis, pw, t)
         self.emergency = None
         self._alarms = 0
         self._cap_epoch = None      # first cap stamp; rebases clocks
-        if emergency_cfg is not None:
-            if emergency_cfg.blades_per_chassis != self.blades_per_chassis:
+        if self.emergency_cfg is not None:
+            ecfg = self.emergency_cfg
+            if ecfg.blades_per_chassis != self.blades_per_chassis:
                 raise ValueError(
                     f"emergency_cfg.blades_per_chassis="
-                    f"{emergency_cfg.blades_per_chassis} does not match "
+                    f"{ecfg.blades_per_chassis} does not match "
                     f"the pipeline's {self.blades_per_chassis} — the "
                     "static chassis floor (and every alarm and cut) "
                     "would be miscalibrated")
             self.emergency = self._init_emergency()
+        # ballooning rung (serve.ballooning, DESIGN.md §16): fires on
+        # the same CAPPING samples, between the NUF frequency floor and
+        # migration
+        self._balloon = None
+        if planes.ballooning is not None:
+            self._balloon = self._init_ballooning()
         # adaptive oversubscription controller (serve.adaptive,
         # DESIGN.md §15): CAPPING samples feed per-chassis stability
         # windows; the stepped ratio rescales the admission ceiling
         # (and, sharded, the free token pools) between micro-batches
-        self.adaptive_cfg = adaptive_cfg
+        self.adaptive_cfg = planes.adaptive
         self._adaptive = None
-        self._rho_cap_base = self.rho_cap
+        self._res_cap_base = self.res_cap
+        # (R,) time-of-day conditioning multipliers
+        # (`core.resources.trough_ratios`; watts axis pinned at 1.0 —
+        # the breaker limit never ratchets); `set_resource_ratios`
+        # installs a fresh sample
+        self._res_ratios = np.ones(N_RESOURCES)
+        self._ratio_dev = None      # adaptive ratio, device scalar
         self._ratio_prev = 1.0
-        if adaptive_cfg is not None:
-            if adaptive_cfg.blades_per_chassis != self.blades_per_chassis:
+        if self.adaptive_cfg is not None:
+            acfg = self.adaptive_cfg
+            if acfg.blades_per_chassis != self.blades_per_chassis:
                 raise ValueError(
                     f"adaptive_cfg.blades_per_chassis="
-                    f"{adaptive_cfg.blades_per_chassis} does not match "
+                    f"{acfg.blades_per_chassis} does not match "
                     f"the pipeline's {self.blades_per_chassis} — power "
                     "samples would read back as the wrong utilization")
             self._adaptive = self._init_adaptive()
+
+    @property
+    def rho_cap(self):
+        """(C,) watt-axis admission ceiling (rho units) — the legacy
+        scalar view of the (C, R) `res_cap` ledger ceiling."""
+        return self.res_cap[..., 0]
+
+    def _init_ballooning(self):
+        """Fresh all-deflated balloon state (unsharded layout)."""
+        return ballooning.init_ballooning(
+            self.n_chassis, xp=jnp, dtype=self.state.free_cores.dtype)
 
     def _init_emergency(self):
         """Fresh per-chassis emergency state (unsharded layout)."""
@@ -308,11 +438,51 @@ class ServePipeline:
 
     def _apply_ratio(self, out) -> None:
         """Rescale the effective watt budget to the stepped ratio —
-        unsharded, that is the per-chassis admission ceiling (the
-        device-side product keeps the scan sync-free when obs is
-        off)."""
-        self.rho_cap = self._rho_cap_base * out.ratio
+        unsharded, that is the watts axis of the per-chassis admission
+        ceiling (the device-side product keeps the scan sync-free when
+        obs is off)."""
+        self._ratio_dev = out.ratio
+        self._refresh_caps()
         self._record_adaptive(out)
+
+    def _axis_mult(self, dtype) -> jnp.ndarray:
+        """(R,) effective per-axis ceiling multiplier: the adaptive
+        controller's ratio on the watts axis times the diurnal
+        conditioning on the cores/GB axes. Both default to exact 1.0,
+        so with neither plane active the base ceiling passes through
+        bit-for-bit (IEEE multiply by 1.0 is the identity)."""
+        one = jnp.ones((), dtype)
+        r = one if self._ratio_dev is None \
+            else jnp.asarray(self._ratio_dev, dtype)
+        return jnp.stack([r, one, one]) \
+            * jnp.asarray(self._res_ratios, dtype)
+
+    def _refresh_caps(self) -> None:
+        """Recompute the effective admission ceiling from the base
+        ceiling and the current per-axis multipliers (unsharded; the
+        sharded override also retargets the token pools)."""
+        self.res_cap = self._res_cap_base \
+            * self._axis_mult(self._res_cap_base.dtype)
+
+    def set_resource_ratios(self, ratios) -> None:
+        """Install a fresh (R,) time-of-day conditioning sample
+        (`core.resources.trough_ratios` of the current diurnal
+        utilization): the cores/GB axes of every admission ceiling
+        (and, sharded, token pool) rescale immediately — Coach-style
+        ratcheting on the trough. The watts axis must be exactly 1.0
+        (a breaker budget is a physical limit, never conditioned)."""
+        ratios = np.asarray(ratios, np.float64)
+        if ratios.shape != (N_RESOURCES,):
+            raise ValueError(
+                f"ratios must be ({N_RESOURCES},) over {RESOURCES}, "
+                f"got shape {ratios.shape}")
+        if ratios[0] != 1.0:
+            raise ValueError(
+                f"ratios[0] (watts) must be 1.0, got {ratios[0]} — "
+                "the watt budget is a breaker limit and never "
+                "ratchets (core.resources.trough_ratios pins it)")
+        self._res_ratios = ratios
+        self._refresh_caps()
 
     def _record_adaptive(self, out) -> None:
         """Export one controller decision: ratio gauge, step counters,
@@ -382,7 +552,8 @@ class ServePipeline:
         b = len(res.server)
         valid = np.ones(b, bool)
         cnt = placement.outcome_counters(
-            res.server, valid, np.asarray(batch.cores), res.p95_eff)
+            res.server, valid, np.asarray(batch.cores), res.p95_eff,
+            mem_gb=np.asarray(batch.memory_gb))
         reg.counter("serve_batches_total",
                     help="micro-batches served").inc()
         reg.counter("serve_arrivals_total",
@@ -401,6 +572,11 @@ class ServePipeline:
         reg.counter("serve_rho_admitted_total",
                     help="admitted sum(p95*cores), rho units").inc(
                         cnt["rho_admitted"])
+        reg.counter("serve_cores_admitted_total",
+                    help="admitted virtual cores").inc(
+                        cnt["cores_admitted"])
+        reg.counter("serve_gb_admitted_total",
+                    help="admitted memory, GB").inc(cnt["gb_admitted"])
         if self.obs.audit is not None:
             srv = np.asarray(res.server)
             chassis = np.where(
@@ -514,7 +690,7 @@ class ServePipeline:
         return self._drain_events(events)
 
     def depart_to(self, host: int, servers, cores, p95_eff, is_uf,
-                  t=None) -> list[ServeResult]:
+                  t=None, mem_gb=None) -> list[ServeResult]:
         """Push a stamped departure batch into `host`'s ingest queue.
         The departure takes effect at its merged-stream position, at
         micro-batch granularity: it is applied before any micro-batch
@@ -531,7 +707,9 @@ class ServePipeline:
                 np.asarray(servers, np.int32),
                 np.asarray(cores, np.float32),
                 np.asarray(p95_eff, np.float32),
-                np.asarray(is_uf, bool)), t)
+                np.asarray(is_uf, bool),
+                None if mem_gb is None
+                else np.asarray(mem_gb, np.float32)), t)
         with self._span("merge"):
             events = self.ingest.poll()
         return self._drain_events(events)
@@ -593,7 +771,7 @@ class ServePipeline:
             if kind != ARRIVAL:
                 d = slice_soa(events.departures, lo, hi)
                 self._apply_departures(d.server, d.cores, d.p95_eff,
-                                       d.is_uf)
+                                       d.is_uf, d.mem_gb)
                 continue
             self._pending.append(slice_soa(events.arrivals, lo, hi))
             self._queued += hi - lo
@@ -636,9 +814,11 @@ class ServePipeline:
                 p95_eff = jnp.ones(pad_to, jnp.float32)
         cores = jnp.zeros(pad_to, jnp.float32) \
             .at[:b].set(jnp.asarray(batch.cores))
+        mem = jnp.zeros(pad_to, jnp.float32) \
+            .at[:b].set(jnp.asarray(batch.memory_gb))
         valid = jnp.arange(pad_to) < b
         with self._span("place"):
-            servers = self._place(cores, is_uf, p95_eff, valid)
+            servers = self._place(cores, is_uf, p95_eff, valid, mem)
         self.served += b
         with self._span("commit"):
             host = jax.device_get((servers, q["workload_type_used"],
@@ -648,7 +828,7 @@ class ServePipeline:
         self._record_batch(batch, res)
         return res
 
-    def _place(self, cores, is_uf, p95_eff, valid):
+    def _place(self, cores, is_uf, p95_eff, valid, mem):
         """Placement stage of one padded micro-batch: run the batched
         Algorithm-1 scan against the cluster state and return the (B,)
         server decisions (FAIL_* codes on reject). Cap sub-windows
@@ -669,9 +849,9 @@ class ServePipeline:
             (self.state, servers, self._emergency,
              sweep) = placement.place_batch_caps(
                 self.state, self._emergency, pw, mask, ts, cores,
-                is_uf, p95_eff, valid, self.rho_cap,
+                is_uf, p95_eff, valid, self.res_cap,
                 self.config.policy, self.cores_per_server,
-                self.emergency_cfg)
+                self.emergency_cfg, mem_gb=mem)
             self._alarms += int(np.asarray(sweep.alarms))
             self._record_sweep(sweep, windows=n_windows)
             return servers
@@ -681,8 +861,8 @@ class ServePipeline:
                 help="compiled kernel dispatches, by call site",
                 kind="place_batch").inc()
         self.state, servers = placement.place_batch(
-            self.state, cores, is_uf, p95_eff, valid, self.rho_cap,
-            self.config.policy, self.cores_per_server)
+            self.state, cores, is_uf, p95_eff, valid, self.res_cap,
+            self.config.policy, self.cores_per_server, mem_gb=mem)
         return servers
 
     def _stacked_caps(self):
@@ -697,7 +877,8 @@ class ServePipeline:
         ts = jnp.asarray(np.stack([r[2] for r in rows]), dtype)
         return pw, mask, ts
 
-    def depart(self, servers, cores, p95_eff, is_uf) -> None:
+    def depart(self, servers, cores, p95_eff, is_uf,
+               mem_gb=None) -> None:
         """Release departed VMs' aggregates immediately (batched,
         order-free) — the 1-host special case. `depart_to` is the
         stream-ordered per-host path, and like `submit` this refuses
@@ -709,9 +890,10 @@ class ServePipeline:
                 "depart() is the single-queue (1-host) path; with "
                 f"n_ingest_hosts={self.config.n_ingest_hosts} use "
                 "depart_to(host, ..., t=...)")
-        self._apply_departures(servers, cores, p95_eff, is_uf)
+        self._apply_departures(servers, cores, p95_eff, is_uf, mem_gb)
 
-    def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
+    def _apply_departures(self, servers, cores, p95_eff, is_uf,
+                          mem_gb=None) -> None:
         """Apply a departure batch to the cluster state (the merged-
         stream consumer; `ShardedServePipeline` overrides with the
         per-shard route + in-scan pool credit). Queued cap windows
@@ -720,7 +902,8 @@ class ServePipeline:
         self._flush_caps()
         self.state = placement.remove_batch(
             self.state, jnp.asarray(servers), jnp.asarray(cores),
-            jnp.asarray(p95_eff), jnp.asarray(is_uf))
+            jnp.asarray(p95_eff), jnp.asarray(is_uf),
+            mem_gb=None if mem_gb is None else jnp.asarray(mem_gb))
 
     # -- power-emergency plane (serve.emergency) ---------------------------
     def _apply_caps(self, batch: CapBatch, t: np.ndarray) -> None:
@@ -759,6 +942,12 @@ class ServePipeline:
                 self._pending_caps.append(
                     (batch.chassis[lo:hi], batch.power_w[lo:hi],
                      t[lo:hi]))
+        # the ballooning rung applies its windows eagerly: the fused
+        # placement kernels step the emergency state alone, and a
+        # deferred balloon would see a stale memory ledger once the
+        # batch it rides with mutates `mem_nuf`
+        if self._balloon is not None:
+            self._flush_caps()
 
     def _flush_caps(self) -> None:
         """Apply queued cap sub-windows through the standalone kernel —
@@ -781,10 +970,26 @@ class ServePipeline:
                         -1, emergency.N_LEVELS).sum(0)), windows=1)
 
     def _cap_window(self, chassis, power_w, t):
-        """Apply one unique-chassis sample window (unsharded path)."""
+        """Apply one unique-chassis sample window (unsharded path) —
+        through the balloon-then-cap kernel when the ballooning rung is
+        attached, the plain emergency kernel otherwise."""
         dtype = self.state.free_cores.dtype
         pw, mask, ts = emergency.scatter_samples(
             self.n_chassis, chassis, power_w, t, jnp, dtype)
+        if self._balloon is not None:
+            if self.obs is not None:
+                self.obs.registry.counter(
+                    "serve_dispatch_total",
+                    help="compiled kernel dispatches, by call site",
+                    kind="balloon_cap_step").inc()
+            fn = _balloon_cap_step_fn(self.emergency_cfg,
+                                      self.config.planes.ballooning)
+            (self._emergency, self._balloon, out,
+             bout) = fn(self.state.gamma_nuf, self.state.gamma_uf,
+                        self.state.chassis_servers, self.state.mem_nuf,
+                        self._emergency, self._balloon, pw, mask, ts)
+            self._record_balloon(bout)
+            return out
         if self.obs is not None:
             self.obs.registry.counter(
                 "serve_dispatch_total",
@@ -796,6 +1001,50 @@ class ServePipeline:
                                   self.state.chassis_servers,
                                   self._emergency, pw, mask, ts)
         return out
+
+    # -- ballooning rung (serve.ballooning) --------------------------------
+    @property
+    def balloon_state(self):
+        """Current `serve.ballooning.BalloonState` (None with the rung
+        off). Reading it flushes queued cap windows like `emergency`
+        (with ballooning on they are applied eagerly anyway)."""
+        self._flush_caps()
+        return self._balloon
+
+    def ballooned_gb(self) -> float:
+        """Fleet-wide GB currently ballooned out (0.0 with the rung
+        off)."""
+        if self._balloon is None:
+            return 0.0
+        self._flush_caps()
+        return ballooning.total_ballooned_gb(self._balloon)
+
+    def _record_balloon(self, bout) -> None:
+        """Export one balloon sweep's outputs: reclaim/release/absorb
+        counters and the standing-balloon gauge — host-side reductions
+        of outputs the kernel already returned."""
+        if self.obs is None:
+            return
+        reg = self.obs.registry
+        reg.counter("balloon_reclaimed_gb_total",
+                    help="GB ballooned out of NUF VMs").inc(
+                        float(np.asarray(bout.reclaimed_gb,
+                                         np.float64).sum()))
+        reg.counter("balloon_released_gb_total",
+                    help="ballooned GB handed back on alarm clear").inc(
+                        float(np.asarray(bout.released_gb,
+                                         np.float64).sum()))
+        reg.counter("balloon_absorbed_watts_total",
+                    help="DRAM watts absorbed by standing + fresh "
+                    "balloons").inc(
+                        float(np.asarray(bout.absorbed_w,
+                                         np.float64).sum()))
+        reg.counter("balloon_inflations_total",
+                    help="chassis sweeps where the rung fired").inc(
+                        int(np.asarray(bout.inflated).sum()))
+        reg.gauge("balloon_ballooned_gb",
+                  help="fleet GB currently ballooned out").set(
+                      ballooning.total_ballooned_gb(self._balloon))
 
     def throttled_by_level(self) -> np.ndarray:
         """(L,) cumulative throttled-seconds per criticality level
@@ -868,14 +1117,18 @@ class ShardedServePipeline(ServePipeline):
 
     def __init__(self, service, table, state, cores_per_server,
                  config: ShardedServeConfig | None = None,
-                 cluster_budget_w=None, **kw):
+                 cluster_budget_w=_UNSET, **kw):
         config = config or ShardedServeConfig()
         if config.batch_size % config.n_shards:
             raise ValueError(
                 f"batch_size {config.batch_size} not divisible by "
                 f"n_shards {config.n_shards}")
+        config = replace(config, planes=_legacy_planes(
+            config.planes, type(self).__name__,
+            cluster_budget_w=cluster_budget_w))
         super().__init__(service, table, state, cores_per_server,
                          config=config, **kw)
+        config = self.config        # planes merged by the superclass
         if config.use_shard_map == "auto":
             self.mesh = sharding.shard_mesh(config.n_shards) \
                 if config.n_shards > 1 else None
@@ -887,25 +1140,27 @@ class ShardedServePipeline(ServePipeline):
                     f"devices, have {len(jax.devices())}")
         else:
             self.mesh = None
-        self.cluster_budget_w = cluster_budget_w
-        # gross = the ratio-1.0 token allowance; the adaptive
+        budget = config.planes.cluster_budget
+        self.cluster_budget_w = None if budget is None else budget.watts
+        # gross = the ratio-1.0 (R,) token allowance; the adaptive
         # controller retargets free pools against it (`retarget_pool`)
-        gross = sharding.rho_pool_from_budget(
-            cluster_budget_w, state.n_servers, self.power_model)
-        pool_total = gross
-        if np.isinf(pool_total):
-            pool_total = None
+        gross = np.full(N_RESOURCES, np.inf) if budget is None else \
+            sharding.resource_pool_from_budget(
+                budget, state.n_servers, self.power_model)
+        finite = np.isfinite(gross)
+        self._has_pool = bool(finite.any())
+        if self._has_pool:
+            # a warm-started cluster has resources already committed;
+            # the pool is the *remaining* allowance per axis, so the
+            # budget invariant holds from the first batch (the sim
+            # backend nets identically)
+            committed = np.asarray(state.res_peak, np.float64).sum(0)
+            pool_total = np.where(
+                finite, np.maximum(gross - committed, 0.0), np.inf)
         else:
-            # a warm-started cluster has rho already committed; the
-            # pool is the *remaining* allowance, so the budget
-            # invariant holds from the first batch (the sim backend
-            # nets identically)
-            pool_total = max(
-                pool_total - float(np.asarray(state.rho_peak).sum()),
-                0.0)
-        self._has_pool = pool_total is not None
+            pool_total = None
         self.sharded = sharding.shard_state(
-            self.state, config.n_shards, rho_cap=self.rho_cap,
+            self.state, config.n_shards, rho_cap=self.res_cap,
             pool_total=pool_total)
         if self.mesh is not None:
             self.sharded = sharding.device_put_sharded_state(
@@ -913,16 +1168,18 @@ class ShardedServePipeline(ServePipeline):
             if config.shard_table:
                 self.table = shard_table(self.table, self.mesh)
         self.state = None        # self.sharded is the source of truth
-        self._sharded_cap_base = self.sharded.rho_cap
-        self._pool_base = None if np.isinf(gross) else \
-            jnp.full(config.n_shards, gross / config.n_shards,
-                     self.sharded.pool.dtype)
+        self._sharded_cap_base = self.sharded.res_cap
+        self._pool_base = None if not self._has_pool else \
+            jnp.asarray(np.broadcast_to(
+                gross / config.n_shards,
+                (config.n_shards, N_RESOURCES)),
+                self.sharded.pool.dtype)
         self._ratio_prev = np.ones(config.n_shards)
         self.spill_info = {"rounds": 0, "spilled": 0,
                            "spill_admitted": 0}
 
     # -- sharded placement stage -------------------------------------------
-    def _place(self, cores, is_uf, p95_eff, valid):
+    def _place(self, cores, is_uf, p95_eff, valid, mem):
         cfg = self.config
         kw = {}
         fused = bool(self._pending_caps)
@@ -936,8 +1193,8 @@ class ShardedServePipeline(ServePipeline):
         out = sharding.place_group_sharded(
             self.sharded, np.asarray(cores), np.asarray(is_uf),
             np.asarray(p95_eff), np.asarray(valid), cfg.policy,
-            self.cores_per_server, mesh=self.mesh,
-            spill_rounds=cfg.spill_rounds,
+            self.cores_per_server, mem_gb=np.asarray(mem),
+            mesh=self.mesh, spill_rounds=cfg.spill_rounds,
             rebalance=cfg.rebalance_tokens, **kw)
         if fused:
             (self.sharded, servers, info, self._emergency,
@@ -972,15 +1229,30 @@ class ShardedServePipeline(ServePipeline):
                         help="power tokens drawn from the pools, "
                         "rho units").inc(
                             max(0.0, info.get("tokens_drawn", 0.0)))
-            for i, p in enumerate(np.asarray(self.sharded.pool)):
+            drawn = np.asarray(info.get(
+                "tokens_drawn_vec", np.zeros(N_RESOURCES)), np.float64)
+            pools = np.asarray(self.sharded.pool)
+            for r, name in enumerate(RESOURCES):
+                reg.counter("serve_tokens_drawn_res_total",
+                            help="tokens drawn from the pools, by "
+                            "resource axis",
+                            resource=name).inc(max(0.0, float(drawn[r])))
+            for i, row in enumerate(pools):
                 reg.gauge("serve_pool_tokens",
                           help="remaining power tokens, by shard",
-                          shard=str(i)).set(float(p))
+                          shard=str(i)).set(float(row[0]))
+                for r, name in enumerate(RESOURCES):
+                    if np.isfinite(row[r]):
+                        reg.gauge("serve_pool_resources",
+                                  help="remaining tokens, by shard "
+                                  "and resource axis",
+                                  shard=str(i),
+                                  resource=name).set(float(row[r]))
 
     def _pool_tokens_left(self) -> float:
         if not self._has_pool:
             return float("inf")
-        return float(np.asarray(self.sharded.pool).sum())
+        return float(np.asarray(self.sharded.pool)[:, 0].sum())
 
     def _sharded_caps(self):
         """Densify queued sub-windows into the stacked (N, W, C/N)
@@ -993,11 +1265,12 @@ class ShardedServePipeline(ServePipeline):
         ts = jnp.asarray(np.stack([r[2] for r in rows], axis=1), dtype)
         return pw, mask, ts
 
-    def _apply_departures(self, servers, cores, p95_eff, is_uf) -> None:
+    def _apply_departures(self, servers, cores, p95_eff, is_uf,
+                          mem_gb=None) -> None:
         """Route each departure to its owner shard (per-shard
         batches, `sharding.split_departures`) and credit the freed
-        power tokens back to that shard's pool in the consuming scan
-        (`sharding.consume_departures`). Queued cap windows flush
+        (R,) demand vector back to that shard's pool in the consuming
+        scan (`sharding.consume_departures`). Queued cap windows flush
         first — they read pre-departure aggregates."""
         self._flush_caps()
         if self.obs is not None and self._has_pool:
@@ -1010,7 +1283,8 @@ class ShardedServePipeline(ServePipeline):
                 help="power tokens credited back by departures, "
                 "rho units").inc(float(credit))
         self.sharded = sharding.remove_sharded(
-            self.sharded, servers, cores, p95_eff, is_uf)
+            self.sharded, servers, cores, p95_eff, is_uf,
+            mem_gb=mem_gb)
 
     # -- sharded adaptive oversubscription ---------------------------------
     def _init_adaptive(self):
@@ -1042,23 +1316,39 @@ class ShardedServePipeline(ServePipeline):
             power_w, mesh=self.mesh)
         self._apply_ratio(out)
 
-    def _apply_ratio(self, out) -> None:
-        """Put the stepped per-shard ratios in force: rescale each
+    def _axis_mult(self, dtype) -> jnp.ndarray:
+        """(N, R) per-shard effective ceiling/pool multipliers: each
+        shard's adaptive ratio on the watts axis, the shared diurnal
+        conditioning on cores/GB (see the unsharded `_axis_mult`)."""
+        n = self.config.n_shards
+        ones = jnp.ones((n,), dtype)
+        r = ones if self._ratio_dev is None \
+            else jnp.asarray(self._ratio_dev, dtype)
+        return jnp.stack([r, ones, ones], axis=-1) \
+            * jnp.asarray(self._res_ratios, dtype)[None]
+
+    def _refresh_caps(self) -> None:
+        """Put the current per-axis multipliers in force: rescale each
         shard's slice of the admission ceiling and retarget its free
-        token pool against the committed rho — never revoking tokens
-        already committed to placed VMs (`adaptive.retarget_pool`
-        floors the free pool at zero), so the reserve/commit
-        conservation invariant survives any mint/retire sequence."""
-        ratio = out.ratio
-        cap = self._sharded_cap_base * ratio[:, None]
+        token pool against the committed (R,) ledger — never revoking
+        tokens already committed to placed VMs
+        (`adaptive.retarget_pool` floors the free pool at zero per
+        axis), so the reserve/commit conservation invariant survives
+        any mint/retire/ratchet sequence."""
+        mult = self._axis_mult(self._sharded_cap_base.dtype)
+        cap = self._sharded_cap_base * mult[:, None, :]
         pool = self.sharded.pool
         if self._pool_base is not None:
-            committed = jnp.sum(self.sharded.shards.rho_peak, axis=-1)
+            sh = self.sharded.shards
+            # per-axis chassis reduction, watts axis summed exactly as
+            # the scalar-era code did (bit-stable against it)
+            committed = jnp.stack(
+                [jnp.sum(sh.res_peak[..., r], axis=-1)
+                 for r in range(N_RESOURCES)], axis=-1)
             pool = adaptive.retarget_pool(
-                self.adaptive_cfg, self._pool_base, ratio, committed,
+                self.adaptive_cfg, self._pool_base, mult, committed,
                 jnp)
-        self.sharded = self.sharded._replace(rho_cap=cap, pool=pool)
-        self._record_adaptive(out)
+        self.sharded = self.sharded._replace(res_cap=cap, pool=pool)
 
     def _record_adaptive(self, out) -> None:
         """Per-shard export of one controller decision (shard-labelled
@@ -1107,10 +1397,31 @@ class ShardedServePipeline(ServePipeline):
             self.n_chassis, self.config.n_shards,
             dtype=self.state.free_cores.dtype)
 
+    def _init_ballooning(self):
+        """Balloon state partitioned like the cluster (leading shard
+        axis over the same contiguous chassis blocks)."""
+        return sharding.init_ballooning_sharded(
+            self.n_chassis, self.config.n_shards,
+            dtype=self.state.free_cores.dtype)
+
     def _cap_window(self, chassis, power_w, t):
         """Apply one unique-chassis sample window: route samples to
         their owner shards and run every shard's alarm + apportionment
-        kernel concurrently (vmap, or shard_map on the mesh)."""
+        kernel concurrently (vmap, or shard_map on the mesh) — with
+        the ballooning rung in front when attached."""
+        if self._balloon is not None:
+            if self.obs is not None:
+                self.obs.registry.counter(
+                    "serve_dispatch_total",
+                    help="compiled kernel dispatches, by call site",
+                    kind="balloon_caps_sharded").inc()
+            (self._emergency, self._balloon, out,
+             bout) = sharding.apply_caps_ballooned_sharded(
+                self.emergency_cfg, self.config.planes.ballooning,
+                self.sharded, self._emergency, self._balloon, chassis,
+                power_w, t, mesh=self.mesh)
+            self._record_balloon(bout)
+            return out
         if self.obs is not None:
             self.obs.registry.counter(
                 "serve_dispatch_total",
@@ -1135,5 +1446,11 @@ class ShardedServePipeline(ServePipeline):
                                     self.power_model)
 
     def pool_left(self) -> np.ndarray:
-        """(N,) remaining power tokens per shard (rho units)."""
+        """(N,) remaining power tokens per shard (rho units) — the
+        watts axis of `pool_left_vec`."""
+        return np.asarray(self.sharded.pool)[:, 0]
+
+    def pool_left_vec(self) -> np.ndarray:
+        """(N, R) remaining tokens per shard and resource axis (+inf
+        on unbudgeted axes)."""
         return np.asarray(self.sharded.pool)

@@ -70,23 +70,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.placement import ClusterState, SchedulerPolicy
+from repro.core.resources import N_RESOURCES, lift_caps, lift_pool
 from repro.serve import emergency
 
 #: `place_batch` outcome codes (in the returned server array).
 FAIL_CAPACITY = -1      # no feasible server (deployment failure)
-FAIL_POWER = -2         # placed server's chassis lacks power headroom
-FAIL_TOKENS = -3        # shard's power-token pool exhausted (sharded serve)
+FAIL_POWER = -2         # a chassis resource ceiling rejected (any axis)
+FAIL_TOKENS = -3        # shard's token pool exhausted (any axis)
 
 
 class DeviceClusterState(NamedTuple):
-    """Device mirror of `core.placement.ClusterState`'s aggregates."""
+    """Device mirror of `core.placement.ClusterState`'s aggregates,
+    generalized to the (R,)-axis resource ledger (DESIGN.md §16):
+    `res_peak` tracks committed (rho, cores, GB) per chassis — axis 0
+    is the legacy ``rho_peak`` (exposed as a property so the scoring
+    rules and diagnostics read it unchanged), and `mem_nuf` carries
+    the NUF slice of the GB axis, the balloonable headroom the
+    emergency ladder's middle rung reclaims (`serve.ballooning`)."""
     free_cores: jnp.ndarray      # (S,) f32
     gamma_uf: jnp.ndarray        # (S,) f32
     gamma_nuf: jnp.ndarray       # (S,) f32
-    rho_peak: jnp.ndarray        # (C,) f32
+    res_peak: jnp.ndarray        # (C, R) f32 — committed (rho, cores, GB)
     rho_max: jnp.ndarray         # (C,) f32
     chassis_of: jnp.ndarray      # (S,) i32
     chassis_servers: jnp.ndarray  # (C, S//C) i32 — servers per chassis
+    mem_nuf: jnp.ndarray         # (C,) f32 — committed NUF GB
+
+    @property
+    def rho_peak(self) -> jnp.ndarray:
+        """(C,) committed sum(p95*cores) — the watts axis of the
+        ledger, the exact quantity the pre-vector state carried."""
+        return self.res_peak[..., 0]
 
     @property
     def n_servers(self) -> int:
@@ -105,19 +119,35 @@ def _chassis_servers(chassis_of: np.ndarray) -> np.ndarray:
     return order.reshape(n_chassis, -1).astype(np.int32)
 
 
-def device_state(state: ClusterState,
-                 dtype=jnp.float32) -> DeviceClusterState:
+def device_state(state: ClusterState, dtype=jnp.float32,
+                 mem_gb=None, mem_nuf=None) -> DeviceClusterState:
     """Mirror a host `ClusterState`'s aggregates onto the device.
     `dtype` selects the serving (f32) or equivalence-testing (f64,
-    under `jax.experimental.enable_x64`) arithmetic."""
+    under `jax.experimental.enable_x64`) arithmetic.
+
+    The host state is the watts/cores oracle; the cores axis of
+    `res_peak` is derived from its per-server free cores, and the GB
+    axis comes from `mem_gb`/`mem_nuf` ((C,) committed GB — total and
+    NUF slice), zeros when the caller tracks no memory."""
+    chassis_servers = _chassis_servers(state.chassis_of_server)
+    free = np.asarray(state.free_cores, np.float64)
+    cores_comm = (float(state.cores_per_server)
+                  - free)[chassis_servers].sum(-1)
+    n_chassis = chassis_servers.shape[0]
+    mem = np.zeros(n_chassis) if mem_gb is None \
+        else np.asarray(mem_gb, np.float64)
+    res_peak = np.stack([np.asarray(state.rho_peak, np.float64),
+                         cores_comm, mem], axis=-1)
     return DeviceClusterState(
         jnp.asarray(state.free_cores, dtype),
         jnp.asarray(state.gamma_uf, dtype),
         jnp.asarray(state.gamma_nuf, dtype),
-        jnp.asarray(state.rho_peak, dtype),
+        jnp.asarray(res_peak, dtype),
         jnp.asarray(state.rho_max, dtype),
         jnp.asarray(state.chassis_of_server, jnp.int32),
-        jnp.asarray(_chassis_servers(state.chassis_of_server)))
+        jnp.asarray(chassis_servers),
+        jnp.zeros(n_chassis, dtype) if mem_nuf is None
+        else jnp.asarray(mem_nuf, dtype))
 
 
 def fresh_state(n_servers: int, cores_per_server: int,
@@ -285,35 +315,44 @@ def _compose_inverse(perm: jnp.ndarray, fresh: jnp.ndarray,
 
 
 def _commit(st: DeviceClusterState, pool, srv, found, cores_i, uf_i,
-            p95_i, valid_i, rho_cap):
+            p95_i, mem_i, valid_i, res_cap):
     """Admission check + masked state update + outcome code — the
     shared tail of both scan bodies. `srv` is the winning server with
-    `found` indicating a feasible candidate existed. `pool` is the
-    scalar power-token balance (rho units) the placement draws from:
-    +inf outside the sharded protocol, where the compare is vacuous and
-    the arithmetic reduces to the unpooled rule."""
+    `found` indicating a feasible candidate existed.
+
+    The admission draw is the (R,) demand vector ``(p95*cores, cores,
+    GB)`` (`core.resources.demand_vector`): the chassis ledger check
+    and the token-pool reserve both run per axis and every axis must
+    clear (`res_cap` is (C, R), `pool` is the shard's (R,) balance —
+    +inf axes are vacuous, so a power-only config reproduces the
+    scalar watt protocol bit for bit). A reject on *any* axis maps to
+    FAIL_POWER (ceiling) / FAIL_TOKENS (pool) before the state
+    mutates."""
     dtype = st.free_cores.dtype
     srv = jnp.where(found, srv, 0).astype(jnp.int32)
     ch = st.chassis_of[srv]
     w = p95_i * cores_i
-    admit_ch = st.rho_peak[ch] + w <= rho_cap[ch]
-    admit_pool = w <= pool
+    d = jnp.stack([w, cores_i, mem_i])                         # (R,)
+    admit_ch = jnp.all(st.res_peak[ch] + d <= res_cap[ch])
+    admit_pool = jnp.all(d <= pool)
     scale = (found & admit_ch & admit_pool & valid_i).astype(dtype)
     uf_f = uf_i.astype(dtype)
     st2 = st._replace(
         free_cores=st.free_cores.at[srv].add(-cores_i * scale),
         gamma_uf=st.gamma_uf.at[srv].add(w * scale * uf_f),
         gamma_nuf=st.gamma_nuf.at[srv].add(w * scale * (1.0 - uf_f)),
-        rho_peak=st.rho_peak.at[ch].add(w * scale))
-    pool2 = pool - w * scale
+        res_peak=st.res_peak.at[ch].add(d * scale),
+        mem_nuf=st.mem_nuf.at[ch].add(mem_i * scale * (1.0 - uf_f)))
+    pool2 = pool - d * scale
     out = jnp.where(~found, FAIL_CAPACITY,
                     jnp.where(~admit_ch, FAIL_POWER,
                               jnp.where(admit_pool, srv, FAIL_TOKENS)))
     return st2, pool2, out, srv
 
 
-def _place_batch_single_rule(state, pool, cores, is_uf, p95_eff, valid,
-                             rho_cap, policy: SchedulerPolicy, cps):
+def _place_batch_single_rule(state, pool, cores, is_uf, p95_eff, mem,
+                             valid, res_cap, policy: SchedulerPolicy,
+                             cps):
     """Rank-free scan for single-rule policies: the winner is the
     stable argmax of the active rule's raw score over feasible servers
     (exactly `SchedulerPolicy.choose` with the other rule's weight 0,
@@ -328,7 +367,7 @@ def _place_batch_single_rule(state, pool, cores, is_uf, p95_eff, valid,
 
     def body(carry, inp):
         st, pl = carry
-        cores_i, uf_i, p95_i, valid_i = inp
+        cores_i, uf_i, p95_i, mem_i, valid_i = inp
         feasible = (st.free_cores >= cores_i) & valid_i
         n_feas = feasible.sum()
         if no_rule:
@@ -341,24 +380,30 @@ def _place_batch_single_rule(state, pool, cores, is_uf, p95_eff, valid,
             score = policy.alpha * kappa + (1.0 - policy.alpha) * eta
         srv = jnp.argmax(jnp.where(feasible, score, neg_inf))
         st2, pl2, out, _ = _commit(st, pl, srv, n_feas > 0, cores_i,
-                                   uf_i, p95_i, valid_i, rho_cap)
+                                   uf_i, p95_i, mem_i, valid_i, res_cap)
         return (st2, pl2), out
 
     inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
-              jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
+              jnp.asarray(p95_eff, dtype), jnp.asarray(mem, dtype),
+              jnp.asarray(valid, bool))
     (state, pool), servers = jax.lax.scan(body, (state, pool), inputs)
     return state, servers, pool
 
 
 def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
-                      p95_eff, valid, rho_cap, policy: SchedulerPolicy,
-                      cps: float):
+                      p95_eff, mem, valid, rho_cap,
+                      policy: SchedulerPolicy, cps: float):
     """Shared scan implementation behind `place_batch` (pool forced to
     +inf) and `place_batch_pooled`. Pure and transformation-friendly:
     the sharded serve protocol vmaps/shard_maps it across per-shard
-    states (`serve.sharding`). Returns (state, servers, pool_left)."""
+    states (`serve.sharding`). `mem` is the (B,) GB demand; `rho_cap`
+    may be the legacy (C,) watt-axis ceiling or a full (C, R) resource
+    ceiling, and `pool` a scalar rho balance or an (R,) vector — both
+    are lifted with vacuous +inf axes (`core.resources`). Returns
+    (state, servers, pool_left) with pool_left (R,)."""
     dtype = state.free_cores.dtype
-    pool = jnp.asarray(pool, dtype)
+    pool = lift_pool(jnp.asarray(pool, dtype), xp=jnp)
+    res_cap = lift_caps(jnp.asarray(rho_cap, dtype), xp=jnp)
     n_servers = state.n_servers
     idx = jnp.arange(n_servers, dtype=jnp.int32)
     use_power = policy.use_power_rule
@@ -370,8 +415,8 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
     single_rule = (not use_power) or pw == 0.0 or qw == 0.0
     if single_rule:
         return _place_batch_single_rule(
-            state, pool, cores, is_uf, p95_eff, valid, rho_cap, policy,
-            cps)
+            state, pool, cores, is_uf, p95_eff, mem, valid, res_cap,
+            policy, cps)
 
     # both rules active implies use_power: the carry holds the packing
     # rank row, the power score-by-server table, and the inverse
@@ -385,7 +430,7 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
 
     def body(carry, inp):
         st, pl, q_prev, pranks, perm = carry
-        cores_i, uf_i, p95_i, valid_i = inp
+        cores_i, uf_i, p95_i, mem_i, valid_i = inp
         feasible = (st.free_cores >= cores_i) & valid_i
         n_feas = feasible.sum()
         n_out = n_servers - n_feas
@@ -426,7 +471,8 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
         srv = jnp.min(jnp.where(masked == jnp.max(masked), perm_pow,
                                 n_servers))
         st2, pl2, out, srv = _commit(st, pl, srv, n_feas > 0, cores_i,
-                                     uf_i, p95_i, valid_i, rho_cap)
+                                     uf_i, p95_i, mem_i, valid_i,
+                                     res_cap)
         ch = st.chassis_of[srv]
         # Incremental maintenance. Packing ranks: only the placed
         # server's score moved — subtract its old key's wins over each
@@ -475,7 +521,8 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
         return (st2, pl2, q_prev2, pranks2, perm2), out
 
     inputs = (jnp.asarray(cores, dtype), jnp.asarray(is_uf, bool),
-              jnp.asarray(p95_eff, dtype), jnp.asarray(valid, bool))
+              jnp.asarray(p95_eff, dtype), jnp.asarray(mem, dtype),
+              jnp.asarray(valid, bool))
     scores0 = _rule_scores(state, policy, cps)
     ranks0, perm0 = _init_ranks(scores0)
     (state, pool, _, _, _), servers = jax.lax.scan(
@@ -483,16 +530,27 @@ def _place_batch_impl(state: DeviceClusterState, pool, cores, is_uf,
     return state, servers, pool
 
 
+def _mem_or_zeros(mem_gb, cores):
+    """(B,) GB demand; ``None`` (a memory-blind caller) places zero GB
+    — every GB compare is then vacuous, preserving legacy decisions."""
+    return jnp.zeros(jnp.shape(cores)) if mem_gb is None \
+        else jnp.asarray(mem_gb)
+
+
 @partial(jax.jit, static_argnames=("policy", "cores_per_server"))
 def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
                 is_uf: jnp.ndarray, p95_eff: jnp.ndarray,
                 valid: jnp.ndarray, rho_cap: jnp.ndarray,
-                policy: SchedulerPolicy, cores_per_server: int):
+                policy: SchedulerPolicy, cores_per_server: int,
+                mem_gb=None):
     """Place one arrival micro-batch. cores/is_uf/p95_eff/valid: (B,)
     arrays (`valid=False` rows are padding and never touch state);
-    `rho_cap`: (C,) admission ceiling on chassis sum(p95*cores)
-    (+inf disables the check — see `serve.admission`). Returns
-    (new_state, servers (B,) i32) with FAIL_* codes for rejects.
+    `rho_cap`: per-chassis admission ceiling — (C,) on chassis
+    sum(p95*cores) only (the legacy watt form), or (C, R) over the
+    full (watts, cores, GB) resource ledger (+inf disables any axis —
+    see `serve.admission`); `mem_gb`: optional (B,) GB demand (None
+    places zero GB). Returns (new_state, servers (B,) i32) with
+    FAIL_* codes for rejects.
 
     Arithmetic follows the state dtype: f32 on the serving path, f64
     (bit-equivalent to the numpy rule) when traced under
@@ -500,7 +558,8 @@ def place_batch(state: DeviceClusterState, cores: jnp.ndarray,
     scheduler simulation's serve backend verifies decision
     equivalence."""
     state, servers, _ = _place_batch_impl(
-        state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
+        state, jnp.inf, cores, is_uf, p95_eff,
+        _mem_or_zeros(mem_gb, cores), valid, rho_cap, policy,
         float(cores_per_server))
     return state, servers
 
@@ -563,7 +622,7 @@ def _apply_cap_windows(ecfg, state: DeviceClusterState, emer, pw, mask,
 def place_batch_caps(state: DeviceClusterState, emer, pw, mask, ts,
                      cores, is_uf, p95_eff, valid, rho_cap,
                      policy: SchedulerPolicy, cores_per_server: int,
-                     ecfg):
+                     ecfg, mem_gb=None):
     """`place_batch` with the pending power-emergency cap sub-windows
     fused in front of the placement scan: one compiled dispatch steps
     the emergency state through every queued (W, C) sample window
@@ -576,7 +635,8 @@ def place_batch_caps(state: DeviceClusterState, emer, pw, mask, ts,
     dispatch cost."""
     emer, sweep = _apply_cap_windows(ecfg, state, emer, pw, mask, ts)
     state, servers, _ = _place_batch_impl(
-        state, jnp.inf, cores, is_uf, p95_eff, valid, rho_cap, policy,
+        state, jnp.inf, cores, is_uf, p95_eff,
+        _mem_or_zeros(mem_gb, cores), valid, rho_cap, policy,
         float(cores_per_server))
     return state, servers, emer, sweep
 
@@ -584,41 +644,51 @@ def place_batch_caps(state: DeviceClusterState, emer, pw, mask, ts,
 @partial(jax.jit, static_argnames=("policy", "cores_per_server"))
 def place_batch_pooled(state: DeviceClusterState, pool, cores, is_uf,
                        p95_eff, valid, rho_cap,
-                       policy: SchedulerPolicy, cores_per_server: int):
-    """`place_batch` with an explicit scalar power-token pool (rho
-    units — same currency as `rho_peak`): each admission additionally
-    requires `p95*cores <= pool_left` and draws the pool down, else
-    returns FAIL_TOKENS. This is the per-shard reserve primitive of the
-    sharded serve protocol (`serve.sharding`, docs/sharding.md).
-    Returns (new_state, servers, pool_left)."""
-    return _place_batch_impl(state, pool, cores, is_uf, p95_eff, valid,
+                       policy: SchedulerPolicy, cores_per_server: int,
+                       mem_gb=None):
+    """`place_batch` with an explicit token pool: each admission
+    additionally requires its (R,) demand vector to clear the pool on
+    every axis and draws the pool down, else returns FAIL_TOKENS.
+    `pool` is a scalar rho-unit balance (the legacy watt protocol) or
+    an (R,) (watts, cores, GB) balance. This is the per-shard reserve
+    primitive of the sharded serve protocol (`serve.sharding`,
+    docs/sharding.md). Returns (new_state, servers, pool_left) with
+    pool_left (R,)."""
+    return _place_batch_impl(state, pool, cores, is_uf, p95_eff,
+                             _mem_or_zeros(mem_gb, cores), valid,
                              rho_cap, policy, float(cores_per_server))
 
 
 @jax.jit
 def remove_batch(state: DeviceClusterState, servers: jnp.ndarray,
                  cores: jnp.ndarray, p95_eff: jnp.ndarray,
-                 is_uf: jnp.ndarray) -> DeviceClusterState:
+                 is_uf: jnp.ndarray, mem_gb=None) -> DeviceClusterState:
     """Batch departure: order-independent scatter-subtract (twin of
-    `ClusterState.remove`). `servers < 0` rows are ignored. Follows
-    the state dtype like `place_batch`, so an f64 place/remove
-    roundtrip is bit-exact."""
+    `ClusterState.remove`), crediting the full (R,) demand vector back
+    to the ledger. `servers < 0` rows are ignored; negated-cores rows
+    are the pinned-placement encoding (`serve.mitigation`) and *debit*
+    instead. Follows the state dtype like `place_batch`, so an f64
+    place/remove roundtrip is bit-exact."""
     dtype = state.free_cores.dtype
     live = servers >= 0
     srv = jnp.where(live, servers, 0).astype(jnp.int32)
     scale = live.astype(dtype)
     cores = cores.astype(dtype) * scale
+    mem = _mem_or_zeros(mem_gb, cores).astype(dtype) * scale
     w = p95_eff.astype(dtype) * cores
     uf_f = is_uf.astype(dtype)
     ch = state.chassis_of[srv]
+    d = jnp.stack([w, cores, mem], axis=-1)                 # (B, R)
     return state._replace(
         free_cores=state.free_cores.at[srv].add(cores),
         gamma_uf=state.gamma_uf.at[srv].add(-w * uf_f),
         gamma_nuf=state.gamma_nuf.at[srv].add(-w * (1.0 - uf_f)),
-        rho_peak=state.rho_peak.at[ch].add(-w))
+        res_peak=state.res_peak.at[ch].add(-d),
+        mem_nuf=state.mem_nuf.at[ch].add(-mem * (1.0 - uf_f)))
 
 
-def outcome_counters(servers, valid, cores, p95_eff) -> dict:
+def outcome_counters(servers, valid, cores, p95_eff,
+                     mem_gb=None) -> dict:
     """Per-batch decision counts from a placement's outputs — the
     host-side (numpy) reduction the observability plane accumulates.
 
@@ -626,19 +696,26 @@ def outcome_counters(servers, valid, cores, p95_eff) -> dict:
     family; valid/cores/p95_eff: the matching batch operands. Padding
     rows (``valid=False``) can carry arbitrary codes without ever
     touching state, so every count masks with `valid`. Returns integer
-    counts per outcome plus ``rho_admitted`` (the admitted
-    ``sum(p95*cores)`` — the exact quantity drawn from chassis
-    `rho_peak` and, sharded, the token pools). Keys:
-    admits / fail_capacity / fail_power / fail_tokens / rho_admitted;
-    the first four always sum to ``valid.sum()``."""
+    counts per outcome plus ``rho_admitted`` / ``cores_admitted`` /
+    ``gb_admitted`` (the admitted (R,) demand per axis — the exact
+    quantities drawn from the chassis `res_peak` ledger and, sharded,
+    the token pools; ``mem_gb=None`` reports 0 GB). Keys: admits /
+    fail_capacity / fail_power / fail_tokens / rho_admitted /
+    cores_admitted / gb_admitted; the first four always sum to
+    ``valid.sum()``."""
     servers = np.asarray(servers)
     valid = np.asarray(valid, bool)
     admitted = (servers >= 0) & valid
-    w = np.asarray(p95_eff, np.float64) * np.asarray(cores, np.float64)
+    cores = np.asarray(cores, np.float64)
+    w = np.asarray(p95_eff, np.float64) * cores
+    mem = np.zeros_like(cores) if mem_gb is None \
+        else np.asarray(mem_gb, np.float64)
     return {
         "admits": int(admitted.sum()),
         "fail_capacity": int(((servers == FAIL_CAPACITY) & valid).sum()),
         "fail_power": int(((servers == FAIL_POWER) & valid).sum()),
         "fail_tokens": int(((servers == FAIL_TOKENS) & valid).sum()),
         "rho_admitted": float(w[admitted].sum()),
+        "cores_admitted": float(cores[admitted].sum()),
+        "gb_admitted": float(mem[admitted].sum()),
     }

@@ -58,7 +58,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
-from repro.serve import emergency
+from repro.core.resources import (N_RESOURCES, ResourceVector,
+                                  lift_caps, lift_pool)
+from repro.serve import ballooning, emergency
 from repro.serve.placement import (DeviceClusterState, FAIL_CAPACITY,
                                    SweepCounters, _apply_cap_windows,
                                    _place_batch_impl, remove_batch)
@@ -73,15 +75,18 @@ class ShardedState(NamedTuple):
     Every `shards` leaf carries a leading (N,) shard axis over *local*
     server/chassis ids; the `global_*` tables translate local winners
     back to cluster ids and `shard_of_server`/`local_of_server` invert
-    them for departures. `pool` is each shard's remaining power-token
-    balance in rho units (+inf when no cluster budget is set)."""
+    them for departures. `res_cap` / `pool` are per-resource (R =
+    (watts, cores, GB), `core.resources`): `pool` is each shard's
+    remaining token balance per axis (+inf on unbudgeted axes — a
+    power-only budget reproduces the scalar watt protocol exactly;
+    axis 0 is rho units)."""
     shards: DeviceClusterState      # leaves (N, S/N) / (N, C/N) / ...
     global_server: jnp.ndarray      # (N, S/N) i32 — local -> global id
     global_chassis: jnp.ndarray     # (N, C/N) i32
     shard_of_server: jnp.ndarray    # (S,) i32 — global server -> shard
     local_of_server: jnp.ndarray    # (S,) i32 — global server -> local id
-    rho_cap: jnp.ndarray            # (N, C/N) — per-chassis admission cap
-    pool: jnp.ndarray               # (N,) — power tokens left, rho units
+    res_cap: jnp.ndarray            # (N, C/N, R) — chassis admission caps
+    pool: jnp.ndarray               # (N, R) — tokens left per resource
 
     @property
     def n_shards(self) -> int:
@@ -121,6 +126,23 @@ def rho_pool_from_budget(cluster_budget_w, n_servers: int,
                0.0)
 
 
+def resource_pool_from_budget(budget: ResourceVector, n_servers: int,
+                              model: ServerPowerModel | None = None
+                              ) -> np.ndarray:
+    """Cluster `ResourceVector` budget -> (R,) global token pool.
+
+    The watts axis converts through the power model exactly like
+    `rho_pool_from_budget` (rho units); the cores/GB axes are already
+    in pool currency (allocatable virtual cores / GB fleet-wide).
+    ``None`` axes disable (+inf) — `ResourceVector(watts=B)` is the
+    legacy scalar pool, which the per-axis compares reproduce bit for
+    bit."""
+    vec = budget.as_array()
+    vec[0] = rho_pool_from_budget(
+        budget.watts, n_servers, model)
+    return vec
+
+
 def shard_state(state: DeviceClusterState, n_shards: int,
                 rho_cap=None, pool_total=None) -> ShardedState:
     """Partition a `DeviceClusterState` into N shard slices.
@@ -129,9 +151,10 @@ def shard_state(state: DeviceClusterState, n_shards: int,
     `DeviceClusterState.chassis_servers`, which for the standard
     ``chassis = server // blades`` layout is the server-id order, so
     1-shard tie-breaking matches the unsharded scan exactly).
-    `rho_cap`: (C,) global per-chassis admission ceiling (None = +inf);
-    `pool_total`: global power-token pool (rho units, None = +inf),
-    split equally across shards."""
+    `rho_cap`: global per-chassis admission ceiling — (C,) watt-axis
+    or (C, R) per-resource, lifted with +inf axes (None = all +inf);
+    `pool_total`: global token pool — scalar rho units or (R,) per
+    resource (None = +inf), each axis split equally across shards."""
     dtype = state.free_cores.dtype
     n_chassis, k = state.chassis_servers.shape
     n_servers = state.n_servers
@@ -151,23 +174,27 @@ def shard_state(state: DeviceClusterState, n_shards: int,
         free_cores=state.free_cores[global_server],
         gamma_uf=state.gamma_uf[global_server],
         gamma_nuf=state.gamma_nuf[global_server],
-        rho_peak=state.rho_peak[global_chassis],
+        res_peak=state.res_peak[global_chassis],
         rho_max=state.rho_max[global_chassis],
         chassis_of=local_chassis_of,
-        chassis_servers=local_chassis_servers)
+        chassis_servers=local_chassis_servers,
+        mem_nuf=state.mem_nuf[global_chassis])
     flat = global_server.reshape(-1)
     shard_of = jnp.zeros(n_servers, jnp.int32).at[flat].set(
         jnp.repeat(jnp.arange(n_shards, dtype=jnp.int32), s_loc))
     local_of = jnp.zeros(n_servers, jnp.int32).at[flat].set(
         jnp.tile(jnp.arange(s_loc, dtype=jnp.int32), n_shards))
     if rho_cap is None:
-        cap = jnp.full((n_shards, c_loc), jnp.inf, dtype)
+        cap = jnp.full((n_shards, c_loc, N_RESOURCES), jnp.inf, dtype)
     else:
-        cap = jnp.asarray(rho_cap, dtype)[global_chassis]
+        cap = lift_caps(jnp.asarray(rho_cap, dtype),
+                        xp=jnp)[global_chassis]
     if pool_total is None:
-        pool = jnp.full(n_shards, jnp.inf, dtype)
+        pool = jnp.full((n_shards, N_RESOURCES), jnp.inf, dtype)
     else:
-        pool = jnp.full(n_shards, float(pool_total) / n_shards, dtype)
+        total = lift_pool(jnp.asarray(pool_total, dtype), xp=jnp)
+        pool = jnp.broadcast_to(total[None, :] / n_shards,
+                                (n_shards, N_RESOURCES))
     return ShardedState(shards, global_server, global_chassis, shard_of,
                         local_of, cap, pool)
 
@@ -194,11 +221,13 @@ def unshard_state(sharded: ShardedState) -> DeviceClusterState:
             sh.gamma_uf.reshape(-1)),
         gamma_nuf=jnp.zeros(n_servers, dtype).at[srv].set(
             sh.gamma_nuf.reshape(-1)),
-        rho_peak=jnp.zeros(n_chassis, dtype).at[cha].set(
-            sh.rho_peak.reshape(-1)),
+        res_peak=jnp.zeros((n_chassis, N_RESOURCES), dtype).at[cha].set(
+            sh.res_peak.reshape(-1, N_RESOURCES)),
         rho_max=jnp.zeros(n_chassis, dtype).at[cha].set(
             sh.rho_max.reshape(-1)),
-        chassis_of=chassis_of, chassis_servers=chassis_servers)
+        chassis_of=chassis_of, chassis_servers=chassis_servers,
+        mem_nuf=jnp.zeros(n_chassis, dtype).at[cha].set(
+            sh.mem_nuf.reshape(-1)))
 
 
 def shard_mesh(n_shards: int):
@@ -221,7 +250,7 @@ def device_put_sharded_state(sharded: ShardedState,
     rep = NamedSharding(mesh, P())
     stacked = jax.tree.map(lambda x: jax.device_put(x, row),
                            (sharded.shards, sharded.global_server,
-                            sharded.global_chassis, sharded.rho_cap,
+                            sharded.global_chassis, sharded.res_cap,
                             sharded.pool))
     inv = jax.tree.map(lambda x: jax.device_put(x, rep),
                        (sharded.shard_of_server,
@@ -274,22 +303,24 @@ def _round_fn(policy: SchedulerPolicy, cps: float, mesh, ecfg=None):
     observables of the sweep."""
     place = partial(_place_batch_impl, policy=policy, cps=cps)
 
-    def one_shard(st, pool, cores, is_uf, p95, attempt, cap, *caps):
+    def one_shard(st, pool, cores, is_uf, p95, mem, attempt, cap,
+                  *caps):
         if ecfg is None:
-            return place(st, pool, cores, is_uf, p95, attempt, cap)
+            return place(st, pool, cores, is_uf, p95, mem, attempt,
+                         cap)
         emer, pw, mask, ts = caps
         emer2, sweep = _apply_cap_windows(ecfg, st, emer, pw, mask, ts)
-        st2, srv, pool2 = place(st, pool, cores, is_uf, p95, attempt,
-                                cap)
+        st2, srv, pool2 = place(st, pool, cores, is_uf, p95, mem,
+                                attempt, cap)
         return st2, srv, pool2, emer2, sweep
 
-    n_in = 7 if ecfg is None else 11
+    n_in = 8 if ecfg is None else 12
     n_out = 3 if ecfg is None else 5
 
-    def fn(shards, pool, global_server, rho_cap, idx, attempt, cores,
-           is_uf, p95, *caps):
-        c, u, p = cores[idx], is_uf[idx], p95[idx]
-        operands = (shards, pool, c, u, p, attempt, rho_cap) + caps
+    def fn(shards, pool, global_server, res_cap, idx, attempt, cores,
+           is_uf, p95, mem, *caps):
+        c, u, p, m = cores[idx], is_uf[idx], p95[idx], mem[idx]
+        operands = (shards, pool, c, u, p, m, attempt, res_cap) + caps
         if mesh is None:
             out = jax.vmap(one_shard)(*operands)
         else:
@@ -313,8 +344,8 @@ def _round_fn(policy: SchedulerPolicy, cps: float, mesh, ecfg=None):
 
 def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
                         valid, policy: SchedulerPolicy,
-                        cores_per_server: int, *, mesh=None,
-                        spill_rounds: int | None = None,
+                        cores_per_server: int, *, mem_gb=None,
+                        mesh=None, spill_rounds: int | None = None,
                         rebalance: bool = True, emer=None, caps=None,
                         ecfg=None, registry=None):
     """Place one arrival batch through the full sharded protocol.
@@ -341,9 +372,12 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     Returns ``(sharded_state, servers, info)``: servers is (B,) global
     ids with FAIL_* codes (a still-failed arrival reports the
     most-severe code it saw across rounds), info counts
-    ``{"rounds", "spilled", "spill_admitted", "tokens_drawn"}``
-    (tokens_drawn: total pool draw across rounds in rho units, 0.0
-    with no budget). With `emer` it returns ``(sharded_state, servers,
+    ``{"rounds", "spilled", "spill_admitted", "tokens_drawn",
+    "tokens_drawn_vec"}`` (tokens_drawn: watt-axis pool draw across
+    rounds in rho units, 0.0 with no budget; tokens_drawn_vec: the
+    full (R,) per-resource draw — only finite-pool axes report).
+    `mem_gb` is the optional (B,) GB demand (None places zero GB —
+    the GB ledger axis then never moves). With `emer` it returns ``(sharded_state, servers,
     info, emergency_state, sweep)`` where sweep is a host-side
     `placement.SweepCounters` summed over shards. `registry`, a
     `repro.obs.MetricsRegistry`, counts each compiled round dispatch
@@ -365,6 +399,8 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     cores_d = jnp.asarray(cores, dtype)
     uf_d = jnp.asarray(is_uf)
     p95_d = jnp.asarray(p95_eff, dtype)
+    mem_d = jnp.zeros_like(cores_d) if mem_gb is None \
+        else jnp.asarray(np.asarray(mem_gb, np.float64), dtype)
     fused = emer is not None
     if fused:
         fn0 = _round_fn(policy, float(cores_per_server), mesh, ecfg)
@@ -376,19 +412,23 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
     shards, pool = sharded.shards, sharded.pool
     pool_start = np.asarray(pool)
     info = {"rounds": 0, "spilled": 0, "spill_admitted": 0,
-            "tokens_drawn": 0.0}
+            "tokens_drawn": 0.0,
+            "tokens_drawn_vec": np.zeros(pool_start.shape[-1])}
     for rnd in range(spill_rounds + 1):
         if not len(pending) and not (rnd == 0 and fused):
             break
         if rnd > 0:
             info["spilled"] += len(pending)
             if rebalance:
-                pool = jnp.full_like(pool, pool.mean())
+                # equalize per axis across shards (conserves each
+                # axis total; +inf axes stay +inf)
+                pool = jnp.broadcast_to(pool.mean(axis=0)[None, :],
+                                        pool.shape)
         targets = route_shard(b, n, rnd)
         idx, attempt = _pack_round(pending, targets, n, b_loc)
         operands = (shards, pool, sharded.global_server,
-                    sharded.rho_cap, jnp.asarray(idx),
-                    jnp.asarray(attempt), cores_d, uf_d, p95_d)
+                    sharded.res_cap, jnp.asarray(idx),
+                    jnp.asarray(attempt), cores_d, uf_d, p95_d, mem_d)
         if rnd == 0 and fused:
             shards, pool, glob, emer, sw = fn0(*operands, emer, pw,
                                                mask, ts)
@@ -414,10 +454,14 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
         pending = np.sort(failed)
         info["rounds"] = rnd + 1
     pool_end = np.asarray(pool)
-    if np.isfinite(pool_start).all():
-        # rebalancing conserves the total, so the overall delta is
-        # exactly the admitted draw of every round combined
-        info["tokens_drawn"] = float(pool_start.sum() - pool_end.sum())
+    # rebalancing conserves each axis total, so the overall per-axis
+    # delta is exactly the admitted draw of every round combined;
+    # +inf (unbudgeted) axes report 0
+    finite = np.isfinite(pool_start).all(axis=0)
+    drawn = np.where(finite, pool_start.sum(axis=0)
+                     - np.where(finite, pool_end, 0.0).sum(axis=0), 0.0)
+    info["tokens_drawn_vec"] = drawn
+    info["tokens_drawn"] = float(drawn[0])
     new = sharded._replace(shards=shards, pool=pool)
     if fused:
         # the home round always runs when fused (it must apply the
@@ -427,16 +471,16 @@ def place_group_sharded(sharded: ShardedState, cores, is_uf, p95_eff,
 
 
 def split_departures(sharded: ShardedState, servers, cores, p95_eff,
-                     is_uf):
+                     is_uf, mem_gb=None):
     """Host-side routing of a global departure batch into per-shard
     local batches — the pre-merge step the ingest subsystem
     (`serve.ingest`, DESIGN.md §11) hands each shard.
 
     servers: (B,) global ids (negative codes dropped). Returns
-    ``(local_srv, cores, p95_eff, is_uf)`` stacked (N, B) arrays,
-    padded with ``local_srv = -1`` rows; each shard's rows keep the
-    input (merged-stream) order. Shapes stay (N, B) so the consuming
-    jit never re-specializes on per-shard counts."""
+    ``(local_srv, cores, p95_eff, is_uf, mem_gb)`` stacked (N, B)
+    arrays, padded with ``local_srv = -1`` rows; each shard's rows
+    keep the input (merged-stream) order. Shapes stay (N, B) so the
+    consuming jit never re-specializes on per-shard counts."""
     servers = np.asarray(servers)
     b = len(servers)
     n = sharded.n_shards
@@ -448,9 +492,12 @@ def split_departures(sharded: ShardedState, servers, cores, p95_eff,
     cores_out = np.zeros((n, b), np.float64)
     p95_out = np.zeros((n, b), np.float64)
     uf_out = np.zeros((n, b), bool)
+    mem_out = np.zeros((n, b), np.float64)
     cores = np.asarray(cores, np.float64)
     p95_eff = np.asarray(p95_eff, np.float64)
     is_uf = np.asarray(is_uf, bool)
+    mem = np.zeros(b) if mem_gb is None else np.asarray(mem_gb,
+                                                        np.float64)
     for s in range(n):
         mine = owner == s
         k = int(mine.sum())
@@ -458,46 +505,56 @@ def split_departures(sharded: ShardedState, servers, cores, p95_eff,
         cores_out[s, :k] = cores[mine]
         p95_out[s, :k] = p95_eff[mine]
         uf_out[s, :k] = is_uf[mine]
-    return srv_out, cores_out, p95_out, uf_out
+        mem_out[s, :k] = mem[mine]
+    return srv_out, cores_out, p95_out, uf_out, mem_out
 
 
 @jax.jit
-def _consume_departures(shards, pool, srv, cores, p95_eff, is_uf):
-    def per_shard(st, pl, s, c, p, u):
+def _consume_departures(shards, pool, srv, cores, p95_eff, is_uf, mem):
+    def per_shard(st, pl, s, c, p, u, m):
         dtype = st.free_cores.dtype
         live = (s >= 0).astype(dtype)
-        credit = (p.astype(dtype) * c.astype(dtype) * live).sum()
-        return remove_batch(st, s, c, p, u), pl + credit
-    return jax.vmap(per_shard)(shards, pool, srv, cores, p95_eff, is_uf)
+        c_live = c.astype(dtype) * live
+        w = p.astype(dtype) * c_live
+        credit = jnp.stack([w.sum(), c_live.sum(),
+                            (m.astype(dtype) * live).sum()])
+        return remove_batch(st, s, c, p, u, m), pl + credit
+    return jax.vmap(per_shard)(shards, pool, srv, cores, p95_eff,
+                               is_uf, mem)
 
 
 def consume_departures(sharded: ShardedState, local_srv, cores,
-                       p95_eff, is_uf) -> ShardedState:
+                       p95_eff, is_uf, mem_gb=None) -> ShardedState:
     """Consume per-shard departure batches (the `split_departures` /
     ingest-merge format): one vmapped kernel per shard applies
-    `remove_batch` to its own rows and credits the freed ``p95*cores``
-    power tokens back to its own pool *in the same scan* — no shard
-    ever sees another shard's departures, and no (N, B) broadcast of
-    the full global batch is materialized on device."""
+    `remove_batch` to its own rows and credits the freed (R,) demand
+    vector — ``(p95*cores, cores, GB)`` — back to its own pool *in
+    the same scan*, one axis at a time, so per-resource token totals
+    are conserved. No shard ever sees another shard's departures, and
+    no (N, B) broadcast of the full global batch is materialized on
+    device."""
     dtype = sharded.shards.free_cores.dtype
+    cores_d = jnp.asarray(cores, dtype)
     shards, pool = _consume_departures(
         sharded.shards, sharded.pool, jnp.asarray(local_srv, jnp.int32),
-        jnp.asarray(cores, dtype), jnp.asarray(p95_eff, dtype),
-        jnp.asarray(is_uf))
+        cores_d, jnp.asarray(p95_eff, dtype),
+        jnp.asarray(is_uf),
+        jnp.zeros_like(cores_d) if mem_gb is None
+        else jnp.asarray(mem_gb, dtype))
     return sharded._replace(shards=shards, pool=pool)
 
 
 def remove_sharded(sharded: ShardedState, servers, cores, p95_eff,
-                   is_uf) -> ShardedState:
+                   is_uf, mem_gb=None) -> ShardedState:
     """Sharded twin of `serve.placement.remove_batch`: route each
     departure to its owner shard (negative server codes are ignored)
-    and credit the freed `p95*cores` tokens back to that shard's
-    pool. Composition of `split_departures` + `consume_departures` —
-    the per-shard batches the cross-host ingest merge produces
-    directly skip the split."""
+    and credit the freed (R,) demand vector back to that shard's
+    pool per axis. Composition of `split_departures` +
+    `consume_departures` — the per-shard batches the cross-host
+    ingest merge produces directly skip the split."""
     return consume_departures(
         sharded, *split_departures(sharded, servers, cores, p95_eff,
-                                   is_uf))
+                                   is_uf, mem_gb))
 
 
 # --- sharded power-emergency plane (DESIGN.md §12) ------------------------
@@ -635,4 +692,67 @@ def apply_caps_sharded(cfg: emergency.EmergencyConfig,
     pw, mask, ts = split_caps(sharded, chassis, power_w, t)
     fn = _caps_fn(cfg, mesh)
     return fn(sharded.shards, emer, jnp.asarray(pw, dtype),
+              jnp.asarray(mask), jnp.asarray(ts, dtype))
+
+
+def init_ballooning_sharded(n_chassis: int, n_shards: int,
+                            dtype=jnp.float32):
+    """Ballooning state partitioned like the cluster (leading (N,)
+    axis over the same contiguous chassis blocks as `shard_state` —
+    the `init_emergency_sharded` layout)."""
+    chassis_to_shard(n_chassis, n_shards)       # validates divisibility
+    return ballooning.init_ballooning(
+        n_chassis // n_shards, batch_shape=(n_shards,), xp=jnp,
+        dtype=dtype)
+
+
+@lru_cache(maxsize=None)
+def _caps_balloon_fn(ecfg: emergency.EmergencyConfig,
+                     bcfg: ballooning.BallooningConfig, mesh):
+    """Compiled sharded balloon-then-cap scan: each shard balloons its
+    alarmed chassis against its own NUF-memory ledger
+    (`serve.ballooning.balloon_step` over ``shards.mem_nuf``), then
+    runs the masked emergency step on the DRAM-adjusted draws — vmap
+    on one device, shard_map over the mesh (the `_caps_fn` pattern)."""
+
+    def one_shard(st, emer, bst, pw, mask, ts):
+        rho_lv = emergency.chassis_rho_levels(
+            st.gamma_nuf, st.gamma_uf, st.chassis_servers, jnp)
+        bst2, bout = ballooning.balloon_step(
+            bcfg, ecfg, bst, rho_lv, pw, st.mem_nuf, mask, jnp)
+        emer2, eout = emergency.masked_step(
+            ecfg, emer, rho_lv, bout.power_adj_w, mask, ts, jnp)
+        return emer2, bst2, eout, bout
+
+    def fn(shards, emer, bst, pw, mask, ts):
+        if mesh is None:
+            return jax.vmap(one_shard)(shards, emer, bst, pw, mask, ts)
+
+        def per(st, em, b1, p1, m1, t1):
+            sq = partial(jax.tree.map, lambda x: x[0])
+            out = one_shard(sq(st), sq(em), sq(b1), p1[0], m1[0], t1[0])
+            return jax.tree.map(lambda x: x[None], out)
+        spec = P(SHARD_AXIS)
+        return shard_map(per, mesh=mesh, in_specs=(spec,) * 6,
+                         out_specs=(spec,) * 4)(shards, emer, bst, pw,
+                                                mask, ts)
+
+    return jax.jit(fn)
+
+
+def apply_caps_ballooned_sharded(ecfg: emergency.EmergencyConfig,
+                                 bcfg: ballooning.BallooningConfig,
+                                 sharded: ShardedState, emer, bst,
+                                 chassis, power_w, t, *, mesh=None):
+    """`apply_caps_sharded` with the ballooning rung in front
+    (DESIGN.md §16): the window's samples are first offered to
+    `serve.ballooning.balloon_step` — alarmed chassis reclaim NUF
+    memory to absorb the cut the NUF frequency floor cannot — and the
+    masked emergency step consumes the DRAM-adjusted draws. Returns
+    ``(emergency_state, balloon_state, EmergencyOutputs,
+    BalloonOutputs)``, all with the per-shard leading axis."""
+    dtype = sharded.shards.free_cores.dtype
+    pw, mask, ts = split_caps(sharded, chassis, power_w, t)
+    fn = _caps_balloon_fn(ecfg, bcfg, mesh)
+    return fn(sharded.shards, emer, bst, jnp.asarray(pw, dtype),
               jnp.asarray(mask), jnp.asarray(ts, dtype))

@@ -1,2 +1,21 @@
 """Datacenter simulation substrate: workload/telemetry generation, cluster
-scheduler simulation, and chassis power dynamics."""
+scheduler simulation, and chassis power dynamics.
+
+Front door: build a :class:`SimSpec` (grouping the serve backend,
+power-dynamics evaluation, and mitigation-plane configs into typed
+sub-specs) and hand it to :func:`simulate`.  The flat keyword-argument
+surface of earlier revisions still works behind a
+``DeprecationWarning`` adapter (see docs/resources.md for the
+migration table).
+"""
+from repro.sim.scheduler_sim import (GB_PER_CORE, PowerEvalSpec,
+                                     PredictionChannel,
+                                     ServeBackendSpec, SimMetrics,
+                                     SimSpec, evaluate_power_dynamics,
+                                     fig7_sweep, simulate)
+
+__all__ = [
+    "GB_PER_CORE", "PowerEvalSpec", "PredictionChannel",
+    "ServeBackendSpec", "SimMetrics", "SimSpec",
+    "evaluate_power_dynamics", "fig7_sweep", "simulate",
+]

@@ -10,10 +10,10 @@ The contract under test (docs/adaptive.md, DESIGN.md §15):
     ``[ratio_min, ratio_max]``, and holds 1.0 with no history;
   * `retarget_pool` mints/retires only the free allowance — tokens
     committed to placed VMs are never revoked;
-  * `ServePipeline(adaptive_cfg=...)` scans eagerly per cap window,
-    and the 1-shard `ShardedServePipeline` reproduces it ratio for
-    ratio (both equal to a hand-stepped numpy oracle);
-  * `simulate(adaptive_cfg=...)` requires a serve backend, and
+  * a `ServePipeline` with `PlaneBundle(adaptive=...)` scans eagerly
+    per cap window, and the 1-shard `ShardedServePipeline` reproduces
+    it ratio for ratio (both equal to a hand-stepped numpy oracle);
+  * `SimSpec(adaptive=...)` requires a serve backend, and
     'serve' == 'serve-sharded' @ 1 shard trace-for-trace with the
     controller live.
 """
@@ -24,12 +24,14 @@ import pytest
 
 from repro.core.placement import SchedulerPolicy
 from repro.obs import AdaptiveRecord, Observability
-from repro.serve import (REASON_NAMES, AdaptiveConfig, ServeConfig,
+from repro.serve import (REASON_NAMES, AdaptiveConfig, PlaneBundle,
+                         ResourceVector, ServeConfig,
                          ServePipeline, ShardedServeConfig,
                          ShardedServePipeline, adaptive_step,
                          decision_reason, init_adaptive, offered_power,
                          retarget_pool)
-from repro.sim.scheduler_sim import PredictionChannel, simulate
+from repro.sim.scheduler_sim import (PredictionChannel, ServeBackendSpec,
+                                     SimSpec, simulate)
 
 C = 6              # chassis in the kernel-level tests
 
@@ -284,8 +286,10 @@ def test_pipeline_ratio_ratchets_and_scales_rho_cap(serve_world):
     acfg = _cfg(ratio_max=2.0)
     obs = Observability.full()
     pipe = ServePipeline.from_history(
-        svc, hist, labels, config=ServeConfig(batch_size=32),
-        adaptive_cfg=acfg, obs=obs, **PIPE_KW)
+        svc, hist, labels,
+        config=ServeConfig(batch_size=32,
+                           planes=PlaneBundle(adaptive=acfg, obs=obs)),
+        **PIPE_KW)
     base_cap = np.asarray(pipe.rho_cap).copy()
     _cap_stream(pipe)
     r = pipe.adaptive_ratio
@@ -306,8 +310,10 @@ def test_cap_to_accepted_with_adaptive_only(serve_world):
     and still raise with neither plane configured."""
     svc, hist, labels, _ = serve_world
     pipe = ServePipeline.from_history(
-        svc, hist, labels, config=ServeConfig(batch_size=32),
-        adaptive_cfg=_cfg(), **PIPE_KW)
+        svc, hist, labels,
+        config=ServeConfig(batch_size=32,
+                           planes=PlaneBundle(adaptive=_cfg())),
+        **PIPE_KW)
     pipe.cap_to(0, [0], [500.0])
     pipe.flush()
     assert pipe.adaptive_state is not None
@@ -325,12 +331,15 @@ def test_one_shard_sharded_matches_unsharded_and_numpy_oracle(
     svc, hist, labels, _ = serve_world
     acfg = _cfg(ratio_max=2.0)
     base = ServePipeline.from_history(
-        svc, hist, labels, config=ServeConfig(batch_size=32),
-        adaptive_cfg=acfg, **PIPE_KW)
+        svc, hist, labels,
+        config=ServeConfig(batch_size=32,
+                           planes=PlaneBundle(adaptive=acfg)),
+        **PIPE_KW)
     shp = ShardedServePipeline.from_history(
         svc, hist, labels,
-        config=ShardedServeConfig(batch_size=32, n_shards=1),
-        adaptive_cfg=acfg, **PIPE_KW)
+        config=ShardedServeConfig(batch_size=32, n_shards=1,
+                                  planes=PlaneBundle(adaptive=acfg)),
+        **PIPE_KW)
     for pipe in (base, shp):
         _cap_stream(pipe)
     # numpy oracle on the same stream: empty cluster -> rho_lv = 0
@@ -358,10 +367,14 @@ def test_sharded_backoff_drains_only_free_pool(serve_world):
     acfg = _cfg(ratio_max=3.0)
     shp = ShardedServePipeline.from_history(
         svc, hist, labels,
-        config=ShardedServeConfig(batch_size=32, n_shards=1),
-        adaptive_cfg=acfg, cluster_budget_w=40000.0, **PIPE_KW)
+        config=ShardedServeConfig(
+            batch_size=32, n_shards=1,
+            planes=PlaneBundle(
+                adaptive=acfg,
+                cluster_budget=ResourceVector(watts=40000.0))),
+        **PIPE_KW)
     _cap_stream(shp)                          # ratchets: pool widens
-    pool_up = float(np.asarray(shp.sharded.pool).sum())
+    pool_up = float(np.asarray(shp.sharded.pool)[:, 0].sum())
     # commit real VMs so power samples read back as utilization...
     idx64 = np.arange(64)
     shp.submit_to(0, arrival_batch(arrivals, idx64),
@@ -376,7 +389,7 @@ def test_sharded_backoff_drains_only_free_pool(serve_world):
         shp.cap_to(0, idx, np.full(4, 6000.0),
                    t=200.0 + k + (idx + 1) * 1e-7)
     shp.flush()
-    pool_down = float(np.asarray(shp.sharded.pool).sum())
+    pool_down = float(np.asarray(shp.sharded.pool)[:, 0].sum())
     assert pool_down < pool_up
     assert pool_down >= 0.0
     np.testing.assert_array_equal(
@@ -389,10 +402,17 @@ SIM_KW = dict(days=0.08, seed=3, deployments_per_hour=16.0,
               prefill_core_ratio=0.5)
 
 
+def _sim_spec(acfg, backend="serve", shards=1):
+    return SimSpec(serve=ServeBackendSpec(
+        backend=backend, shards=shards,
+        admission_budget=ResourceVector(watts=12 * 310.0 / 2)),
+        adaptive=acfg, **SIM_KW)
+
+
 def test_sim_adaptive_requires_serve_backend():
     with pytest.raises(ValueError, match="serve"):
         simulate(SchedulerPolicy(), PredictionChannel("ml"),
-                 backend="event", adaptive_cfg=_cfg(), **SIM_KW)
+                 SimSpec(adaptive=_cfg(), **SIM_KW))
 
 
 def test_sim_adaptive_ratchets_and_asserts_twin():
@@ -400,8 +420,7 @@ def test_sim_adaptive_ratchets_and_asserts_twin():
     moves off 1.0, steps are counted, and every scan asserted the
     compiled twin bit-equal in-sim (the assert is inside the scan)."""
     m = simulate(SchedulerPolicy(), PredictionChannel("ml"),
-                 backend="serve", admission_budget_w=12 * 310.0 / 2,
-                 adaptive_cfg=_cfg(ratio_max=3.0), **SIM_KW)
+                 _sim_spec(_cfg(ratio_max=3.0)))
     assert m.adaptive_ratio > 1.0
     assert m.adaptive_ratchets > 0
     assert m.placements > 0
@@ -413,12 +432,10 @@ def test_sim_one_shard_sharded_identical_with_adaptive():
     acfg = _cfg(ratio_max=3.0)
     tr_s, tr_sh = [], []
     ms = simulate(SchedulerPolicy(), PredictionChannel("ml"),
-                  backend="serve", admission_budget_w=12 * 310.0 / 2,
-                  adaptive_cfg=acfg, trace=tr_s, **SIM_KW)
+                  _sim_spec(acfg), trace=tr_s)
     msh = simulate(SchedulerPolicy(), PredictionChannel("ml"),
-                   backend="serve-sharded", serve_shards=1,
-                   admission_budget_w=12 * 310.0 / 2,
-                   adaptive_cfg=acfg, trace=tr_sh, **SIM_KW)
+                   _sim_spec(acfg, backend="serve-sharded"),
+                   trace=tr_sh)
     assert tr_s == tr_sh
     assert ms.adaptive_ratio == msh.adaptive_ratio
     assert ms.adaptive_ratchets == msh.adaptive_ratchets
@@ -428,8 +445,7 @@ def test_sim_one_shard_sharded_identical_with_adaptive():
 def test_sim_metrics_export_through_obs_registry():
     obs = Observability.full()
     m = simulate(SchedulerPolicy(), PredictionChannel("ml"),
-                 backend="serve", admission_budget_w=12 * 310.0 / 2,
-                 adaptive_cfg=_cfg(ratio_max=2.0), obs=obs, **SIM_KW)
+                 _sim_spec(_cfg(ratio_max=2.0)), obs=obs)
     snap = obs.registry.snapshot()
     assert snap["adaptive_ratio"][0]["value"] \
         == pytest.approx(m.adaptive_ratio)

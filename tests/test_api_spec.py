@@ -1,0 +1,228 @@
+"""The consolidated SimSpec/PlaneBundle front door (DESIGN.md §16).
+
+Three families:
+
+  * spec construction: defaults, validation errors, and frozen-ness of
+    `SimSpec` / `ServeBackendSpec` / `PowerEvalSpec` and the
+    `ResourceVector` budget currency;
+  * legacy `simulate` kwargs: the adapter warns `DeprecationWarning`
+    and is *decision-identical* — same trace, same metrics, field for
+    field — on both the event and serve-sharded backends;
+  * legacy pipeline constructor kwargs: folding
+    ``chassis_budget_w``/``cluster_budget_w``/``emergency_cfg``/
+    ``adaptive_cfg``/``obs`` into `PlaneBundle` warns and reproduces
+    every placement decision bit for bit.
+
+Tier-1 runs ``-W error::DeprecationWarning`` (pyproject), so these
+``pytest.warns`` blocks are the only sanctioned road to the adapters.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.placement import SchedulerPolicy
+from repro.core.resources import RESOURCES, ResourceVector
+from repro.serve import (EmergencyConfig, PlaneBundle, ServeConfig,
+                         ServePipeline, ShardedServeConfig,
+                         ShardedServePipeline)
+from repro.sim.scheduler_sim import (PowerEvalSpec, PredictionChannel,
+                                     ServeBackendSpec, SimSpec,
+                                     simulate)
+from repro.sim.telemetry import arrival_batch
+
+BUDGET_TIGHT = 1480.0
+
+
+# --- spec construction and validation -------------------------------------
+
+
+def test_simspec_defaults():
+    spec = SimSpec()
+    assert spec.days == 30.0
+    assert spec.serve == ServeBackendSpec()
+    assert spec.serve.backend == "event"
+    assert spec.power is None
+    assert spec.emergency is None and spec.ballooning is None
+
+
+def test_simspec_is_frozen():
+    spec = SimSpec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.days = 1.0
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.serve.shards = 2
+
+
+def test_simspec_validation():
+    with pytest.raises(ValueError, match="days"):
+        SimSpec(days=0.0)
+    with pytest.raises(ValueError, match="backend"):
+        ServeBackendSpec(backend="gpu")
+    with pytest.raises(ValueError):
+        ServeBackendSpec(shards=0)
+    with pytest.raises(ValueError):
+        ServeBackendSpec(ingest_hosts=0)
+    with pytest.raises(ValueError, match="budget_w"):
+        PowerEvalSpec(budget_w=0.0)
+    # the balloon rung sizes its reclaim off the emergency plane
+    with pytest.raises(ValueError, match="emergency"):
+        from repro.serve import BallooningConfig
+        SimSpec(ballooning=BallooningConfig())
+
+
+def test_resource_vector_roundtrip():
+    rv = ResourceVector(watts=100.0, cores=8.0, gb=32.0)
+    arr = rv.as_array()
+    assert arr.shape == (len(RESOURCES),)
+    np.testing.assert_array_equal(arr, [100.0, 8.0, 32.0])
+    # None axes lift to +inf (vacuous ceilings)
+    part = ResourceVector(watts=50.0).as_array()
+    assert part[0] == 50.0 and np.isinf(part[1]) and np.isinf(part[2])
+    assert ResourceVector(watts=50.0).power_only
+    assert not rv.power_only
+
+
+def test_spec_plus_legacy_kwargs_is_an_error():
+    with pytest.raises(TypeError):
+        simulate(SchedulerPolicy(), PredictionChannel(),
+                 SimSpec(days=0.05), days=0.05)
+
+
+def test_planebundle_ballooning_requires_emergency():
+    from repro.serve import BallooningConfig
+    with pytest.raises(ValueError, match="emergency"):
+        ServePipeline.from_history(
+            *_world()[:3], n_servers=24, cores_per_server=40,
+            blades_per_chassis=12,
+            config=ServeConfig(planes=PlaneBundle(
+                ballooning=BallooningConfig())))
+
+
+# --- simulate legacy-kwarg adapter parity ---------------------------------
+
+
+def _metrics_equal(a, b):
+    for f in dataclasses.fields(a):
+        va, vb = getattr(a, f.name), getattr(b, f.name)
+        if isinstance(va, np.ndarray):
+            np.testing.assert_array_equal(va, vb, err_msg=f.name)
+        else:
+            assert va == vb, f.name
+
+
+def test_legacy_kwargs_match_spec_event_backend():
+    pol, ch = SchedulerPolicy(alpha=0.8), PredictionChannel("ml")
+    cfg = EmergencyConfig.from_model(BUDGET_TIGHT, dwell_s=120.0)
+    tr_new, tr_old = [], []
+    m_new = simulate(pol, ch, SimSpec(days=0.08, seed=0,
+                                      deployments_per_hour=16.0,
+                                      prefill_core_ratio=0.6,
+                                      emergency=cfg), trace=tr_new)
+    with pytest.warns(DeprecationWarning, match="spec=SimSpec"):
+        m_old = simulate(pol, ch, days=0.08, seed=0,
+                         deployments_per_hour=16.0,
+                         prefill_core_ratio=0.6, emergency_cfg=cfg,
+                         trace=tr_old)
+    assert tr_new == tr_old
+    _metrics_equal(m_new, m_old)
+
+
+def test_legacy_kwargs_match_spec_serve_sharded_backend():
+    pol, ch = SchedulerPolicy(alpha=0.8), PredictionChannel("ml")
+    budget = 2.0e6
+    spec = SimSpec(days=0.08, seed=1, deployments_per_hour=16.0,
+                   prefill_core_ratio=0.5,
+                   serve=ServeBackendSpec(
+                       backend="serve-sharded", shards=2,
+                       cluster_budget=ResourceVector(watts=budget)))
+    tr_new, tr_old = [], []
+    m_new = simulate(pol, ch, spec, trace=tr_new)
+    with pytest.warns(DeprecationWarning, match="spec=SimSpec"):
+        m_old = simulate(pol, ch, days=0.08, seed=1,
+                         deployments_per_hour=16.0,
+                         prefill_core_ratio=0.5,
+                         backend="serve-sharded", serve_shards=2,
+                         cluster_budget_w=budget, trace=tr_old)
+    assert tr_new == tr_old
+    _metrics_equal(m_new, m_old)
+
+
+# --- pipeline constructor adapter parity ----------------------------------
+
+
+@pytest.fixture(scope="module", name="pipe_world")
+def _pipe_world():
+    return _world()
+
+
+def _world():
+    from repro.core import features as F
+    from repro.core.predictor import train_service
+    from repro.sim.telemetry import generate_population
+    pop = generate_population(300, seed=0)
+    hist, arrivals = F.split_history_arrivals(pop)
+    labels = hist.labels.astype(np.float64)
+    aggs = F.subscription_aggregates(hist, labels)
+    svc = train_service(F.build_features(hist, aggs),
+                        labels.astype(np.int64),
+                        F.p95_bucket([v.p95_util for v in hist.vms]),
+                        n_trees=8)
+    return svc, hist, labels, arrivals
+
+
+_KW = dict(n_servers=24, cores_per_server=40, blades_per_chassis=12)
+
+
+def _drive(pipe, arrivals):
+    out = pipe.cap_to(0, [0, 1], [2200.0, 2100.0],
+                      t=np.array([1.0, 2.0]))
+    out += pipe.submit_to(0, arrival_batch(arrivals, np.arange(64)),
+                          t=np.arange(64, dtype=np.float64) + 10.0)
+    tail = pipe.flush()
+    if tail is not None:
+        out.append(tail)
+    return out
+
+
+def test_pipeline_legacy_kwargs_decision_identical(pipe_world):
+    svc, hist, labels, arrivals = pipe_world
+    budget_w = 12 * 112.0 + 500.0
+    ecfg = EmergencyConfig.from_model(BUDGET_TIGHT)
+    new = ServePipeline.from_history(
+        svc, hist, labels,
+        config=ServeConfig(batch_size=32, planes=PlaneBundle(
+            chassis_budget=ResourceVector(watts=budget_w),
+            emergency=ecfg)), **_KW)
+    with pytest.warns(DeprecationWarning, match="PlaneBundle"):
+        old = ServePipeline.from_history(
+            svc, hist, labels, config=ServeConfig(batch_size=32),
+            chassis_budget_w=budget_w, emergency_cfg=ecfg, **_KW)
+    np.testing.assert_array_equal(np.asarray(new.res_cap),
+                                  np.asarray(old.res_cap))
+    for a, b in zip(_drive(new, arrivals), _drive(old, arrivals)):
+        np.testing.assert_array_equal(a.server, b.server)
+        np.testing.assert_array_equal(a.workload_type, b.workload_type)
+        np.testing.assert_array_equal(a.p95_eff, b.p95_eff)
+    assert new.alarms == old.alarms
+
+
+def test_sharded_pipeline_legacy_kwargs_decision_identical(pipe_world):
+    svc, hist, labels, arrivals = pipe_world
+    budget_w = 24 * 112.0 + 700.0
+    new = ShardedServePipeline.from_history(
+        svc, hist, labels,
+        config=ShardedServeConfig(batch_size=32, n_shards=2,
+                                  planes=PlaneBundle(
+                                      cluster_budget=ResourceVector(
+                                          watts=budget_w))), **_KW)
+    with pytest.warns(DeprecationWarning, match="PlaneBundle"):
+        old = ShardedServePipeline.from_history(
+            svc, hist, labels,
+            config=ShardedServeConfig(batch_size=32, n_shards=2),
+            cluster_budget_w=budget_w, **_KW)
+    b = arrival_batch(arrivals, np.arange(64))
+    r_new, r_old = new.serve(b), old.serve(b)
+    np.testing.assert_array_equal(r_new.server, r_old.server)
+    np.testing.assert_array_equal(np.asarray(new.sharded.pool),
+                                  np.asarray(old.sharded.pool))

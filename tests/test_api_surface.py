@@ -1,0 +1,163 @@
+"""Pin the public API surface of `repro.serve` and `repro.sim`.
+
+The spec front door (SimSpec / PlaneBundle / ResourceVector) is a
+compatibility contract: downstream callers import these names, so a
+rename or a dropped export is a breaking change that must show up in
+review as an edit to *this file*, not as a silent diff in an
+`__init__`.  Accidental additions are caught too — a new export is a
+deliberate API decision, so it lands here alongside the code.
+"""
+import pytest
+
+import repro.serve
+import repro.sim
+
+SERVE_API = [
+    "ARRIVAL",
+    "AdaptiveConfig",
+    "AdaptiveOutputs",
+    "AdaptiveState",
+    "BalloonOutputs",
+    "BalloonState",
+    "BallooningConfig",
+    "CAPPING",
+    "CRIT_NUF",
+    "CRIT_UF",
+    "CapBatch",
+    "DEPARTURE",
+    "DepartureBatch",
+    "DeviceClusterState",
+    "EmergencyConfig",
+    "EmergencyOutputs",
+    "EmergencyState",
+    "FAIL_CAPACITY",
+    "FAIL_POWER",
+    "FAIL_TOKENS",
+    "HostQueue",
+    "IngestMux",
+    "LiveVMs",
+    "MergedEvents",
+    "MigrationPlan",
+    "N_LEVELS",
+    "PackedService",
+    "PlaneBundle",
+    "REASON_NAMES",
+    "RESOURCES",
+    "ResourceVector",
+    "SHARD_AXIS",
+    "ServeConfig",
+    "ServePipeline",
+    "ServeResult",
+    "ServiceMeta",
+    "ShardedServeConfig",
+    "ShardedServePipeline",
+    "ShardedState",
+    "SubscriptionTable",
+    "SweepCounters",
+    "adaptive_step",
+    "apply_adaptive_sharded",
+    "apply_caps_ballooned_sharded",
+    "apply_caps_sharded",
+    "balloon_demand_w",
+    "balloon_step",
+    "bucket_to_p95_jnp",
+    "chassis_rho_levels",
+    "chassis_to_shard",
+    "consume_departures",
+    "decision_reason",
+    "demand_vector",
+    "device_put_sharded_state",
+    "device_state",
+    "emergency_step",
+    "empty_arrivals",
+    "empty_caps",
+    "empty_departures",
+    "empty_table",
+    "featurize",
+    "featurize_batch",
+    "fresh_state",
+    "headroom_w",
+    "ingest_population",
+    "init_adaptive",
+    "init_adaptive_sharded",
+    "init_ballooning",
+    "init_ballooning_sharded",
+    "init_emergency",
+    "init_emergency_sharded",
+    "kway_merge",
+    "masked_step",
+    "mitigation_due",
+    "offered_power",
+    "outcome_counters",
+    "pack_service",
+    "place_batch",
+    "place_batch_caps",
+    "place_batch_pooled",
+    "place_group_sharded",
+    "plan_migrations",
+    "projected_chassis_power",
+    "remove_batch",
+    "remove_sharded",
+    "reset_dwell",
+    "resolve_kernel",
+    "resource_caps_from_budget",
+    "resource_pool_from_budget",
+    "retarget_pool",
+    "rho_cap_from_budget",
+    "rho_pool_from_budget",
+    "route_shard",
+    "sampled_power",
+    "scatter_samples",
+    "score_chassis_batch",
+    "score_server_batch",
+    "served_query",
+    "shard_mesh",
+    "shard_state",
+    "shard_table",
+    "slice_soa",
+    "split_caps",
+    "split_departures",
+    "table_from_history",
+    "throttled_by_level",
+    "total_ballooned_gb",
+    "trough_ratios",
+    "unshard_state",
+    "update_table",
+    "util_from_power",
+]
+
+SIM_API = [
+    "GB_PER_CORE",
+    "PowerEvalSpec",
+    "PredictionChannel",
+    "ServeBackendSpec",
+    "SimMetrics",
+    "SimSpec",
+    "evaluate_power_dynamics",
+    "fig7_sweep",
+    "simulate",
+]
+
+
+@pytest.mark.parametrize(
+    "mod, pinned",
+    [(repro.serve, SERVE_API), (repro.sim, SIM_API)],
+    ids=["repro.serve", "repro.sim"])
+def test_all_matches_pin(mod, pinned):
+    assert sorted(mod.__all__) == pinned
+    assert len(mod.__all__) == len(set(mod.__all__)), "duplicate export"
+
+
+@pytest.mark.parametrize(
+    "mod", [repro.serve, repro.sim], ids=["repro.serve", "repro.sim"])
+def test_every_export_resolves(mod):
+    for name in mod.__all__:
+        assert getattr(mod, name) is not None, name
+
+
+def test_spec_front_door_is_exported():
+    # the names every migration-table row in docs/resources.md points at
+    for name in ("PlaneBundle", "ResourceVector"):
+        assert name in repro.serve.__all__
+    for name in ("SimSpec", "ServeBackendSpec", "PowerEvalSpec"):
+        assert name in repro.sim.__all__

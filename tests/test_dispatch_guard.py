@@ -16,7 +16,8 @@ from repro.core import features as F
 from repro.core.placement import ClusterState
 from repro.core.predictor import train_service
 from repro.obs import Observability
-from repro.serve import (EmergencyConfig, ServeConfig, ServePipeline,
+from repro.serve import (EmergencyConfig, PlaneBundle, ServeConfig,
+                         ServePipeline,
                          ShardedServeConfig, ShardedServePipeline,
                          device_state)
 from repro.serve.featurizer import table_from_history
@@ -78,8 +79,10 @@ def test_unsharded_sweep_rides_placement_dispatch(guard_world):
     pipe = ServePipeline(
         svc, table_from_history(hist, labels, cap),
         device_state(_loaded_state()), cores_per_server=40,
-        blades_per_chassis=12, config=ServeConfig(batch_size=32),
-        emergency_cfg=_cfg(), obs=obs)
+        blades_per_chassis=12,
+        config=ServeConfig(batch_size=32,
+                           planes=PlaneBundle(emergency=_cfg(),
+                                              obs=obs)))
     # one full emergency sweep (4 unique chassis -> 1 window) ...
     pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
                 t=np.array([1.0, 2.0, 3.0, 4.0]))
@@ -110,8 +113,10 @@ def test_unsharded_standalone_flush_is_counted(guard_world):
     pipe = ServePipeline(
         svc, table_from_history(hist, labels, cap),
         device_state(_loaded_state()), cores_per_server=40,
-        blades_per_chassis=12, config=ServeConfig(batch_size=32),
-        emergency_cfg=_cfg(), obs=obs)
+        blades_per_chassis=12,
+        config=ServeConfig(batch_size=32,
+                           planes=PlaneBundle(emergency=_cfg(),
+                                              obs=obs)))
     pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
                 t=np.array([1.0, 2.0, 3.0, 4.0]))
     assert pipe.alarms >= 1                  # property read -> flush
@@ -130,8 +135,9 @@ def test_sharded_sweep_rides_home_round(guard_world):
         svc, table_from_history(hist, labels, cap),
         device_state(_loaded_state()), cores_per_server=40,
         blades_per_chassis=12,
-        config=ShardedServeConfig(batch_size=32, n_shards=4),
-        emergency_cfg=_cfg(), obs=obs)
+        config=ShardedServeConfig(batch_size=32, n_shards=4,
+                                  planes=PlaneBundle(emergency=_cfg(),
+                                                     obs=obs)))
     pipe.cap_to(0, [0, 1, 2, 3], [2200.0] * 4,
                 t=np.array([1.0, 2.0, 3.0, 4.0]))
     out = pipe.submit_to(0, _first_n(arrival_batch(arrivals), 32),

@@ -24,6 +24,7 @@ from repro.core.predictor import train_service
 from repro.obs import (AuditTrail, LEVEL_NAMES, MetricsRegistry,
                        Observability, SpanTracer, record_sim_metrics)
 from repro.serve import (CRIT_NUF, CRIT_UF, EmergencyConfig,
+                         PlaneBundle, ResourceVector,
                          ServeConfig, ServePipeline, ShardedServeConfig,
                          ShardedServePipeline, device_state, emergency)
 from repro.serve.featurizer import table_from_history
@@ -204,16 +205,19 @@ def _first_n(batch, n):
 
 
 def _pipe(svc, table, obs=None, sharded=False, budget=None):
-    kw = dict(cores_per_server=40, blades_per_chassis=12,
-              emergency_cfg=EmergencyConfig.from_model(BUDGET_TIGHT),
-              obs=obs)
+    planes = PlaneBundle(
+        emergency=EmergencyConfig.from_model(BUDGET_TIGHT), obs=obs,
+        cluster_budget=None if budget is None
+        else ResourceVector(watts=budget))
+    kw = dict(cores_per_server=40, blades_per_chassis=12)
     if sharded:
         return ShardedServePipeline(
             svc, table, device_state(_loaded_state()),
-            config=ShardedServeConfig(batch_size=32, n_shards=4),
-            cluster_budget_w=budget, **kw)
+            config=ShardedServeConfig(batch_size=32, n_shards=4,
+                                      planes=planes), **kw)
     return ServePipeline(svc, table, device_state(_loaded_state()),
-                         config=ServeConfig(batch_size=32), **kw)
+                         config=ServeConfig(batch_size=32,
+                                            planes=planes), **kw)
 
 
 def _drive(pipe, arrivals):
@@ -417,16 +421,19 @@ def test_record_sim_metrics_schema():
 
 def test_simulate_with_obs_is_identical_and_exported():
     from repro.serve.emergency import EmergencyConfig as ECfg
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     pol, ch = SchedulerPolicy(), PredictionChannel()
-    kw = dict(days=0.2, seed=4, backend="serve-sharded",
-              serve_shards=2, cluster_budget_w=2.0e6,
-              emergency_cfg=ECfg.from_model(BUDGET_TIGHT),
-              prefill_core_ratio=0.5)
+    spec = SimSpec(days=0.2, seed=4, prefill_core_ratio=0.5,
+                   serve=ServeBackendSpec(
+                       backend="serve-sharded", shards=2,
+                       cluster_budget=ResourceVector(watts=2.0e6)),
+                   emergency=ECfg.from_model(BUDGET_TIGHT))
     obs = Observability.full()
     t_on, t_off = [], []
-    m_on = simulate(pol, ch, trace=t_on, obs=obs, **kw)
-    m_off = simulate(pol, ch, trace=t_off, **kw)
+    m_on = simulate(pol, ch, spec, trace=t_on, obs=obs)
+    m_off = simulate(pol, ch, spec, trace=t_off)
     assert t_on == t_off                    # bit-identical decisions
     assert np.array_equal(m_on.throttled_s, m_off.throttled_s)
     v = obs.registry.value

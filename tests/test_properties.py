@@ -28,7 +28,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.placement import ClusterState, SchedulerPolicy
-from repro.serve import (AdaptiveConfig, EmergencyConfig,
+from repro.serve import (AdaptiveConfig, EmergencyConfig, PlaneBundle,
+                         ResourceVector,
                          ShardedServeConfig, ShardedServePipeline,
                          device_state, kway_merge, place_batch,
                          remove_batch)
@@ -190,16 +191,22 @@ def serve_world():
 
 def _pool_invariants(pipe):
     """The conservation triple after an adaptive retarget: free >= 0,
-    and free == max(base * ratio - committed, 0) per shard."""
-    free = np.asarray(pipe.sharded.pool)
-    committed = np.asarray(pipe.sharded.shards.rho_peak).sum(-1)
-    base = np.asarray(pipe._pool_base)
-    ratio = pipe.adaptive_ratio
+    and free == max(base * ratio - committed, 0) per shard — checked
+    per resource axis (the controller's ratio scales watts only; the
+    unbudgeted +inf axes are vacuously conserved)."""
+    free = np.asarray(pipe.sharded.pool)                  # (N, R)
+    committed = np.asarray(pipe.sharded.shards.res_peak).sum(1)
+    base = np.asarray(pipe._pool_base)                    # (N, R)
+    ratio = np.asarray(pipe.adaptive_ratio, np.float64)   # (N,)
+    mult = np.column_stack(
+        [ratio, np.ones_like(ratio), np.ones_like(ratio)])
     assert (free >= 0).all()
+    finite = np.isfinite(base)
     np.testing.assert_allclose(
-        free, np.maximum(base * ratio - committed, 0), rtol=1e-5,
+        free[finite],
+        np.maximum(base * mult - committed, 0)[finite], rtol=1e-5,
         atol=1e-4)
-    return committed
+    return committed[:, 0]
 
 
 def test_token_pools_conserved_through_random_sequences(serve_world):
@@ -217,10 +224,12 @@ def test_token_pools_conserved_through_random_sequences(serve_world):
         pipe = ShardedServePipeline.from_history(
             svc, hist, labels, n_servers=48, cores_per_server=40,
             blades_per_chassis=12,
-            config=ShardedServeConfig(batch_size=32, n_shards=4),
-            adaptive_cfg=acfg,
-            emergency_cfg=EmergencyConfig.from_model(1860.0),
-            cluster_budget_w=40000.0)
+            config=ShardedServeConfig(
+                batch_size=32, n_shards=4,
+                planes=PlaneBundle(
+                    adaptive=acfg,
+                    emergency=EmergencyConfig.from_model(1860.0),
+                    cluster_budget=ResourceVector(watts=40000.0))))
         t = 1.0
         placed: list = []
         idx = np.arange(4)

@@ -1,21 +1,22 @@
 import pytest
 
 from repro.core.placement import SchedulerPolicy
-from repro.sim.scheduler_sim import PredictionChannel, simulate
+from repro.sim.scheduler_sim import PredictionChannel, SimSpec, simulate
 
 DAYS = 4.0      # short CI runs; the Fig 7 benchmark uses 30 days
+SPEC = SimSpec(days=DAYS, seed=0)
 
 
 @pytest.fixture(scope="module")
 def norule():
     return simulate(SchedulerPolicy(use_power_rule=False),
-                    PredictionChannel("none"), days=DAYS, seed=0)
+                    PredictionChannel("none"), SPEC)
 
 
 @pytest.fixture(scope="module")
 def ours():
     return simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                    days=DAYS, seed=0)
+                    SPEC)
 
 
 def test_policy_improves_chassis_balance(norule, ours):
@@ -32,11 +33,11 @@ def test_failure_rate_not_degraded(norule, ours):
 
 def test_alpha_extremes_match_paper_findings():
     a0 = simulate(SchedulerPolicy(alpha=0.0), PredictionChannel("ml"),
-                  days=DAYS, seed=0)
+                  SPEC)
     a1 = simulate(SchedulerPolicy(alpha=1.0), PredictionChannel("ml"),
-                  days=DAYS, seed=0)
+                  SPEC)
     a08 = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                   days=DAYS, seed=0)
+                   SPEC)
     # alpha=0 ignores the chassis score -> worse chassis balance than 0.8
     assert a08.chassis_score_std < a0.chassis_score_std
     # alpha=1 ignores the server score -> worse server balance than 0.8
@@ -45,9 +46,9 @@ def test_alpha_extremes_match_paper_findings():
 
 def test_oracle_not_worse_than_ml():
     ml = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                  days=DAYS, seed=0)
+                  SPEC)
     oracle = simulate(SchedulerPolicy(alpha=0.8),
-                      PredictionChannel("oracle"), days=DAYS, seed=0)
+                      PredictionChannel("oracle"), SPEC)
     assert oracle.chassis_score_std <= ml.chassis_score_std * 1.15
 
 

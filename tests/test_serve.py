@@ -18,7 +18,8 @@ from repro.core.placement import (ClusterState, SchedulerPolicy,
                                   _score_chassis_scalar,
                                   _score_server_scalar)
 from repro.core.predictor import train_service
-from repro.serve import (FAIL_CAPACITY, FAIL_POWER, ServeConfig,
+from repro.serve import (FAIL_CAPACITY, FAIL_POWER, PlaneBundle,
+                         ResourceVector, ServeConfig,
                          ServePipeline, device_state, featurize_batch,
                          headroom_w, pack_service, place_batch,
                          projected_chassis_power, remove_batch,
@@ -400,8 +401,10 @@ def test_pipeline_power_budget_rejects(world):
     tight = ServePipeline.from_history(
         world["svc"], world["hist"], world["labels"], n_servers=24,
         cores_per_server=40, blades_per_chassis=12,
-        config=ServeConfig(batch_size=64),
-        chassis_budget_w=12 * 112.0 + 40.0)   # ~no dynamic headroom
+        config=ServeConfig(
+            batch_size=64,
+            planes=PlaneBundle(chassis_budget=ResourceVector(
+                watts=12 * 112.0 + 40.0))))  # ~no dynamic headroom
     res = tight.serve(arrival_batch(world["arrivals"], np.arange(64)))
     assert res.n_power_rejected > 0
     assert (tight.chassis_headroom_w(12 * 112.0 + 40.0) >= -1e-3).all()
@@ -438,12 +441,16 @@ def test_scheduler_serve_backend_reproduces_event_oracle():
     """Acceptance: for the same arrival sequence and fixed predictions,
     backend='serve' reproduces the event-driven scheduler's placements
     decision-for-decision (x64 scan == f64 host rule)."""
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     tr_e, tr_s = [], []
     e = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=1.0, seed=0, trace=tr_e)
+                 SimSpec(days=1.0, seed=0), trace=tr_e)
     s = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=1.0, seed=0, backend="serve", trace=tr_s)
+                 SimSpec(days=1.0, seed=0,
+                         serve=ServeBackendSpec(backend="serve")),
+                 trace=tr_s)
     assert tr_e == tr_s
     assert e.failure_rate == s.failure_rate
     assert e.chassis_score_std == s.chassis_score_std
@@ -452,12 +459,17 @@ def test_scheduler_serve_backend_reproduces_event_oracle():
 
 
 def test_scheduler_serve_backend_admission_budget():
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     free = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                    days=0.5, seed=0, backend="serve")
-    tight = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                     days=0.5, seed=0, backend="serve",
-                     admission_budget_w=12 * 112.0 + 60.0)
+                    SimSpec(days=0.5, seed=0,
+                            serve=ServeBackendSpec(backend="serve")))
+    tight = simulate(
+        SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
+        SimSpec(days=0.5, seed=0, serve=ServeBackendSpec(
+            backend="serve",
+            admission_budget=ResourceVector(watts=12 * 112.0 + 60.0))))
     # ~60 W of dynamic headroom per chassis power-rejects a large
     # share of placements that an unbudgeted run admits freely
     assert free.failure_rate < 0.01

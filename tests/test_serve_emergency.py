@@ -27,7 +27,8 @@ from repro.core.capping import ChassisManager, PerVMController
 from repro.core.fleet_dynamics import FREQ_TABLE
 from repro.core.placement import ClusterState, SchedulerPolicy
 from repro.core.power_model import N_PSTATES, ServerPowerModel, dyn_scale
-from repro.serve import (CRIT_UF, EmergencyConfig, apply_caps_sharded,
+from repro.serve import (CRIT_UF, EmergencyConfig, PlaneBundle,
+                         ResourceVector, apply_caps_sharded,
                          chassis_rho_levels, device_state,
                          emergency_step, init_emergency,
                          init_emergency_sharded, masked_step,
@@ -36,7 +37,8 @@ from repro.serve import (CRIT_UF, EmergencyConfig, apply_caps_sharded,
                          scatter_samples, shard_mesh, shard_state,
                          throttled_by_level)
 from repro.serve.mitigation import LiveVMs
-from repro.sim.scheduler_sim import PredictionChannel, simulate
+from repro.sim.scheduler_sim import (PredictionChannel, ServeBackendSpec,
+                                     SimSpec, simulate)
 
 #: The paper's 2x-oversubscription operating point: a 12-blade chassis
 #: provisioned at 12 x 310 W peak, budgeted at half.
@@ -262,6 +264,14 @@ SIM_KW = dict(days=0.1, seed=0, deployments_per_hour=16.0,
               prefill_core_ratio=0.6)
 
 
+def _spec(cfg, backend="event", shards=1, hosts=1, **kw):
+    """SimSpec on the shared short-sim settings with the emergency
+    plane attached."""
+    return SimSpec(serve=ServeBackendSpec(backend=backend, shards=shards,
+                                          ingest_hosts=hosts),
+                   emergency=cfg, **{**SIM_KW, **kw})
+
+
 def test_one_shard_sim_identity_with_emergencies():
     """backend='serve-sharded' at 1 shard == the event oracle,
     trace-for-trace and emergency-metric-for-metric, with the plane
@@ -270,12 +280,10 @@ def test_one_shard_sim_identity_with_emergencies():
     cfg = _cfg(dwell_s=120.0)
     tr_e, tr_s = [], []
     me = simulate(SchedulerPolicy(use_power_rule=False),
-                  PredictionChannel("ml"), emergency_cfg=cfg,
-                  trace=tr_e, **SIM_KW)
+                  PredictionChannel("ml"), _spec(cfg), trace=tr_e)
     ms = simulate(SchedulerPolicy(use_power_rule=False),
-                  PredictionChannel("ml"), emergency_cfg=cfg,
-                  backend="serve-sharded", serve_shards=1, trace=tr_s,
-                  **SIM_KW)
+                  PredictionChannel("ml"),
+                  _spec(cfg, backend="serve-sharded"), trace=tr_s)
     assert me.alarms > 0
     assert tr_e == tr_s
     assert me.alarms == ms.alarms
@@ -296,9 +304,9 @@ def test_host_count_invariance_with_emergencies(n_hosts):
         tr = []
         metrics.append(simulate(
             SchedulerPolicy(use_power_rule=False),
-            PredictionChannel("ml"), emergency_cfg=cfg,
-            backend="serve-sharded", serve_shards=2,
-            n_ingest_hosts=hosts, trace=tr, **SIM_KW))
+            PredictionChannel("ml"),
+            _spec(cfg, backend="serve-sharded", shards=2, hosts=hosts),
+            trace=tr))
         traces.append(tr)
     assert traces[0] == traces[1]
     assert metrics[0].alarms == metrics[1].alarms
@@ -316,12 +324,13 @@ def test_aware_beats_blind_at_2x_oversubscription():
               prefill_core_ratio=0.75)
     aware = simulate(SchedulerPolicy(alpha=0.8),
                      PredictionChannel("ml"),
-                     emergency_cfg=_cfg(BUDGET_2X, dwell_s=3600.0),
-                     **kw)
+                     SimSpec(emergency=_cfg(BUDGET_2X, dwell_s=3600.0),
+                             **kw))
     blind = simulate(SchedulerPolicy(alpha=0.8),
                      PredictionChannel("ml"),
-                     emergency_cfg=_cfg(BUDGET_2X, dwell_s=3600.0,
-                                        criticality_blind=True), **kw)
+                     SimSpec(emergency=_cfg(BUDGET_2X, dwell_s=3600.0,
+                                            criticality_blind=True),
+                             **kw))
     assert aware.alarms > 0
     assert 0 <= aware.uf_throttled_s < blind.uf_throttled_s
 
@@ -331,10 +340,9 @@ def test_aware_beats_blind_tight_budget():
     budget: same trace, strictly lower critical throttled-seconds."""
     cfg_kw = dict(dwell_s=3600.0)
     aware = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                     emergency_cfg=_cfg(**cfg_kw), **SIM_KW)
+                     _spec(_cfg(**cfg_kw)))
     blind = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                     emergency_cfg=_cfg(criticality_blind=True,
-                                        **cfg_kw), **SIM_KW)
+                     _spec(_cfg(criticality_blind=True, **cfg_kw)))
     assert aware.alarms > 0
     assert aware.uf_throttled_s < blind.uf_throttled_s
     assert aware.nuf_throttled_s > 0
@@ -420,8 +428,8 @@ def test_migration_events_invariant_to_host_dealing(serve_world):
             device_state(st), cores_per_server=40,
             blades_per_chassis=12,
             config=ShardedServeConfig(batch_size=32, n_shards=4,
-                                      n_ingest_hosts=n_hosts),
-            emergency_cfg=cfg)
+                                      n_ingest_hosts=n_hosts,
+                                      planes=PlaneBundle(emergency=cfg)))
         # interleave all 2M rows in stamp order, dealt across hosts
         rows = sorted(
             [(dep_t[i], i, dep) for i in range(len(plan))]
@@ -452,8 +460,11 @@ def test_token_pool_conserved_through_cap_migrate_uncap(serve_world):
     pipe = ShardedServePipeline(
         svc, table_from_history(hist, labels, cap), device_state(st),
         cores_per_server=40, blades_per_chassis=12,
-        config=ShardedServeConfig(batch_size=32, n_shards=4),
-        cluster_budget_w=budget_w, emergency_cfg=cfg)
+        config=ShardedServeConfig(
+            batch_size=32, n_shards=4,
+            planes=PlaneBundle(
+                cluster_budget=ResourceVector(watts=budget_w),
+                emergency=cfg)))
     pool0 = rho_pool_from_budget(budget_w, 48, pipe.power_model)
     rho0 = float(np.asarray(pipe.global_state().rho_peak).sum())
     np.testing.assert_allclose(pipe.pool_left().sum(), pool0 - rho0,
@@ -528,8 +539,8 @@ def test_cap_events_permutation_invariant_across_hosts(serve_world):
         pipe = ServePipeline.from_history(
             svc, hist, labels, n_servers=48, cores_per_server=40,
             blades_per_chassis=12,
-            config=ServeConfig(batch_size=32, n_ingest_hosts=n_hosts),
-            emergency_cfg=_cfg())
+            config=ServeConfig(batch_size=32, n_ingest_hosts=n_hosts,
+                               planes=PlaneBundle(emergency=_cfg())))
         for k, (t, c, p) in enumerate(samples):
             pipe.cap_to(k % n_hosts, [c], [p], t=np.array([t]))
         pipe.flush()

@@ -24,7 +24,8 @@ from repro.core import features as F
 from repro.core.placement import SchedulerPolicy
 from repro.core.predictor import train_service
 from repro.serve import (ARRIVAL, DEPARTURE, DepartureBatch, HostQueue,
-                         IngestMux, ServeConfig, ServePipeline,
+                         IngestMux, PlaneBundle, ResourceVector,
+                         ServeConfig, ServePipeline,
                          ShardedServeConfig, ShardedServePipeline,
                          consume_departures, device_state, kway_merge,
                          remove_batch, shard_state, split_departures,
@@ -276,8 +277,10 @@ def test_multi_host_decisions_match_merged_single_host(world):
 def test_sharded_departure_stream_credits_pool(world):
     pipe = ShardedServePipeline.from_history(
         world["svc"], world["hist"], world["labels"],
-        config=ShardedServeConfig(batch_size=16, n_shards=4),
-        cluster_budget_w=48 * 112.0 + 800.0, **_KW)
+        config=ShardedServeConfig(
+            batch_size=16, n_shards=4,
+            planes=PlaneBundle(cluster_budget=ResourceVector(
+                watts=48 * 112.0 + 800.0))), **_KW)
     res = pipe.submit_to(0, arrival_batch(world["arrivals"],
                                           np.arange(32)),
                          t=np.arange(1.0, 33.0))
@@ -312,7 +315,7 @@ def test_split_consume_departures_match_unsharded_remove():
                                np.asarray(want.rho_peak), atol=1e-4)
     live = servers >= 0
     credit = (p95[live] * cores[live]).sum()
-    np.testing.assert_allclose(np.asarray(out.pool).sum(),
+    np.testing.assert_allclose(np.asarray(out.pool)[:, 0].sum(),
                                100.0 + credit, rtol=1e-5)
 
 
@@ -322,20 +325,25 @@ def test_sim_ingest_one_host_identical_and_host_count_invariant():
     """backend='serve-sharded' with n_ingest_hosts=1 reproduces the
     pre-ingest path trace-for-trace; the sim's unique stamps make any
     host count identical too."""
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     traces = []
-    for kw in ({}, {"n_ingest_hosts": 1}, {"n_ingest_hosts": 4}):
+    for hosts in (1, 1, 4):
         tr = []
         m = simulate(SchedulerPolicy(alpha=0.8),
-                     PredictionChannel("ml"), days=0.3, seed=0,
-                     backend="serve-sharded", serve_shards=2,
-                     trace=tr, **kw)
+                     PredictionChannel("ml"),
+                     SimSpec(days=0.3, seed=0,
+                             serve=ServeBackendSpec(
+                                 backend="serve-sharded", shards=2,
+                                 ingest_hosts=hosts)),
+                     trace=tr)
         traces.append((tr, m.failure_rate))
     assert traces[0] == traces[1] == traces[2]
     with pytest.raises(ValueError):
-        simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=0.1, seed=0, backend="serve-sharded",
-                 n_ingest_hosts=0)
+        ServeBackendSpec(backend="serve-sharded", ingest_hosts=0)
     with pytest.raises(ValueError):      # knob is serve-sharded-only;
         simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=0.1, seed=0, backend="serve", n_ingest_hosts=4)
+                 SimSpec(days=0.1, seed=0,
+                         serve=ServeBackendSpec(backend="serve",
+                                                ingest_hosts=4)))

@@ -22,7 +22,8 @@ import pytest
 from repro.core import features as F
 from repro.core.placement import ClusterState, SchedulerPolicy
 from repro.core.predictor import train_service
-from repro.serve import (FAIL_TOKENS, ServeConfig, ServePipeline,
+from repro.serve import (FAIL_TOKENS, PlaneBundle, ResourceVector,
+                         ServeConfig, ServePipeline,
                          ShardedServeConfig, ShardedServePipeline,
                          chassis_to_shard, device_state, featurize_batch,
                          place_batch, place_group_sharded,
@@ -128,15 +129,21 @@ def test_one_shard_identical_to_place_batch_x64(policy):
 def test_one_shard_sim_backend_reproduces_event_oracle():
     """backend='serve-sharded' at 1 shard == backend='serve' == the
     event-driven oracle on the fig-7 cluster, trace-for-trace."""
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     tr_e, tr_s, tr_sh = [], [], []
     e = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=0.6, seed=0, trace=tr_e)
+                 SimSpec(days=0.6, seed=0), trace=tr_e)
     simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-             days=0.6, seed=0, backend="serve", trace=tr_s)
+             SimSpec(days=0.6, seed=0,
+                     serve=ServeBackendSpec(backend="serve")),
+             trace=tr_s)
     sh = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                  days=0.6, seed=0, backend="serve-sharded",
-                  serve_shards=1, trace=tr_sh)
+                  SimSpec(days=0.6, seed=0,
+                          serve=ServeBackendSpec(
+                              backend="serve-sharded", shards=1)),
+                  trace=tr_sh)
     assert tr_e == tr_s == tr_sh
     assert e.failure_rate == sh.failure_rate
     assert e.empty_server_ratio == sh.empty_server_ratio
@@ -175,22 +182,28 @@ def test_global_watt_budget_never_exceeded():
     used = (p95 * cores)[got >= 0].sum()
     assert used <= pool_total + 1e-9
     assert (got == FAIL_TOKENS).any()
-    # the pool balance accounts exactly for what was admitted
-    assert np.asarray(shd.pool).sum() == pytest.approx(pool_total - used)
+    # the pool balance accounts exactly for what was admitted (the
+    # watts axis — the unbudgeted cores/GB axes stay +inf)
+    assert np.asarray(shd.pool)[:, 0].sum() == \
+        pytest.approx(pool_total - used)
 
 
 def test_budget_invariant_across_groups_and_departures():
     """The sim's serve-sharded backend recomputes the pool net of
     live commitments each group; across a multi-group run with
     departures the fleet never exceeds the cluster budget."""
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     from repro.core.power_model import (F_MAX, ServerPowerModel, idle_power)
+    from repro.core.resources import ResourceVector
     n_servers = 720
     budget = n_servers * float(idle_power(F_MAX)) \
         + ServerPowerModel().p_dyn_per_core * 400.0
     m = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=1.0, seed=0, backend="serve-sharded",
-                 serve_shards=4, cluster_budget_w=budget)
+                 SimSpec(days=1.0, seed=0, serve=ServeBackendSpec(
+                     backend="serve-sharded", shards=4,
+                     cluster_budget=ResourceVector(watts=budget))))
     # a 400-rho allowance on this arrival rate forces token rejections
     # while the invariant keeps every accepted watt under budget
     assert m.failure_rate > 0.0
@@ -215,7 +228,9 @@ def test_spillover_deterministic_and_admits_cross_shard():
                                              valid, policy, 40)
         outs.append((got, info))
     np.testing.assert_array_equal(outs[0][0], outs[1][0])
-    assert outs[0][1] == outs[1][1]
+    # info carries the (R,) per-resource draw — compare it per key
+    for k, v in outs[0][1].items():
+        np.testing.assert_array_equal(v, outs[1][1][k], err_msg=k)
     assert outs[0][1]["spilled"] > 0
     assert outs[0][1]["spill_admitted"] > 0
     # shard 0's home arrivals (indices 0 mod 4) were admitted elsewhere
@@ -247,12 +262,15 @@ def test_four_shard_failure_rate_tracks_oracle():
     """Objective regret, not feasibility regret: on the fig-7 cluster
     an unbudgeted 4-shard run must not inflate deployment failures
     relative to the event oracle."""
-    from repro.sim.scheduler_sim import PredictionChannel, simulate
+    from repro.sim.scheduler_sim import (PredictionChannel,
+                                         ServeBackendSpec, SimSpec,
+                                         simulate)
     e = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                 days=0.6, seed=0)
+                 SimSpec(days=0.6, seed=0))
     s4 = simulate(SchedulerPolicy(alpha=0.8), PredictionChannel("ml"),
-                  days=0.6, seed=0, backend="serve-sharded",
-                  serve_shards=4)
+                  SimSpec(days=0.6, seed=0,
+                          serve=ServeBackendSpec(
+                              backend="serve-sharded", shards=4)))
     assert abs(s4.failure_rate - e.failure_rate) <= 0.02
 
 
@@ -272,7 +290,7 @@ def test_remove_sharded_roundtrip_restores_state_and_pool():
         for a, b in zip(unshard_state(shd), unshard_state(shd0)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-9)
-        np.testing.assert_allclose(np.asarray(shd.pool).sum(),
+        np.testing.assert_allclose(np.asarray(shd.pool)[:, 0].sum(),
                                    pool_total)
 
 
@@ -296,8 +314,10 @@ def test_sharded_pipeline_end_to_end(serve_world):
     pipe = ShardedServePipeline.from_history(
         svc, hist, labels, n_servers=48, cores_per_server=40,
         blades_per_chassis=12,
-        config=ShardedServeConfig(batch_size=32, n_shards=4),
-        cluster_budget_w=48 * 112.0 + 800.0)
+        config=ShardedServeConfig(
+            batch_size=32, n_shards=4,
+            planes=PlaneBundle(cluster_budget=ResourceVector(
+                watts=48 * 112.0 + 800.0))))
     b = arrival_batch(arrivals, np.arange(96))
     res = pipe.serve(b)
     assert len(res.server) == 96
@@ -327,8 +347,10 @@ def test_warm_start_pipeline_nets_committed_rho(serve_world):
     pipe = ShardedServePipeline(
         svc, table_from_history(hist, labels, cap), device_state(st),
         cores_per_server=40, blades_per_chassis=12,
-        config=ShardedServeConfig(batch_size=32, n_shards=4),
-        cluster_budget_w=budget_w)
+        config=ShardedServeConfig(
+            batch_size=32, n_shards=4,
+            planes=PlaneBundle(
+                cluster_budget=ResourceVector(watts=budget_w))))
     pool = rho_pool_from_budget(budget_w, 48, pipe.power_model)
     np.testing.assert_allclose(pipe.pool_left().sum(), pool - 18.0,
                                rtol=1e-5)
