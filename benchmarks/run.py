@@ -44,6 +44,8 @@ DRIVERS = (
     ("serve_emergency", "benchmarks.serve_emergency",
      "BENCH_serve_emergency.json"),
     ("serve_obs", "benchmarks.serve_obs", "BENCH_serve_obs.json"),
+    ("serve_quality", "benchmarks.serve_quality",
+     "BENCH_serve_quality.json"),
     ("serve_adaptive", "benchmarks.serve_adaptive",
      "BENCH_serve_adaptive.json"),
     ("serve_resources", "benchmarks.serve_resources",

@@ -1,14 +1,17 @@
-"""Observability snapshot reporting (DESIGN.md §14, docs/observability.md).
+"""Observability snapshot reporting (DESIGN.md §14, §17,
+docs/observability.md).
 
 Renders one `repro.obs.Observability` bundle as a human report — the
-metric catalog with current values, per-stage span timings, and the
-most recent audit-trail decisions — and writes the machine-readable
-snapshot (registry JSON + span totals + audit tail) that the CI smoke
-job uploads as an artifact.
+metric catalog with current values, per-stage span timings, SLO
+burn-rate states with any active alerts, the prediction-quality
+scorecard, flight-recorder incidents, and the most recent audit-trail
+decisions — and writes the machine-readable snapshot (registry JSON +
+span totals + audit tail + slo/quality/windows/incidents sections)
+that the CI smoke job uploads as an artifact.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.monitor --sim --shards 4 \
-      --days 0.25 --out obs_snapshot.json
+      --days 0.25 --out obs_snapshot.json --alerts obs_alerts.json
 
 The ``--sim`` driver runs a short metrics-enabled sharded simulation
 (`sim.scheduler_sim.simulate` with the power-emergency plane on) so a
@@ -22,7 +25,8 @@ import json
 
 from repro.obs import Observability
 
-__all__ = ["render_report", "snapshot_dict", "write_snapshot", "main"]
+__all__ = ["render_report", "snapshot_dict", "write_snapshot",
+           "write_alerts", "main"]
 
 
 def _fmt_labels(labels: dict) -> str:
@@ -35,9 +39,10 @@ def _fmt_labels(labels: dict) -> str:
 def render_report(obs: Observability, audit_tail: int = 8) -> str:
     """One multi-section text report of the whole bundle: every
     counter/gauge with its current value, histogram quantiles, span
-    totals from the tracer, and the trailing audit decisions
-    (`AuditRecord.describe` lines). Sections for pillars that are off
-    (no tracer / no audit ring) are omitted."""
+    totals from the tracer, per-rule SLO burn rates (active alerts
+    flagged), the prediction scorecard, flight-recorder incidents,
+    and the trailing audit decisions (`AuditRecord.describe` lines).
+    Sections for pillars that are off are omitted."""
     lines = ["== metrics =="]
     for (name, labels), m in sorted(obs.registry._metrics.items()):
         label = _fmt_labels(dict(labels))
@@ -54,6 +59,34 @@ def render_report(obs: Observability, audit_tail: int = 8) -> str:
             mean_ms = 1e3 * total / max(count, 1)
             lines.append(f"  {span:<12} n={count:<8.0f} "
                          f"total={total:.3f}s mean={mean_ms:.2f}ms")
+    if obs.slo is not None:
+        lines.append("== slo ==")
+        for name, s in sorted(obs.slo.summary().items()):
+            burns = " ".join(f"{w}:{b:.3g}x"
+                             for w, b in s["burn_rates"].items())
+            flag = "  ** ALERT **" if s["active"] else ""
+            lines.append(
+                f"  {name:<18} consumed={s['consumed']:.6g}"
+                f"/{s['budget']:.6g} burn[{burns}] "
+                f"alerts={s['alerts']}{flag}")
+    if obs.quality is not None and obs.quality.n_scored:
+        q = obs.quality.summary()
+        lines.append("== quality ==")
+        lines.append(
+            f"  scored={q['n_scored']} "
+            f"crit_acc={_num(q['crit_accuracy'])} "
+            f"p95_acc={_num(q['p95_accuracy'])} "
+            f"stale={q['model_stale']}")
+        lines.append(
+            f"  drift " + " ".join(f"{c}={v:.3g}"
+                                   for c, v in q["drift"].items())
+            + f" throttle_rate={q['throttle_rate']:.3g}")
+    if obs.recorder is not None and obs.recorder.incidents:
+        lines.append(f"== incidents (last "
+                     f"{len(obs.recorder.incidents)}) ==")
+        for inc in obs.recorder.incidents:
+            lines.append(f"  t={inc.t:.6g} alarms={inc.alarms} "
+                         f"seq={inc.seq}")
     if obs.audit is not None and len(obs.audit):
         lines.append(f"== audit (last {audit_tail} of "
                      f"{obs.audit.total_recorded}) ==")
@@ -67,11 +100,18 @@ def render_report(obs: Observability, audit_tail: int = 8) -> str:
     return "\n".join(lines)
 
 
+def _num(x) -> str:
+    """Format a maybe-None scorecard number."""
+    return "n/a" if x is None else f"{x:.4g}"
+
+
 def snapshot_dict(obs: Observability, audit_tail: int = 64) -> dict:
     """JSON-serializable snapshot of the bundle: the full registry
-    snapshot plus span totals and the audit tail (decoded to plain
-    Python scalars). This is the artifact schema the CI smoke job
-    uploads."""
+    snapshot plus span totals, the audit tail (decoded to plain Python
+    scalars), and — for pillars that are on — the SLO rule states,
+    the quality scorecard, the windowed aggregates, and the flight
+    recorder's occupancy/incidents. This is the artifact schema the
+    CI smoke job uploads."""
     out = {"metrics": obs.registry.snapshot()}
     if obs.tracer is not None:
         out["spans"] = {k: {"count": int(c), "total_s": float(s)}
@@ -83,6 +123,15 @@ def snapshot_dict(obs: Observability, audit_tail: int = 64) -> dict:
             "tail": [{k: r[k].item() for k in rows.dtype.names}
                      for r in rows],
         }
+    if obs.slo is not None:
+        out["slo"] = {"rules": obs.slo.summary(),
+                      "active_alerts": obs.slo.active_alerts()}
+    if obs.quality is not None:
+        out["quality"] = obs.quality.summary()
+    if obs.windows is not None:
+        out["windows"] = obs.windows.summary()
+    if obs.recorder is not None:
+        out["incidents"] = obs.recorder.summary()
     return out
 
 
@@ -91,6 +140,19 @@ def write_snapshot(obs: Observability, path: str,
     """Write `snapshot_dict` to `path` as indented JSON."""
     with open(path, "w") as f:
         json.dump(snapshot_dict(obs, audit_tail), f, indent=2)
+        f.write("\n")
+
+
+def write_alerts(obs: Observability, path: str) -> None:
+    """Write the SLO monitor's active alerts (plus per-rule burn
+    states) to `path` as indented JSON — the pageable artifact the CI
+    smoke job uploads. An empty ``active`` list is the good case."""
+    alerts = {"active": [], "rules": {}}
+    if obs.slo is not None:
+        alerts["active"] = obs.slo.active_alerts()
+        alerts["rules"] = obs.slo.summary()
+    with open(path, "w") as f:
+        json.dump(alerts, f, indent=2)
         f.write("\n")
 
 
@@ -118,7 +180,8 @@ def _run_sim(shards: int, days: float, seed: int) -> Observability:
 def main(argv=None) -> None:
     """CLI: run the ``--sim`` driver (or fail fast without it — there
     is no live bundle to read from a fresh process), print the report,
-    and optionally write the JSON snapshot / Prometheus text."""
+    and optionally write the JSON snapshot / Prometheus text / active
+    SLO alerts."""
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--sim", action="store_true",
                     help="drive a short metrics-enabled sharded sim")
@@ -129,6 +192,8 @@ def main(argv=None) -> None:
                     help="write the JSON snapshot here")
     ap.add_argument("--prom", default=None,
                     help="write Prometheus exposition text here")
+    ap.add_argument("--alerts", default=None,
+                    help="write active SLO alerts (JSON) here")
     args = ap.parse_args(argv)
     if not args.sim:
         ap.error("--sim is the only driver in this container "
@@ -143,6 +208,9 @@ def main(argv=None) -> None:
         with open(args.prom, "w") as f:
             f.write(obs.registry.to_prometheus())
         print(f"[monitor] prometheus -> {args.prom}")
+    if args.alerts:
+        write_alerts(obs, args.alerts)
+        print(f"[monitor] alerts -> {args.alerts}")
 
 
 if __name__ == "__main__":

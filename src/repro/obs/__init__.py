@@ -1,6 +1,6 @@
-"""Fleet observability plane (DESIGN.md §14).
+"""Fleet observability plane (DESIGN.md §14, §17).
 
-Three pillars, one bundle:
+Pillars, one bundle:
 
   * `registry` — a host-side `MetricsRegistry` of counters, gauges,
     and log-bucketed histograms, fed by the in-scan counter outputs
@@ -13,14 +13,25 @@ Three pillars, one bundle:
     (ingest -> merge -> featurize -> infer -> place -> commit, plus
     emergency sweeps and migrations) with an optional
     ``jax.profiler`` hook.
+  * `windows` — a `WindowPlane` of watermark-aligned tumbling/rolling
+    time windows and fixed-bucket histograms (`obs.windows`).
+  * `quality` — a `PredictionScorecard` joining predictions recorded
+    at admission against ground-truth labels and throttle outcomes:
+    rolling confusion matrices, calibration, PSI drift, and the
+    ``model_stale`` gauge (`obs.quality`).
+  * `slo` — an `SLOMonitor` evaluating declarative budget rules with
+    multi-window burn-rate alerting (`obs.slo`).
+  * `recorder` — a `FlightRecorder` of the merged event stream and
+    placement decisions, with deterministic incident replay
+    (`obs.recorder`).
 
 All of it lives on the host side of the dispatch boundary: kernels
 gained *extra outputs*, never extra inputs, so an instrumented run is
 decision-bit-identical to an uninstrumented one (asserted in
-``tests/test_obs.py``). Construct one `Observability` per pipeline
-and pass it as the ``obs=`` keyword of `serve.pipeline.ServePipeline`
-/ `ShardedServePipeline` / `sim.scheduler_sim.simulate`; render it
-with `launch.monitor`.
+``tests/test_obs.py`` and ``tests/test_obs_quality.py``). Construct
+one `Observability` per pipeline and pass it as the ``obs=`` keyword
+of `serve.pipeline.ServePipeline` / `ShardedServePipeline` /
+`sim.scheduler_sim.simulate`; render it with `launch.monitor`.
 """
 from __future__ import annotations
 
@@ -28,15 +39,21 @@ from dataclasses import dataclass, field
 
 from .audit import (AdaptiveRecord, AdaptiveTrail, AuditRecord,
                     AuditTrail, OUTCOME_NAMES)
+from .quality import PredictionScorecard
+from .recorder import FlightRecorder
 from .registry import (LEVEL_NAMES, Counter, Gauge, Histogram,
                        MetricsRegistry)
+from .slo import SLOMonitor
 from .tracing import Span, SpanTracer
+from .windows import WindowPlane
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "LEVEL_NAMES",
     "AuditRecord", "AuditTrail", "OUTCOME_NAMES",
     "AdaptiveRecord", "AdaptiveTrail",
     "Span", "SpanTracer",
+    "WindowPlane", "PredictionScorecard", "SLOMonitor",
+    "FlightRecorder",
     "Observability", "record_sim_metrics",
 ]
 
@@ -55,17 +72,31 @@ class Observability:
     #: adaptive-controller decision ring (`serve.adaptive`); None
     #: turns the reason rows off while the gauges/counters stay on
     adaptive: AdaptiveTrail | None = None
+    #: watermark-aligned windowed aggregation (`obs.windows`)
+    windows: WindowPlane | None = None
+    #: online prediction scorecard + drift (`obs.quality`)
+    quality: PredictionScorecard | None = None
+    #: declarative SLO burn-rate monitor (`obs.slo`)
+    slo: SLOMonitor | None = None
+    #: incident flight recorder (`obs.recorder`)
+    recorder: FlightRecorder | None = None
 
     @classmethod
     def full(cls, audit_capacity: int = 4096,
-             span_capacity: int = 4096) -> "Observability":
-        """All three pillars on — the configuration the overhead
-        benchmark (`benchmarks/serve_obs.py`) measures."""
+             span_capacity: int = 4096,
+             recorder_rows: int = 65536) -> "Observability":
+        """Every pillar on — the configuration the overhead
+        benchmarks (`benchmarks/serve_obs.py`,
+        `benchmarks/serve_quality.py`) measure."""
         reg = MetricsRegistry()
         return cls(registry=reg,
                    audit=AuditTrail(capacity=audit_capacity),
                    tracer=SpanTracer(reg, capacity=span_capacity),
-                   adaptive=AdaptiveTrail())
+                   adaptive=AdaptiveTrail(),
+                   windows=WindowPlane(registry=reg),
+                   quality=PredictionScorecard(registry=reg),
+                   slo=SLOMonitor(registry=reg),
+                   recorder=FlightRecorder(capacity_rows=recorder_rows))
 
     def span(self, name: str):
         """Span context for `name` (no-op context when tracing off)."""
@@ -119,3 +150,15 @@ def record_sim_metrics(registry: MetricsRegistry, metrics) -> None:
     c("adaptive_backoff_total",
       help="adaptive-controller down-steps taken").inc(
           metrics.adaptive_backoffs)
+    scored = int(metrics.crit_confusion.sum())
+    if scored:
+        c("sim_pred_scored_total",
+          help="predictions scored against ground truth by the "
+          "simulator").inc(scored)
+        g("sim_pred_crit_accuracy",
+          help="measured criticality-prediction accuracy over the "
+          "run (output, not the channel's generative constant)").set(
+              metrics.measured_crit_accuracy)
+        g("sim_pred_p95_accuracy",
+          help="measured P95-bucket-prediction accuracy over the "
+          "run").set(metrics.measured_p95_accuracy)

@@ -60,7 +60,8 @@ from repro.core.power_model import F_MAX, ServerPowerModel, idle_power
 __all__ = [
     "AdaptiveConfig", "AdaptiveState", "AdaptiveOutputs",
     "init_adaptive", "adaptive_step", "offered_power",
-    "retarget_pool", "decision_reason", "REASON_NAMES",
+    "retarget_pool", "gate_ratio_on_stale", "decision_reason",
+    "REASON_NAMES",
 ]
 
 #: Human names of the controller decision reasons recorded into the
@@ -105,6 +106,13 @@ class AdaptiveConfig:
     blades_per_chassis: int = 12
     p_dyn_per_core: float = ServerPowerModel().p_dyn_per_core
     idle_w_per_server: float = float(idle_power(F_MAX))
+    #: when True, the pipelines clamp the *applied* ratio to
+    #: ``ratio_min`` while the prediction scorecard reports
+    #: ``model_stale`` (`obs.quality`) — the controller state keeps
+    #: integrating, so the ratio resumes the moment the model is
+    #: fresh again. Host-side gate; off by default to preserve the
+    #: obs on/off bit-identity invariant.
+    hold_on_stale: bool = False
 
     def __post_init__(self):
         if self.window < 2:
@@ -308,6 +316,26 @@ def retarget_pool(cfg: AdaptiveConfig, base_pool, ratio, committed,
     any mint/retire sequence."""
     base_pool = xp.asarray(base_pool)
     return xp.maximum(base_pool * ratio - xp.asarray(committed), 0)
+
+
+def gate_ratio_on_stale(cfg: AdaptiveConfig, ratio, stale: bool,
+                        xp=np):
+    """Conservative-fallback gate on the *applied* oversubscription
+    ratio: when the prediction scorecard reports ``stale`` (PSI drift
+    or measured accuracy collapse — `obs.quality`), clamp the ratio
+    to ``cfg.ratio_min``; otherwise pass it through unchanged.
+
+    Pure and shape-generic (scalar or batched ratio). The controller
+    state is never rewritten — staleness suppresses the aggressive
+    ratio only while it lasts, and the integrated ratio resumes as
+    soon as the model scores fresh again (the paper's "fall back to
+    conservative when predictions can't be trusted" rule, made
+    automatic)."""
+    ratio = xp.asarray(ratio)
+    if not stale:
+        return ratio
+    return xp.minimum(ratio, xp.asarray(cfg.ratio_min,
+                                        dtype=ratio.dtype))
 
 
 def decision_reason(before_ratio: float, out_ratio: float,

@@ -41,6 +41,14 @@ in `tests/test_serve_emergency.py`. Power samples reach the plane as
 the third stream-event kind (`repro.serve.ingest.CAPPING`), so
 emergencies merge deterministically with arrivals and departures
 across ingest hosts.
+
+Observability (DESIGN.md §17): every sweep's in-scan counters
+(alarms, samples, demanded/leftover watts, per-level cuts) are
+scan-carried *outputs* the pipeline folds host-side into the metrics
+registry, the windowed aggregates, the SLO burn-rate monitor
+(critical throttled-seconds and alarm-rate budgets), and — when a
+sweep raises alarms — a flight-recorder incident marker with the
+surrounding event stream (`obs.recorder`).
 """
 from __future__ import annotations
 

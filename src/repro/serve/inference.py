@@ -177,7 +177,14 @@ def served_query(packed: PackedService, meta: ServiceMeta,
                  x: jnp.ndarray, kernel: str = "ref") -> dict:
     """x: (B, F) features -> the `PredictionService.query` dict as
     device arrays, with the conservative fallback fused in. Extra key
-    `conservative` marks arrivals that hit either fallback."""
+    `conservative` marks arrivals that hit either fallback.
+
+    Both the gated (``*_used``) and raw (``workload_type`` /
+    ``p95_bucket``) heads plus their confidences are returned: the
+    pipeline places on the gated values, and the prediction scorecard
+    (`obs.quality`) fetches the raw heads alongside them in the same
+    commit `device_get` — outputs only, so scoring can never perturb
+    a decision."""
     assert x.shape[1] == meta.n_features, \
         f"feature width {x.shape[1]} != model's {meta.n_features}"
     x = x.astype(jnp.float32)

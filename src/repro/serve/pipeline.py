@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import features
 from repro.core.placement import SchedulerPolicy
 from repro.core.power_model import ServerPowerModel
 from repro.core.predictor import UF, PredictionService
@@ -280,6 +281,14 @@ class ServePipeline:
         # host-side consumers of outputs the kernels already produce,
         # so obs on/off never changes a decision
         self.obs = planes.obs
+        # ingest watermark (stamp of the newest drained merged run) —
+        # the clock the windows/SLO/recorder pillars (DESIGN.md §17)
+        # aggregate on; stays 0.0 until the first streamed event
+        self._watermark = 0.0
+        # direct serve() calls bypass the ingest merge, so their
+        # decisions are not replayable — the flight recorder skips
+        # them while this flag is up
+        self._recorder_suspended = False
         self._batches = 0
         self._has_pool = False      # sharded subclass may flip this
         self._chassis_of_host = np.asarray(state.chassis_of)
@@ -440,8 +449,20 @@ class ServePipeline:
         """Rescale the effective watt budget to the stepped ratio —
         unsharded, that is the watts axis of the per-chassis admission
         ceiling (the device-side product keeps the scan sync-free when
-        obs is off)."""
+        obs is off). With ``adaptive_cfg.hold_on_stale`` the *applied*
+        ratio is additionally clamped to ``ratio_min`` while the
+        prediction scorecard reports `model_stale`
+        (`serve.adaptive.gate_ratio_on_stale`) — the controller state
+        is untouched, so the ratio resumes when the model scores
+        fresh; off by default, preserving obs on/off bit-identity."""
         self._ratio_dev = out.ratio
+        if (self.adaptive_cfg is not None
+                and self.adaptive_cfg.hold_on_stale
+                and self.obs is not None
+                and self.obs.quality is not None):
+            self._ratio_dev = adaptive.gate_ratio_on_stale(
+                self.adaptive_cfg, np.asarray(out.ratio),
+                self.obs.quality.model_stale)
         self._refresh_caps()
         self._record_adaptive(out)
 
@@ -539,12 +560,15 @@ class ServePipeline:
         pipeline and unbudgeted sharded pipelines)."""
         return float("inf")
 
-    def _record_batch(self, batch: ArrivalBatch, res: ServeResult) -> None:
-        """Fold one served batch's decisions into the metrics registry
-        and audit trail — a pure host-side reduction of outputs the
+    def _record_batch(self, batch: ArrivalBatch, res: ServeResult,
+                      raw=None) -> None:
+        """Fold one served batch's decisions into the metrics registry,
+        audit trail, and the §17 pillars (windows / scorecard / flight
+        recorder) — a pure host-side reduction of outputs the
         placement kernel already returned (`placement.
-        outcome_counters`), so recording can never perturb a
-        decision."""
+        outcome_counters`, plus the raw head outputs fetched alongside
+        when the quality pillar is on), so recording can never perturb
+        a decision."""
         if self.obs is None:
             return
         reg = self.obs.registry
@@ -588,6 +612,46 @@ class ServePipeline:
                 is_uf=res.workload_type == UF, p95_eff=res.p95_eff,
                 valid=valid, conservative=res.conservative,
                 pool_left=self._pool_tokens_left())
+        if self.obs.windows is not None:
+            w, t = self.obs.windows, self._watermark
+            w.observe(t, "arrivals", n=b)
+            if cnt["admits"]:
+                w.observe(t, "admits", n=int(cnt["admits"]))
+            if b - cnt["admits"]:
+                w.observe(t, "rejects", n=int(b - cnt["admits"]))
+            if res.n_conservative:
+                w.observe(t, "conservative", n=int(res.n_conservative))
+            w.observe(t, "rho_admitted", float(cnt["rho_admitted"]))
+        if self.obs.quality is not None and raw is not None:
+            self.obs.quality.record(
+                true_crit=np.asarray(batch.user_facing, np.int64),
+                true_bucket=np.asarray(
+                    features.p95_bucket(np.asarray(batch.p95_util)),
+                    np.int64),
+                crit_used=res.workload_type,
+                bucket_used=res.p95_bucket,
+                crit_raw=raw[0], crit_conf=raw[1],
+                bucket_raw=raw[2], bucket_conf=raw[3],
+                conservative=res.conservative)
+        if (self.obs.recorder is not None
+                and not self._recorder_suspended):
+            self.obs.recorder.record_decision(
+                np.asarray(res.server), self._watermark)
+        self._obs_tick()
+
+    def _obs_tick(self) -> None:
+        """Advance the watermark-clock pillars (DESIGN.md §17): close
+        tumbling windows the watermark passed, re-sample the SLO
+        monitor from the registry counters, and evaluate the
+        burn-rate alerts. Host-side only; no-op for pillars that are
+        off."""
+        if self.obs is None:
+            return
+        if self.obs.windows is not None:
+            self.obs.windows.advance(self._watermark)
+        if self.obs.slo is not None:
+            self.obs.slo.sample(self._watermark, self.obs.registry)
+            self.obs.slo.evaluate(self._watermark)
 
     def _record_sweep(self, sweep: placement.SweepCounters,
                       windows: int) -> None:
@@ -623,6 +687,27 @@ class ServePipeline:
                         help="watts actually removed, by criticality "
                         "level",
                         level=level).inc(float(w))
+        alarms = int(np.asarray(sweep.alarms))
+        if self.obs.windows is not None:
+            wp, t = self.obs.windows, self._watermark
+            if alarms:
+                wp.observe(t, "alarms", n=alarms)
+            if cut_w > 0.0:
+                wp.observe(t, "cut_watts", cut_w)
+                wp.observe_hist("cut_watts", cut_w, lo=0.0, hi=2.0e4)
+        if self.obs.quality is not None:
+            self.obs.quality.observe_alarms(
+                alarms, cut_w=cut_w,
+                samples=int(np.asarray(sweep.samples)))
+        if self.obs.recorder is not None and alarms:
+            self.obs.recorder.mark_incident(
+                self._watermark, alarms,
+                {k: reg.value(k) for k in (
+                    "emergency_alarms_total",
+                    "emergency_cut_watts_total",
+                    "emergency_leftover_watts_total",
+                    "serve_arrivals_total")})
+        self._obs_tick()
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -651,6 +736,10 @@ class ServePipeline:
         self._buffers[standby] = pack_service(new_service)
         self._active = standby
         self.swaps += 1
+        if self.obs is not None and self.obs.quality is not None:
+            # the old model's confusion/calibration/drift say nothing
+            # about the one now serving
+            self.obs.quality.on_hot_swap()
 
     # -- telemetry ingestion (label-bootstrap loop) ------------------------
     def observe(self, history: Population, uf_labels: np.ndarray) -> None:
@@ -761,19 +850,32 @@ class ServePipeline:
         batch-granularity caveat)."""
         bs = self.config.batch_size
         out: list[ServeResult] = []
+        rec = None if self.obs is None else self.obs.recorder
         pos = 0
         for kind, lo, hi in events.runs():
             t_run = events.t[pos:pos + (hi - lo)]
             pos += hi - lo
+            if len(t_run):
+                # the merged stream is the watermark clock the §17
+                # pillars aggregate on
+                self._watermark = float(t_run[-1])
             if kind == CAPPING:
-                self._apply_caps(slice_soa(events.caps, lo, hi), t_run)
+                caps = slice_soa(events.caps, lo, hi)
+                if rec is not None:
+                    rec.record_caps(t_run, caps)
+                self._apply_caps(caps, t_run)
                 continue
             if kind != ARRIVAL:
                 d = slice_soa(events.departures, lo, hi)
+                if rec is not None:
+                    rec.record_departures(t_run, d)
                 self._apply_departures(d.server, d.cores, d.p95_eff,
                                        d.is_uf, d.mem_gb)
                 continue
-            self._pending.append(slice_soa(events.arrivals, lo, hi))
+            arr = slice_soa(events.arrivals, lo, hi)
+            if rec is not None:
+                rec.record_arrivals(t_run, arr)
+            self._pending.append(arr)
             self._queued += hi - lo
             if self._queued < bs:
                 continue
@@ -789,14 +891,22 @@ class ServePipeline:
 
     def serve(self, batch: ArrivalBatch) -> ServeResult:
         """Serve one batch synchronously, bypassing the queue (chunks
-        internally if larger than the configured micro-batch)."""
-        bs = self.config.batch_size
-        if len(batch) <= bs:
-            return self._serve_padded(batch)
-        parts = [ArrivalBatch(*(getattr(batch, f)[i:i + bs]
-                                for f in ArrivalBatch.__dataclass_fields__))
-                 for i in range(0, len(batch), bs)]
-        return _concat_results([self._serve_padded(p) for p in parts])
+        internally if larger than the configured micro-batch). Bypassed
+        batches are invisible to the flight recorder — only the
+        streamed (queue) path is replayable (`obs.recorder`)."""
+        self._recorder_suspended = True
+        try:
+            bs = self.config.batch_size
+            if len(batch) <= bs:
+                return self._serve_padded(batch)
+            parts = [ArrivalBatch(*(getattr(batch, f)[i:i + bs]
+                                    for f in
+                                    ArrivalBatch.__dataclass_fields__))
+                     for i in range(0, len(batch), bs)]
+            return _concat_results([self._serve_padded(p)
+                                    for p in parts])
+        finally:
+            self._recorder_suspended = False
 
     def _serve_padded(self, batch: ArrivalBatch) -> ServeResult:
         b = len(batch)
@@ -821,11 +931,19 @@ class ServePipeline:
             servers = self._place(cores, is_uf, p95_eff, valid, mem)
         self.served += b
         with self._span("commit"):
-            host = jax.device_get((servers, q["workload_type_used"],
-                                   q["p95_bucket_used"], p95_eff,
-                                   q["conservative"]))
-        res = ServeResult(*(a[:b] for a in host))
-        self._record_batch(batch, res)
+            # the quality pillar also wants the raw (ungated) head
+            # outputs + confidences — fetched in the same device_get,
+            # outputs only, so decisions are untouched either way
+            fetch = (servers, q["workload_type_used"],
+                     q["p95_bucket_used"], p95_eff, q["conservative"])
+            score = self.obs is not None and self.obs.quality is not None
+            if score:
+                fetch += (q["workload_type"], q["workload_conf"],
+                          q["p95_bucket"], q["p95_conf"])
+            host = jax.device_get(fetch)
+        res = ServeResult(*(a[:b] for a in host[:5]))
+        raw = tuple(a[:b] for a in host[5:]) if score else None
+        self._record_batch(batch, res, raw=raw)
         return res
 
     def _place(self, cores, is_uf, p95_eff, valid, mem):

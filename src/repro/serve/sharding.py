@@ -44,6 +44,15 @@ Execution
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N``). Both
     execute identical per-shard arithmetic and are asserted equal in
     `tests/test_serve_sharded.py`.
+
+Observability (DESIGN.md §14, §17)
+    Every sharded scan carries its counters (admits, fails, spills,
+    token draws, sweep totals) as extra *outputs* — never inputs — so
+    the sharded pipeline feeds the registry, windowed aggregates,
+    prediction scorecard, SLO monitor, and flight recorder entirely
+    host-side; instrumented and uninstrumented runs stay
+    decision-bit-identical (asserted in `tests/test_obs.py` and
+    `tests/test_obs_quality.py`).
 """
 from __future__ import annotations
 

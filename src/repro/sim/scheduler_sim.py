@@ -301,6 +301,33 @@ class SimMetrics:
     adaptive_ratio: float = 1.0
     adaptive_ratchets: int = 0
     adaptive_backoffs: int = 0
+    #: measured predicted-vs-realized labels (DESIGN.md §17): every
+    #: `PredictionChannel.predict` call is scored against the ground
+    #: truth it was sampled from — ``crit_confusion[true, pred]``
+    #: (2, 2) over criticality, ``p95_confusion[true, pred]`` (4, 4)
+    #: over P95 buckets. Accuracy is an *output* of the run, not the
+    #: channel's generative constant (`measured_p95_accuracy` vs the
+    #: assumed ``p95_accuracy`` knob).
+    crit_confusion: np.ndarray = field(
+        default_factory=lambda: np.zeros((2, 2), np.int64))
+    p95_confusion: np.ndarray = field(
+        default_factory=lambda: np.zeros((4, 4), np.int64))
+
+    @property
+    def measured_crit_accuracy(self) -> float:
+        """Realized criticality-prediction accuracy over the run
+        (NaN when nothing was scored)."""
+        n = self.crit_confusion.sum()
+        return float(np.trace(self.crit_confusion) / n) if n \
+            else float("nan")
+
+    @property
+    def measured_p95_accuracy(self) -> float:
+        """Realized P95-bucket-prediction accuracy over the run
+        (NaN when nothing was scored)."""
+        n = self.p95_confusion.sum()
+        return float(np.trace(self.p95_confusion) / n) if n \
+            else float("nan")
 
     @property
     def nuf_throttled_s(self) -> float:
@@ -834,6 +861,22 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
     vm_live: dict = {}
     token = 0
     placements = failures = 0
+    # measured predicted-vs-realized scoring (DESIGN.md §17): every
+    # channel.predict is scored against the ground truth it was
+    # sampled from — consumes no randomness and feeds nothing back
+    # into placement, so the decision stream is untouched
+    from repro.core.features import p95_bucket as _p95_bucket
+    crit_cm = np.zeros((2, 2), np.int64)
+    p95_cm = np.zeros((4, 4), np.int64)
+    quality = None if obs is None else obs.quality
+
+    def _score(true_uf, true_p95, uf_pred, p95_pred):
+        tb = int(_p95_bucket(true_p95 * 100.0))
+        pb = int(_p95_bucket(p95_pred * 100.0))
+        crit_cm[int(true_uf), int(uf_pred)] += 1
+        p95_cm[tb, pb] += 1
+        if quality is not None:
+            quality.record(int(true_uf), tb, int(uf_pred), pb)
     # warm start (identical for every backend: one rng prefix, the
     # event-path placement rule). A snapshot of a running fleet is
     # length-biased — long-lived VMs dominate the standing population —
@@ -853,6 +896,7 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         true_p95 = float(np.clip(
             rng.normal(0.65 if true_uf else 0.44, 0.12), 0.05, 1.0))
         uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
+        _score(true_uf, true_p95, uf_pred, p95_pred)
         p95_eff = policy.effective_p95(p95_pred)
         srv = policy.choose(state, cores, uf_pred)
         if srv is None:
@@ -890,9 +934,42 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         if t >= horizon:
             break
         if emer is not None:
+            # windowed/SLO feeds (DESIGN.md §17) read plane state
+            # before/after the scan and hand the *deltas* to the
+            # watermark-clock pillars — never the emergency_* registry
+            # counters, which the end-of-run `record_sim_metrics`
+            # export owns
+            feeds = obs is not None and (obs.windows is not None
+                                         or obs.slo is not None)
+            if feeds:
+                pre_alarms = emer.alarms
+                pre_thr = np.asarray(
+                    emer.emg.throttled_by_level(emer.st), np.float64)
             with span("emergency"):
                 emer.scan(t, state, vm_live, mem_nuf=mem_nuf_chassis,
                           mem_chassis=mem_chassis, gb_cap=gb_cap)
+            if feeds:
+                t_s = t * 3600.0
+                d_alarms = emer.alarms - pre_alarms
+                d_thr = np.asarray(
+                    emer.emg.throttled_by_level(emer.st),
+                    np.float64) - pre_thr
+                if obs.windows is not None:
+                    if d_alarms:
+                        obs.windows.observe(t_s, "alarms",
+                                            n=int(d_alarms))
+                    if d_thr[1] > 0:
+                        obs.windows.observe(t_s, "uf_throttled_s",
+                                            float(d_thr[1]))
+                    obs.windows.advance(t_s)
+                if obs.slo is not None:
+                    obs.slo.ingest(t_s, "emergency_alarms_total",
+                                   float(d_alarms))
+                    for lvl, d in zip(("nuf", "uf"), d_thr):
+                        obs.slo.ingest(
+                            t_s, "emergency_throttled_seconds_total",
+                            float(d), level=lvl)
+                    obs.slo.evaluate(t_s)
         if adp is not None:
             with span("adaptive"):
                 adp.scan(t, state)
@@ -906,6 +983,7 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
             true_p95 = float(np.clip(
                 rng.normal(0.65 if true_uf else 0.44, 0.12), 0.05, 1.0))
             uf_pred, p95_pred = channel.predict(rng, true_uf, true_p95)
+            _score(true_uf, true_p95, uf_pred, p95_pred)
             group.append((cores, life_h, uf_pred,
                           policy.effective_p95(p95_pred)))
         if backend_name in ("serve", "serve-sharded"):
@@ -1061,7 +1139,8 @@ def simulate(policy: SchedulerPolicy, channel: PredictionChannel,
         else float(np.asarray(emer.bst.ballooned_gb).sum()),
         adaptive_ratio=1.0 if adp is None else adp.ratio,
         adaptive_ratchets=0 if adp is None else adp.ratchets,
-        adaptive_backoffs=0 if adp is None else adp.backoffs)
+        adaptive_backoffs=0 if adp is None else adp.backoffs,
+        crit_confusion=crit_cm, p95_confusion=p95_cm)
     if obs is not None:
         from repro.obs import record_sim_metrics
         record_sim_metrics(obs.registry, metrics)

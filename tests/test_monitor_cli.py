@@ -1,0 +1,108 @@
+"""CLI round-trip coverage of `repro.launch.monitor` (DESIGN.md §14,
+§17).
+
+The module fixture runs the monitor's own ``--sim`` driver once (the
+sim is the expensive part) and the tests pin the report sections, the
+snapshot schema, the alerts artifact and the Prometheus text against
+that single bundle; one test drives `main` end-to-end through argv."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.launch import monitor
+from repro.obs import Observability
+
+
+@pytest.fixture(scope="module")
+def sim_obs():
+    return monitor._run_sim(shards=2, days=0.1, seed=4)
+
+
+def test_report_has_all_pillar_sections(sim_obs):
+    out = monitor.render_report(sim_obs)
+    # (no "== audit" — the audit trail is a pipeline feed, and the
+    # sim driver's serve backend shares only the registry)
+    for section in ("== metrics ==", "== slo ==", "== quality =="):
+        assert section in out
+    assert "critical_throttle" in out
+    assert "scored=" in out and "drift" in out
+    # burn rates render per window with the threshold-style suffix
+    assert "burn[" in out and "x" in out
+
+
+def test_snapshot_round_trips_with_full_schema(sim_obs, tmp_path):
+    p = str(tmp_path / "obs_snapshot.json")
+    monitor.write_snapshot(sim_obs, p)
+    with open(p) as f:
+        snap = json.load(f)
+    assert set(snap) == {"metrics", "spans", "audit", "slo",
+                         "quality", "windows", "incidents"}
+    assert snap["metrics"]["sim_placements_total"][0]["value"] > 0
+    rules = snap["slo"]["rules"]
+    assert set(rules) >= {"critical_throttle", "alarm_rate"}
+    for s in rules.values():
+        assert {"consumed", "budget", "burn_rates",
+                "active", "alerts"} <= set(s)
+    q = snap["quality"]
+    assert q["n_scored"] > 0
+    assert np.isclose(
+        q["crit_accuracy"],
+        np.trace(q["crit_confusion"]) / np.sum(q["crit_confusion"]))
+    assert snap["windows"]["watermark"] > 0
+    assert snap["incidents"]["capacity_rows"] > 0
+
+
+def test_alerts_artifact_schema(sim_obs, tmp_path):
+    p = str(tmp_path / "obs_alerts.json")
+    monitor.write_alerts(sim_obs, p)
+    with open(p) as f:
+        alerts = json.load(f)
+    assert set(alerts) == {"active", "rules"}
+    assert isinstance(alerts["active"], list)
+    # whatever fired must also show active in the rule states
+    for a in alerts["active"]:
+        assert alerts["rules"][a["slo"]]["active"] is True
+        assert set(a) >= {"slo", "burn_rates", "consumed", "budget"}
+
+
+def test_prometheus_text_contains_new_families(sim_obs):
+    text = sim_obs.registry.to_prometheus()
+    assert "# TYPE sim_placements_total counter" in text
+    assert "slo_burn_rate" in text
+    assert "quality_scored" in text
+
+
+def test_main_cli_round_trip(tmp_path, capsys):
+    """argv -> report on stdout + all three artifacts on disk."""
+    out_p = str(tmp_path / "snap.json")
+    prom_p = str(tmp_path / "metrics.prom")
+    alerts_p = str(tmp_path / "alerts.json")
+    monitor.main(["--sim", "--shards", "2", "--days", "0.05",
+                  "--seed", "0", "--out", out_p, "--prom", prom_p,
+                  "--alerts", alerts_p])
+    out = capsys.readouterr().out
+    assert "== metrics ==" in out and "== slo ==" in out
+    for p in (out_p, prom_p, alerts_p):
+        assert f"-> {p}" in out
+    with open(out_p) as f:
+        assert "slo" in json.load(f)
+    with open(alerts_p) as f:
+        assert set(json.load(f)) == {"active", "rules"}
+    with open(prom_p) as f:
+        assert "sim_placements_total" in f.read()
+
+
+def test_main_without_sim_fails_fast(capsys):
+    with pytest.raises(SystemExit):
+        monitor.main(["--out", "x.json"])
+    assert "--sim" in capsys.readouterr().err
+
+
+def test_write_alerts_on_bare_bundle(tmp_path):
+    """A bundle without the SLO pillar still writes the schema —
+    empty active list, empty rules."""
+    p = str(tmp_path / "alerts.json")
+    monitor.write_alerts(Observability(), p)
+    with open(p) as f:
+        assert json.load(f) == {"active": [], "rules": {}}

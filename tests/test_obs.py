@@ -464,7 +464,8 @@ def test_monitor_report_and_snapshot(tmp_path, obs_world):
     path = tmp_path / "snap.json"
     monitor.write_snapshot(obs, str(path))
     snap = json.loads(path.read_text())
-    assert set(snap) == {"metrics", "spans", "audit"}
+    assert set(snap) == {"metrics", "spans", "audit", "slo",
+                         "quality", "windows", "incidents"}
     assert snap["metrics"]["serve_arrivals_total"][0]["value"] == 64
     assert snap["audit"]["total_recorded"] == 64
     assert all(isinstance(r["server"], int)
